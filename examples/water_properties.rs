@@ -1,0 +1,39 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E7): reproduce the
+//! paper's Table II on this testbed — run all four methods (DFT
+//! surrogate, vN-MLMD via PJRT, NvN-MLMD fixed-point hardware, and the
+//! DeePMD-style baseline) from identical initial conditions, extract
+//! bond length / angle / vibration frequencies, and print the error
+//! rows.
+//!
+//!     make artifacts && cargo run --release --example water_properties
+//!     (add --quick for a fast smoke run)
+
+use anyhow::Result;
+
+use nvnmd::exp::table2;
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = table2::Config::with_quick(quick);
+    println!(
+        "running 4 methods × {} steps × {} fs (seed {})…\n",
+        cfg.steps, cfg.dt, cfg.seed
+    );
+    let report = table2::run(cfg)?;
+    println!("{}", report.render());
+    if let Some(p) = &report.saved_to {
+        println!("[saved: {}]", p.display());
+    }
+
+    // The strict-13-bit ablation: what Table II would look like if the
+    // integrator state were truly 13 bits wide (DESIGN.md §Numerics).
+    if !quick {
+        println!("\n--- ablation: strict 13-bit integrator state ---");
+        let mut cfg13 = cfg;
+        cfg13.strict13 = true;
+        cfg13.steps = cfg.steps / 4;
+        let r13 = table2::run(cfg13)?;
+        println!("{}", r13.render());
+    }
+    Ok(())
+}

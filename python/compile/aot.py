@@ -1,0 +1,108 @@
+"""AOT lowering: JAX (L2, with the L1 Pallas kernels inlined) -> HLO
+*text* artifacts for the Rust PJRT runtime.
+
+HLO text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md). All functions are lowered
+with `return_tuple=True` and unwrapped with `to_tuple()` on the Rust side.
+
+Artifacts (contracts consumed by `rust/src/runtime`):
+
+* water_mlp.hlo.txt       f32[2,3] -> (f32[2,2],)    QNN-K3 water model
+* water_mlp_cnn.hlo.txt   f32[2,3] -> (f32[2,2],)    CNN-phi float model
+* water_md_step.hlo.txt   (f32[3,3], f32[3,3]) -> (f32[3,3], f32[3,3])
+* water_deepmd.hlo.txt    f32[2,3] -> (f32[2,2],)    DeePMD-style model
+* water_mlp_shiftkernel.hlo.txt  same as water_mlp but through the
+  shift-reconstruction kernel (L1 numerics demonstration)
+
+Usage: python -m compile.aot --models ../artifacts/models --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path, text):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def lower_mlp(model, batch):
+    """The artifact contract takes *raw physical* features and returns
+    *physical* outputs: the feature conditioning and the power-of-two
+    output_scale are baked into the lowered graph."""
+    layers = model["layers"]
+    scale = model["output_scale"]
+
+    def fn(x):
+        xt = M.condition_features(x, model)
+        y = M.mlp_forward(xt, layers, activation=model["activation"],
+                          output_activation=model["output_activation"])
+        return (y * scale,)
+
+    spec = jax.ShapeDtypeStruct((batch, model["arch"][0]), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_shift_mlp(model, batch):
+    scale = model["output_scale"]
+
+    def fn(x):
+        xt = M.condition_features(x, model)
+        return (M.shift_mlp_forward(xt, model) * scale,)
+
+    spec = jax.ShapeDtypeStruct((batch, model["arch"][0]), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_md_step(model, dt):
+    def fn(pos, vel):
+        return M.water_md_step(pos, vel, model, dt)
+
+    spec = jax.ShapeDtypeStruct((3, 3), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="../artifacts/models")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--dt", type=float, default=0.25, help="MD step, fs")
+    args = ap.parse_args()
+
+    load = functools.partial(os.path.join, args.models)
+    qnn = M.load_model_json(load("water_qnn_k3.json"))
+    cnn = M.load_model_json(load("water_cnn_phi.json"))
+    deepmd = M.load_model_json(load("water_deepmd_like.json"))
+
+    write(os.path.join(args.out, "water_mlp.hlo.txt"), lower_mlp(qnn, 2))
+    write(os.path.join(args.out, "water_mlp_cnn.hlo.txt"), lower_mlp(cnn, 2))
+    write(os.path.join(args.out, "water_deepmd.hlo.txt"), lower_mlp(deepmd, 2))
+    write(os.path.join(args.out, "water_md_step.hlo.txt"),
+          lower_md_step(qnn, args.dt))
+    write(os.path.join(args.out, "water_mlp_shiftkernel.hlo.txt"),
+          lower_shift_mlp(qnn, 2))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness
+reference). Every kernel in this package must match its `ref_*` twin to
+float32 tolerance; `tests/test_kernel.py` sweeps shapes with hypothesis."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def phi(x):
+    """The paper's hardware activation, Eq. (4)."""
+    return jnp.where(x >= 2.0, 1.0, jnp.where(x <= -2.0, -1.0, x - x * jnp.abs(x) / 4.0))
+
+
+def ref_dense(x, w, b, activation):
+    """y = act(x @ w.T + b); w is (out, in) row-major like the Rust side.
+    activation in {"phi", "tanh", None} (True/False accepted as phi/None
+    for backwards compatibility)."""
+    y = x @ w.T + b[None, :]
+    if activation is True or activation == "phi":
+        return phi(y)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    return y
+
+
+def ref_shift_dense(x, sign, exps, b, activation):
+    """Dense layer with weights reconstructed from shift parameters:
+    w = sign * sum_k 2^{exps_k}, inactive terms marked with exps <= -100.
+
+    sign: (out, in); exps: (out, in, K); b: (out,).
+    """
+    mags = jnp.where(exps > -100.0, jnp.exp2(exps), 0.0).sum(axis=-1)
+    w = sign * mags
+    return ref_dense(x, w, b, activation)
+
+
+def ref_mlp(x, layers, activation: str = "phi",
+            activation_output: bool = False):
+    """layers: list of (w, b); hidden layers use `activation`, output
+    linear unless activation_output."""
+    h = x
+    for i, (w, b) in enumerate(layers):
+        last = i == len(layers) - 1
+        act = activation if ((not last) or activation_output) else None
+        h = ref_dense(h, w, b, activation=act)
+    return h
+
+
+def ref_water_features(pos):
+    """pos: (3, 3) rows [O, H1, H2] -> features (2, 3) and local frames.
+
+    Features per hydrogen: (1/r_aO, 1/r_ab, 1/r_bO); frames are the unit
+    vectors (u_HO, u_HH) used to reconstruct Cartesian forces.
+    Returns (feats[2,3], u_ho[2,3], u_hh[2,3]).
+    """
+    o, h1, h2 = pos[0], pos[1], pos[2]
+
+    def one(a, b):
+        d_ao = o - a
+        d_ab = b - a
+        d_bo = o - b
+        r_ao = jnp.linalg.norm(d_ao)
+        r_ab = jnp.linalg.norm(d_ab)
+        r_bo = jnp.linalg.norm(d_bo)
+        feats = jnp.stack([1.0 / r_ao, 1.0 / r_ab, 1.0 / r_bo])
+        return feats, d_ao / r_ao, d_ab / r_ab
+
+    f1, u1o, u1h = one(h1, h2)
+    f2, u2o, u2h = one(h2, h1)
+    return (
+        jnp.stack([f1, f2]),
+        jnp.stack([u1o, u2o]),
+        jnp.stack([u1h, u2h]),
+    )

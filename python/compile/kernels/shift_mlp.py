@@ -1,0 +1,221 @@
+"""L1 Pallas kernels: the shift-quantized dense layer and the water
+feature extractor.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's ASIC
+keeps weights stationary in distributed near-compute memory and replaces
+multiplies with shift-adds. On a TPU-shaped target the analogue is
+
+* **weights pinned in VMEM across the whole grid** — the weight
+  `BlockSpec` uses a constant index map, so the same block serves every
+  batch tile (no HBM re-fetch: "initialize once, never shuttle");
+* **power-of-two reconstruction on the VPU, dense dot on the MXU** — the
+  kernel rebuilds `w = s * sum_k 2^{n_k}` with `exp2` once per block
+  (cheap VPU work) and feeds one `jnp.dot`, preserving the exact
+  power-of-two numerics while using the matrix unit the hardware has;
+* **φ(x) on the VPU** — already transcendental-free (Eq. 4).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the AOT artifacts must run on the Rust CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import phi
+
+# Batch tile (VMEM-friendly; also the MXU-shaped dimension).
+DEFAULT_BM = 128
+# Sentinel marking an inactive shift term in the exps tensor.
+INACTIVE = -127.0
+
+
+def _apply_act(y, activation):
+    # True/False accepted as phi/None for backwards compatibility.
+    if activation is True or activation == "phi":
+        return phi(y)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    assert activation is None or activation is False, \
+        f"unknown activation {activation!r}"
+    return y
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w.T, preferred_element_type=jnp.float32) + b[None, :]
+    o_ref[...] = _apply_act(y, activation)
+
+
+def _shift_dense_kernel(x_ref, s_ref, e_ref, b_ref, o_ref, *, activation: bool):
+    x = x_ref[...]
+    sign = s_ref[...]
+    exps = e_ref[...]
+    b = b_ref[...]
+    # VPU: reconstruct the power-of-two weights once per block.
+    mags = jnp.where(exps > -100.0, jnp.exp2(exps), 0.0).sum(axis=-1)
+    w = sign * mags
+    # MXU: one dense dot against the reconstructed block.
+    y = jnp.dot(x, w.T, preferred_element_type=jnp.float32) + b[None, :]
+    o_ref[...] = _apply_act(y, activation)
+
+
+def _pad_batch(x, bm):
+    n = x.shape[0]
+    padded = ((n + bm - 1) // bm) * bm
+    if padded == n:
+        return x, n
+    pad = jnp.zeros((padded - n, x.shape[1]), x.dtype)
+    return jnp.concatenate([x, pad], axis=0), n
+
+
+def dense(x, w, b, *, activation, bm: int = DEFAULT_BM, interpret: bool = True):
+    """Pallas dense layer: y = act(x @ w.T + b).
+
+    x: (batch, in); w: (out, in); b: (out,); activation in
+    {"phi", "tanh", None}. Batch is tiled by `bm`; weight/bias blocks use
+    constant index maps (VMEM-resident).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    xp, n = _pad_batch(x, bm)
+    nout, nin = w.shape
+    grid = (xp.shape[0] // bm,)
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, nin), lambda i: (i, 0)),
+            pl.BlockSpec((nout, nin), lambda i: (0, 0)),  # stationary
+            pl.BlockSpec((nout,), lambda i: (0,)),        # stationary
+        ],
+        out_specs=pl.BlockSpec((bm, nout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], nout), jnp.float32),
+        interpret=interpret,
+    )(xp, w, b)
+    return out[:n]
+
+
+def shift_dense(x, sign, exps, b, *, activation, bm: int = DEFAULT_BM,
+                interpret: bool = True):
+    """Pallas shift-quantized dense layer.
+
+    sign: (out, in) in {-1, 0, +1}; exps: (out, in, K) with INACTIVE
+    sentinels; b: (out,).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    sign = jnp.asarray(sign, jnp.float32)
+    exps = jnp.asarray(exps, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    xp, n = _pad_batch(x, bm)
+    nout, nin = sign.shape
+    k = exps.shape[-1]
+    grid = (xp.shape[0] // bm,)
+    out = pl.pallas_call(
+        functools.partial(_shift_dense_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, nin), lambda i: (i, 0)),
+            pl.BlockSpec((nout, nin), lambda i: (0, 0)),     # stationary
+            pl.BlockSpec((nout, nin, k), lambda i: (0, 0, 0)),  # stationary
+            pl.BlockSpec((nout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, nout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], nout), jnp.float32),
+        interpret=interpret,
+    )(xp, sign, exps, b)
+    return out[:n]
+
+
+def mlp(x, layers, *, activation: str = "phi", activation_output: bool = False,
+        bm: int = DEFAULT_BM, interpret: bool = True):
+    """Full MLP as a chain of Pallas dense layers. layers: [(w, b), ...];
+    hidden layers use `activation`, the output layer is linear unless
+    `activation_output`."""
+    h = x
+    for i, (w, b) in enumerate(layers):
+        last = i == len(layers) - 1
+        act = activation if ((not last) or activation_output) else None
+        h = dense(h, w, b, activation=act, bm=bm, interpret=interpret)
+    return h
+
+
+def shift_mlp(x, layers, *, activation: str = "phi",
+              activation_output: bool = False, bm: int = DEFAULT_BM,
+              interpret: bool = True):
+    """Full shift-quantized MLP. layers: [(sign, exps, b), ...]."""
+    h = x
+    for i, (s, e, b) in enumerate(layers):
+        last = i == len(layers) - 1
+        act = activation if ((not last) or activation_output) else None
+        h = shift_dense(h, s, e, b, activation=act, bm=bm, interpret=interpret)
+    return h
+
+
+# ----------------------------------------------------------------------
+# Water feature extraction kernel (module (i) of Fig. 2).
+# ----------------------------------------------------------------------
+
+def _water_features_kernel(pos_ref, feats_ref, uho_ref, uhh_ref):
+    pos = pos_ref[...]
+    o, h1, h2 = pos[0], pos[1], pos[2]
+
+    def inv_norm(v):
+        return jax.lax.rsqrt(jnp.sum(v * v))
+
+    d1o = o - h1
+    d12 = h2 - h1
+    d2o = o - h2
+    i1o = inv_norm(d1o)
+    i12 = inv_norm(d12)
+    i2o = inv_norm(d2o)
+    feats_ref[0, 0] = i1o
+    feats_ref[0, 1] = i12
+    feats_ref[0, 2] = i2o
+    feats_ref[1, 0] = i2o
+    feats_ref[1, 1] = i12
+    feats_ref[1, 2] = i1o
+    uho_ref[0, :] = d1o * i1o
+    uho_ref[1, :] = d2o * i2o
+    uhh_ref[0, :] = d12 * i12
+    uhh_ref[1, :] = -d12 * i12
+
+
+def water_features(pos, *, interpret: bool = True):
+    """pos (3,3) [O,H1,H2] -> (feats (2,3), u_ho (2,3), u_hh (2,3))."""
+    pos = jnp.asarray(pos, jnp.float32)
+    return pl.pallas_call(
+        _water_features_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((2, 3), jnp.float32),
+            jax.ShapeDtypeStruct((2, 3), jnp.float32),
+            jax.ShapeDtypeStruct((2, 3), jnp.float32),
+        ),
+        interpret=interpret,
+    )(pos)
+
+
+def pack_shift_layer(w, k):
+    """Quantize a float (out,in) weight matrix into (sign, exps) tensors
+    for `shift_dense` using the exact exporter quantizer."""
+    import numpy as np
+    from ..quantize import quantize_pow2_exact
+
+    w = np.asarray(w, dtype=np.float64)
+    nout, nin = w.shape
+    sign = np.zeros((nout, nin), dtype=np.float32)
+    exps = np.full((nout, nin, k), INACTIVE, dtype=np.float32)
+    for i in range(nout):
+        for j in range(nin):
+            s, es, _v = quantize_pow2_exact(float(w[i, j]), k)
+            sign[i, j] = s
+            for t, n in enumerate(es):
+                exps[i, j, t] = n
+    return sign, exps

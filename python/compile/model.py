@@ -1,0 +1,129 @@
+"""L2: the MLMD compute graph in JAX, built on the L1 Pallas kernels.
+
+Three jit-able entry points (all AOT-exported by `aot.py`):
+
+* :func:`mlp_forward` -- batched MLP force evaluation (module (ii));
+* :func:`water_md_step` -- one full MD step for the water molecule:
+  feature extraction -> MLP -> local-frame force reconstruction ->
+  Newton's-third-law oxygen force -> semi-implicit Euler (Eqs. 2-3);
+* the same graph with the shift-quantized kernel for QNN models.
+
+Python never runs on the request path: these functions are lowered once
+to HLO text and executed by the Rust PJRT runtime.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import shift_mlp as kernels
+
+# Units (mirrors rust util::units).
+ACC_CONV = 9.648533212331e-3  # (eV/Å/amu) -> Å/fs²
+MASS_O = 15.9994
+MASS_H = 1.00794
+
+
+def load_model_json(path):
+    """Load a trained model artifact (the schema rust `Mlp` reads)."""
+    with open(path) as f:
+        doc = json.load(f)
+    layers = [
+        (np.asarray(l["w"], dtype=np.float32), np.asarray(l["b"], dtype=np.float32))
+        for l in doc["layers"]
+    ]
+    return {
+        "name": doc["name"],
+        "arch": doc["arch"],
+        "activation": doc["activation"],
+        "output_activation": bool(doc.get("output_activation", False)),
+        "quant_k": int(doc.get("quant_k", 0)),
+        "output_scale": float(doc.get("output_scale", 1.0)),
+        "feature_center": np.asarray(doc.get("feature_center", []),
+                                     dtype=np.float32),
+        "feature_scale": np.asarray(doc.get("feature_scale", 1.0),
+                                    dtype=np.float32),
+        "layers": layers,
+    }
+
+
+def condition_features(x, model):
+    """The FPGA feature-conditioning stage: centered + per-dim pow2
+    gains (broadcasts a scalar gain too)."""
+    center = model["feature_center"]
+    if center.size == 0:
+        return x
+    scale = jnp.asarray(model["feature_scale"])
+    if scale.ndim == 1:
+        scale = scale[None, :]
+    return (x - center[None, :]) * scale
+
+
+def mlp_forward(x, layers, *, activation="phi", output_activation=False,
+                interpret=True):
+    """Batched MLP forward through the Pallas dense kernel."""
+    return kernels.mlp(x, layers, activation=activation,
+                       activation_output=output_activation,
+                       interpret=interpret)
+
+
+def shift_mlp_forward(x, model, *, interpret=True):
+    """Batched forward through the *shift* kernel: weights quantized with
+    the exact exporter quantizer, reconstructed in-kernel (L1 numerics).
+    """
+    k = max(model["quant_k"], 1)
+    packed = [
+        kernels.pack_shift_layer(w, k) + (b,)
+        for (w, b) in model["layers"]
+    ]
+    return kernels.shift_mlp(x, packed, activation=model["activation"],
+                             activation_output=model["output_activation"],
+                             interpret=interpret)
+
+
+def water_forces(pos, model, *, interpret=True):
+    """Forces on [O, H1, H2] from the MLP (module (ii) + reconstruction).
+
+    `model` is a dict from :func:`load_model_json` (or a compatible toy):
+    the feature conditioning (FPGA constant-subtract + pow2 gain) and the
+    output rescale (pow2 shift) are both part of the contract.
+    """
+    feats, u_ho, u_hh = kernels.water_features(pos, interpret=interpret)
+    x = condition_features(feats, model)
+    c = mlp_forward(x, model["layers"], activation=model["activation"],
+                    output_activation=model["output_activation"],
+                    interpret=interpret) * model["output_scale"]  # (2, 2)
+    f_h = c[:, 0:1] * u_ho + c[:, 1:2] * u_hh  # (2, 3)
+    f_o = -(f_h[0] + f_h[1])
+    return jnp.concatenate([f_o[None, :], f_h], axis=0)  # (3, 3)
+
+
+def water_md_step(pos, vel, model, dt, *, interpret=True):
+    """One semi-implicit-Euler MD step (paper Eqs. (2)-(3)).
+
+    pos, vel: (3, 3) float32 rows [O, H1, H2]. Returns (pos', vel').
+    """
+    masses = jnp.array([MASS_O, MASS_H, MASS_H], dtype=jnp.float32)
+    f = water_forces(pos, model, interpret=interpret)
+    vel2 = vel + f * (ACC_CONV * dt) / masses[:, None]
+    pos2 = pos + vel2 * dt
+    return pos2, vel2
+
+
+def toy_model(layers, output_scale=1.0):
+    """Wrap raw layers in the model-dict contract (tests)."""
+    return {
+        "name": "toy",
+        "arch": [np.asarray(layers[0][0]).shape[1]]
+        + [np.asarray(w).shape[0] for (w, _b) in layers],
+        "activation": "phi",
+        "output_activation": False,
+        "quant_k": 0,
+        "output_scale": output_scale,
+        "feature_center": np.asarray([], dtype=np.float32),
+        "feature_scale": np.asarray(1.0, dtype=np.float32),
+        "layers": layers,
+    }

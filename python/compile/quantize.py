@@ -1,0 +1,113 @@
+"""Power-of-two weight quantization (paper Eqs. (5)-(9)) and fixed-point
+quantization of signals, with straight-through estimators for QAT.
+
+Two implementations are provided:
+
+* :func:`quantize_pow2_exact` -- float64 numpy, bit-identical to the Rust
+  `quant::quantize_weight` (same ceiling fix-ups, same clamping). Used at
+  export time; parity is asserted against Rust-generated test vectors
+  (``artifacts/quant_vectors.json``) by ``tests/test_quantize.py``.
+* :func:`quantize_pow2_jnp` -- vectorized jnp version used inside the QAT
+  training loss (wrapped with an STE).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# Hardware exponent range (rust quant::EXP_MIN/MAX).
+EXP_MIN = -16
+EXP_MAX = 15
+
+# Q(1,2,10): the system's 13-bit fixed-point format.
+Q13_FRAC = 10
+Q13_SCALE = 1 << Q13_FRAC
+Q13_MAX = (1 << 12) - 1
+Q13_MIN = -(1 << 12)
+
+
+def basis_exponent(w: float) -> int:
+    """Eq. (8): ceil(log2(w / 1.5)) with exact fix-up, w > 0."""
+    y = w / 1.5
+    n = int(np.ceil(np.log2(y)))
+    while 2.0 ** (n - 1) >= y:
+        n -= 1
+    while 2.0 ** n < y:
+        n += 1
+    return n
+
+
+def quantize_pow2_exact(w: float, k: int):
+    """Greedy K-term decomposition; returns (sign, [exponents], value).
+
+    Mirrors rust `quant::quantize_weight` exactly (clamping, residual
+    flush below 2^(EXP_MIN-1), Eq. (7)'s max(.,0) early stop).
+    """
+    if w == 0.0 or not np.isfinite(w):
+        return 0, [], 0.0
+    sign = 1 if w > 0 else -1
+    residual = abs(w)
+    exps = []
+    for _ in range(k):
+        if residual <= 2.0 ** (EXP_MIN - 1):
+            break
+        n = int(np.clip(basis_exponent(residual), EXP_MIN, EXP_MAX))
+        exps.append(n)
+        residual = max(residual - 2.0 ** n, 0.0)
+        if residual == 0.0:
+            break
+    value = sign * sum(2.0 ** n for n in exps)
+    return sign, exps, value
+
+
+def quantize_matrix_exact(w: np.ndarray, k: int) -> np.ndarray:
+    """Elementwise exact quantization; returns the dequantized values."""
+    flat = np.asarray(w, dtype=np.float64).ravel()
+    out = np.array([quantize_pow2_exact(float(v), k)[2] for v in flat])
+    return out.reshape(np.shape(w))
+
+
+def quantize_pow2_jnp(w: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Vectorized greedy power-of-two quantization (dequantized values).
+
+    Same algorithm as the exact version, in jnp (float32-friendly). A
+    double fix-up of the ceiling handles log2 rounding at exact powers.
+    """
+    sign = jnp.sign(w)
+    residual = jnp.abs(w)
+    total = jnp.zeros_like(w)
+    for _ in range(k):
+        y = residual / 1.5
+        safe_y = jnp.where(y > 0, y, 1.0)
+        n = jnp.ceil(jnp.log2(safe_y))
+        for _fix in range(2):
+            n = jnp.where(jnp.exp2(n - 1) >= safe_y, n - 1, n)
+            n = jnp.where(jnp.exp2(n) < safe_y, n + 1, n)
+        n = jnp.clip(n, EXP_MIN, EXP_MAX)
+        q = jnp.exp2(n)
+        active = residual > 2.0 ** (EXP_MIN - 1)
+        q = jnp.where(active, q, 0.0)
+        total = total + q
+        residual = jnp.maximum(residual - q, 0.0)
+    return sign * total
+
+
+def ste(fn, x):
+    """Straight-through estimator: forward fn(x), identity gradient."""
+    return x + jax.lax.stop_gradient(fn(x) - x)
+
+
+def quantize_pow2_ste(w: jnp.ndarray, k: int) -> jnp.ndarray:
+    return ste(lambda v: quantize_pow2_jnp(v, k), w)
+
+
+def quantize_q13(x: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest Q(1,2,10) quantization with saturation."""
+    r = jnp.clip(jnp.round(x * Q13_SCALE), Q13_MIN, Q13_MAX)
+    return r / Q13_SCALE
+
+
+def quantize_q13_ste(x: jnp.ndarray) -> jnp.ndarray:
+    return ste(quantize_q13, x)

@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, swept over
+shapes/values with hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import shift_mlp as K
+
+
+def rand(shape, seed, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 200),
+    nin=st.integers(1, 40),
+    nout=st.integers(1, 40),
+    activation=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_dense_matches_ref(batch, nin, nout, activation, seed):
+    x = rand((batch, nin), seed)
+    w = rand((nout, nin), seed + 1, 0.5)
+    b = rand((nout,), seed + 2, 0.2)
+    got = np.asarray(K.dense(x, w, b, activation=activation, bm=64))
+    want = np.asarray(ref.ref_dense(x, w, b, activation))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.integers(1, 64),
+    nin=st.integers(1, 16),
+    nout=st.integers(1, 16),
+    k=st.integers(1, 5),
+    seed=st.integers(0, 1000),
+)
+def test_shift_dense_matches_ref(batch, nin, nout, k, seed):
+    x = rand((batch, nin), seed)
+    w = rand((nout, nin), seed + 1, 0.8)
+    b = rand((nout,), seed + 2, 0.2)
+    s, e = K.pack_shift_layer(w, k)
+    got = np.asarray(K.shift_dense(x, s, e, b, activation=True, bm=32))
+    want = np.asarray(ref.ref_shift_dense(x, s, e, b, True))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_shift_dense_weights_are_exact_pow2_sums():
+    w = np.array([[0.5, -1.25], [0.3, 0.0]], dtype=np.float32)
+    s, e = K.pack_shift_layer(w, 3)
+    # reconstruct
+    mags = np.where(e > -100, np.exp2(e), 0.0).sum(axis=-1)
+    rec = s * mags
+    assert rec[0, 0] == 0.5
+    assert rec[0, 1] == -1.25
+    assert rec[1, 1] == 0.0
+    # 0.3 -> 0.25 + 0.0625 = 0.3125 (greedy overshoot clip)
+    assert abs(rec[1, 0] - 0.3125) < 1e-7
+
+
+def test_mlp_chain_matches_ref():
+    rng = np.random.RandomState(3)
+    layers = []
+    dims = [3, 5, 4, 2]
+    for nin, nout in zip(dims[:-1], dims[1:]):
+        layers.append((rng.randn(nout, nin).astype(np.float32) * 0.5,
+                       rng.randn(nout).astype(np.float32) * 0.1))
+    x = rng.randn(17, 3).astype(np.float32)
+    got = np.asarray(K.mlp(x, layers, bm=8))
+    want = np.asarray(ref.ref_mlp(x, layers))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_phi_definition():
+    x = np.linspace(-4, 4, 401).astype(np.float32)
+    y = np.asarray(ref.phi(x))
+    assert y.max() == 1.0 and y.min() == -1.0
+    i = np.argmin(np.abs(x - 1.0))
+    assert abs(y[i] - 0.75) < 1e-6
+    # odd function
+    np.testing.assert_allclose(y, -y[::-1], atol=1e-6)
+
+
+def test_water_features_kernel_matches_ref():
+    pos = np.array([[0.0, 0.1, 0.0],
+                    [0.77, 0.65, 0.02],
+                    [-0.75, 0.63, -0.03]], dtype=np.float32)
+    f, uho, uhh = K.water_features(pos)
+    rf, ruho, ruhh = ref.ref_water_features(pos)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(rf), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(uho), np.asarray(ruho), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(uhh), np.asarray(ruhh), rtol=1e-5, atol=1e-5)
+
+
+def test_water_features_invariance():
+    base = np.array([[0.0, 0.0, 0.0],
+                     [0.766, 0.593, 0.0],
+                     [-0.766, 0.593, 0.0]], dtype=np.float32)
+    f0, _, _ = ref.ref_water_features(base)
+    # translation
+    f1, _, _ = ref.ref_water_features(base + np.array([1.0, -2.0, 0.5], dtype=np.float32))
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1), atol=1e-5)
+    # rotation about z by 30 deg
+    c, s = np.cos(0.5236), np.sin(0.5236)
+    rot = np.array([[c, -s, 0], [s, c, 0], [0, 0, 1]], dtype=np.float32)
+    f2, _, _ = ref.ref_water_features(base @ rot.T)
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f2), atol=1e-4)
+
+
+def test_batch_padding_edge_cases():
+    w = rand((4, 3), 0, 0.5)
+    b = rand((4,), 1, 0.1)
+    for batch in [1, 63, 64, 65, 128, 129]:
+        x = rand((batch, 3), batch)
+        got = np.asarray(K.dense(x, w, b, activation=True, bm=64))
+        want = np.asarray(ref.ref_dense(x, w, b, True))
+        assert got.shape == (batch, 4)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

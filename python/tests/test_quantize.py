@@ -1,0 +1,83 @@
+"""Quantizer correctness: python exact quantizer vs paper equations and
+vs the Rust implementation (cross-language parity via exported vectors)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+
+
+def test_basis_exponent_examples():
+    assert Q.basis_exponent(1.0) == 0
+    assert Q.basis_exponent(1.5) == 0
+    assert Q.basis_exponent(1.6) == 1
+    assert Q.basis_exponent(0.75) == -1
+    for m in range(-10, 10):
+        assert Q.basis_exponent(2.0 ** m) == m
+
+
+@settings(max_examples=300, deadline=None)
+@given(w=st.floats(-4.0, 4.0, allow_nan=False), k=st.integers(1, 5))
+def test_exact_quantizer_error_bound(w, k):
+    sign, exps, value = Q.quantize_pow2_exact(w, k)
+    if w == 0.0:
+        assert sign == 0 and value == 0.0
+        return
+    m = len(exps)
+    if m == 0:
+        assert abs(w) <= 2.0 ** (Q.EXP_MIN - 1)
+        return
+    # relative 3^-m bound, plus one hardware-floor LSB (2^EXP_MIN) for
+    # weights small enough that exponent clamping engages
+    assert abs(value - w) <= abs(w) * 3.0 ** (-m) + 2.0 ** Q.EXP_MIN + 1e-12
+    assert all(Q.EXP_MIN <= e <= Q.EXP_MAX for e in exps)
+    assert all(a >= b for a, b in zip(exps, exps[1:]))
+
+
+@settings(max_examples=100, deadline=None)
+@given(w=st.floats(-3.9, 3.9, allow_nan=False), k=st.integers(1, 5))
+def test_jnp_quantizer_matches_exact(w, k):
+    got = float(Q.quantize_pow2_jnp(np.float32(w), k))
+    _s, _e, want = Q.quantize_pow2_exact(float(np.float32(w)), k)
+    assert got == pytest.approx(want, abs=2e-6), (w, k)
+
+
+def test_idempotence_of_exact_quantizer():
+    # A greedy-produced value must re-quantize to itself (the property the
+    # QNN export relies on: rust Sqnn re-derives identical shift params).
+    rng = np.random.RandomState(0)
+    for _ in range(500):
+        w = float(rng.uniform(-3, 3))
+        for k in (1, 3, 5):
+            _s, _e, v = Q.quantize_pow2_exact(w, k)
+            _s2, _e2, v2 = Q.quantize_pow2_exact(v, k) if v != 0 else (0, [], 0.0)
+            assert v2 == v, (w, k, v, v2)
+
+
+def test_q13_quantization():
+    assert float(Q.quantize_q13(np.float32(1.0))) == 1.0
+    assert float(Q.quantize_q13(np.float32(100.0))) == pytest.approx(4095 / 1024)
+    assert float(Q.quantize_q13(np.float32(-100.0))) == -4.0
+    x = np.float32(0.123456)
+    assert abs(float(Q.quantize_q13(x)) - 0.123456) <= 0.5 / 1024 + 1e-7
+
+
+def test_parity_with_rust_vectors():
+    """artifacts/quant_vectors.json is produced by `nvnmd gen-data`
+    (rust quant::quantize_weight on a deterministic grid)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "quant_vectors.json")
+    if not os.path.exists(path):
+        pytest.skip("quant_vectors.json not built (run `make artifacts`)")
+    with open(path) as f:
+        vectors = json.load(f)["vectors"]
+    assert len(vectors) >= 100
+    for v in vectors:
+        s, exps, value = Q.quantize_pow2_exact(v["w"], int(v["k"]))
+        assert s == v["sign"], v
+        assert exps == v["exps"], v
+        assert value == pytest.approx(v["value"], abs=1e-12), v

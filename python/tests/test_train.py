@@ -1,0 +1,76 @@
+"""Training pipeline smoke: a tiny synthetic regression must converge,
+QAT export must be exactly power-of-two, and model JSON must match the
+schema the Rust loader expects."""
+
+import json
+import os
+
+import numpy as np
+
+from compile import train as T
+from compile import quantize as Q
+
+
+def tiny_problem(n=400, seed=0):
+    rng = np.random.RandomState(seed)
+    x = rng.uniform(-1, 1, size=(n, 3)).astype(np.float32)
+    y = np.stack([
+        0.8 * x[:, 0] - 0.3 * x[:, 1] ** 2,
+        0.5 * np.sin(2 * x[:, 2]),
+    ], axis=1).astype(np.float32)
+    return x, y
+
+
+def test_float_training_converges():
+    x, y = tiny_problem()
+    params, loss = T.train_model(x, y, [3, 8, 8, 2], "phi", 1500, 4e-3, seed=1)
+    assert loss < 0.01, loss
+    assert T.rmse(params, x, y, "phi") < 0.1
+
+
+def test_qat_training_converges_and_exports_pow2(tmp_path):
+    x, y = tiny_problem()
+    params, _ = T.train_model(x, y, [3, 8, 8, 2], "phi", 1200, 4e-3, seed=1)
+    qat, loss = T.train_model(x, y, [3, 8, 8, 2], "phi", 600, 1e-3, seed=1,
+                              qat_k=3, init=params)
+    assert loss < 0.03, loss
+    doc = T.export_model(str(tmp_path / "m.json"), "m", qat, "phi", 3,
+                         {"test_rmse": 0.0})
+    # every exported weight is an exact sum of <=3 powers of two
+    for layer in doc["layers"]:
+        for row in layer["w"]:
+            for w in row:
+                _s, exps, v = Q.quantize_pow2_exact(w, 3)
+                assert v == w, (w, v)
+                assert len(exps) <= 3
+
+
+def test_export_schema_matches_rust_loader(tmp_path):
+    x, y = tiny_problem()
+    params, _ = T.train_model(x, y, [3, 4, 2], "tanh", 200, 4e-3, seed=2)
+    path = str(tmp_path / "model.json")
+    T.export_model(path, "schema_check", params, "tanh", 0, {"note": 1})
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["arch"] == [3, 4, 2]
+    assert doc["activation"] in ("tanh", "phi")
+    assert isinstance(doc["output_activation"], bool)
+    assert len(doc["layers"]) == 2
+    assert len(doc["layers"][0]["w"]) == 4
+    assert len(doc["layers"][0]["w"][0]) == 3
+    assert len(doc["layers"][1]["b"]) == 2
+
+
+def test_dataset_loader_roundtrip(tmp_path):
+    ds = {
+        "name": "t", "feature_dim": 2, "out_dim": 1,
+        "train_x": [[1, 2], [3, 4]], "train_y": [[0.5], [1.5]],
+        "test_x": [[5, 6]], "test_y": [[2.5]],
+        "meta": {"arch": [2, 3, 1]},
+    }
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps(ds))
+    out = T.load_dataset(str(p))
+    assert out["arch"] == [2, 3, 1]
+    assert out["train_x"].shape == (2, 2)
+    assert out["test_y"].shape == (1, 1)

@@ -1,0 +1,25 @@
+//! Bench E8 (paper Fig. 10): the DOS spectra pipeline (trajectories +
+//! VACF + FFT) and the FFT substrate hot path.
+use nvnmd::benchkit::Bench;
+use nvnmd::util::fft::{self, Cplx};
+
+fn main() {
+    let mut b = Bench::new("fig10_spectra");
+    let n = 1 << 14;
+    let signal: Vec<f64> = (0..n).map(|i| (0.37 * i as f64).sin()).collect();
+    b.measure("fft_16k", || {
+        let mut buf: Vec<Cplx> = signal.iter().map(|&x| Cplx::new(x, 0.0)).collect();
+        fft::fft(&mut buf, false);
+        buf[1].re
+    });
+    b.measure("autocorrelation_4k_lags", || {
+        fft::autocorrelation(&signal[..8192], 4096).len()
+    });
+    let quick = std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1");
+    let (res, _) = b.measure_once("fig10_full_pipeline", || nvnmd::exp::fig10::run(quick));
+    match res {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("fig10 unavailable (run `make artifacts`): {e:#}"),
+    }
+    b.finish();
+}

@@ -1,0 +1,20 @@
+//! Bench E2 (paper Fig. 3b): synthesis-model cost of the two activation
+//! circuits, plus the netlist-builder throughput.
+use nvnmd::benchkit::Bench;
+use nvnmd::hw::synth;
+
+fn main() {
+    let mut b = Bench::new("fig3_transistors");
+    b.measure("synthesize_phi_unit", || synth::phi_unit(13).transistors());
+    b.measure("synthesize_tanh_cordic", || {
+        synth::tanh_cordic_unit(synth::CORDIC_BITS, synth::CORDIC_ITERS).transistors()
+    });
+    b.measure("synthesize_water_mlp_sqnn", || {
+        synth::mlp_netlist(&[3, 3, 3, 2], 13, synth::WeightDatapath::Shift { k: 3 }).transistors()
+    });
+    match nvnmd::exp::fig3::run_transistors() {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("fig3b failed: {e:#}"),
+    }
+    b.finish();
+}

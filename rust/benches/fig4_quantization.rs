@@ -1,0 +1,21 @@
+//! Bench E4 (paper Fig. 4): CNN-vs-QNN accuracy sweep through the Q13
+//! chip datapath, plus quantizer/datapath micro-benches.
+use nvnmd::benchkit::Bench;
+use nvnmd::quant::quantize_weight;
+use nvnmd::util::rng::Pcg;
+
+fn main() {
+    let mut b = Bench::new("fig4_quantization");
+    let mut rng = Pcg::new(1);
+    let ws: Vec<f64> = (0..4096).map(|_| rng.range(-2.0, 2.0)).collect();
+    for k in [1usize, 3, 5] {
+        b.measure(&format!("quantize_weight_k{k}_x4096"), || {
+            ws.iter().map(|&w| quantize_weight(w, k).terms()).sum::<usize>()
+        });
+    }
+    match nvnmd::exp::fig4::run() {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("fig4 unavailable (run `make artifacts`): {e:#}"),
+    }
+    b.finish();
+}

@@ -1,0 +1,19 @@
+//! Bench E5 (paper Fig. 5): SQNN/FQNN transistor ratios across the six
+//! network sizes and K = 1..5.
+use nvnmd::benchkit::Bench;
+use nvnmd::hw::synth::{mlp_netlist, WeightDatapath, FQNN_BITS, Q13_BITS};
+
+fn main() {
+    let mut b = Bench::new("fig5_hw_overhead");
+    b.measure("synthesize_silicon_sqnn_k3", || {
+        mlp_netlist(&[64, 64, 64, 3], Q13_BITS, WeightDatapath::Shift { k: 3 }).transistors()
+    });
+    b.measure("synthesize_silicon_fqnn", || {
+        mlp_netlist(&[64, 64, 64, 3], FQNN_BITS, WeightDatapath::Multiplier).transistors()
+    });
+    match nvnmd::exp::fig5::run() {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("fig5 failed: {e:#}"),
+    }
+    b.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench E6 (paper Fig. 9): chip-vs-DFT force RMSE plus the chip
+//! inference hot path.
+use nvnmd::benchkit::Bench;
+use nvnmd::asic::{ChipConfig, MlpChip};
+use nvnmd::fixedpoint::Q13;
+use nvnmd::nn::Mlp;
+
+fn main() {
+    let mut b = Bench::new("fig9_chip_rmse");
+    if let Ok(model) = Mlp::load(&nvnmd::artifact_path("models/water_qnn_k3.json")) {
+        let mut chip = MlpChip::new(0, ChipConfig::default());
+        chip.program(&model, model.quant_k.max(3));
+        let x = [Q13::from_f64(1.03), Q13::from_f64(0.65), Q13::from_f64(1.03)];
+        b.measure("chip_infer_water", || chip.infer(&x).unwrap()[0].0);
+        b.note("chip latency (modelled cycles)", chip.latency_cycles());
+    }
+    match nvnmd::exp::fig9::run() {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("fig9 unavailable (run `make artifacts`): {e:#}"),
+    }
+    b.finish();
+}

@@ -1,0 +1,127 @@
+//! §Perf micro-benches: the request-path hot spots of every layer —
+//! Q13 arithmetic, SQNN forward, chip inference, FPGA feature/integrate,
+//! full coordinator step (inline and threaded), and the PJRT dispatch.
+//! This is the harness the EXPERIMENTS.md §Perf iteration log is
+//! measured with.
+
+use nvnmd::asic::{ChipConfig, MlpChip};
+use nvnmd::benchkit::Bench;
+use nvnmd::coordinator::{ParallelMode, WaterSystem};
+use nvnmd::fixedpoint::{q13, Q13};
+use nvnmd::fpga::WaterFpga;
+use nvnmd::md::{initialize_velocities, System};
+use nvnmd::nn::{Activation, Mlp, Sqnn};
+use nvnmd::potentials::WaterPes;
+use nvnmd::runtime::{Runtime, Tensor};
+use nvnmd::util::rng::Pcg;
+
+fn model() -> Mlp {
+    Mlp::load(&nvnmd::artifact_path("models/water_qnn_k3.json")).unwrap_or_else(|_| {
+        let mut rng = Pcg::new(7);
+        let mut m = Mlp::init_random("fallback", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.4;
+            }
+        }
+        m
+    })
+}
+
+fn initial() -> System {
+    let pes = WaterPes::dft_surrogate();
+    let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
+    initialize_velocities(&mut sys, 300.0, 6, &mut Pcg::new(3));
+    sys
+}
+
+fn main() {
+    let mut b = Bench::new("hotpath_micro");
+    let m = model();
+
+    // L0: fixed-point primitive ops.
+    let mut rng = Pcg::new(5);
+    let qa: Vec<Q13> = (0..256).map(|_| Q13::from_f64(rng.range(-2.0, 2.0))).collect();
+    let qb: Vec<Q13> = (0..256).map(|_| Q13::from_f64(rng.range(-2.0, 2.0))).collect();
+    b.measure("q13_mul_x256", || {
+        qa.iter().zip(&qb).map(|(x, y)| x.mul(*y).0 as i64).sum::<i64>()
+    });
+    b.measure("q13_dot_wide_256", || q13::dot_wide(&qa, &qb).0);
+
+    // L3a: SQNN forward (the chip datapath without accounting).
+    let net = Sqnn::from_mlp(&m, 3);
+    let x = [Q13::from_f64(1.03), Q13::from_f64(0.65), Q13::from_f64(1.03)];
+    b.measure("sqnn_forward_q13", || net.forward_q13(&x)[0].0);
+
+    // L3b: chip inference with cycle/energy accounting.
+    let mut chip = MlpChip::new(0, ChipConfig::default());
+    chip.program(&m, 3);
+    b.measure("chip_infer_accounted", || chip.infer(&x).unwrap()[0].0);
+
+    // L3c: FPGA feature extraction + integration.
+    let sys = initial();
+    let mut fpga = WaterFpga::new(&sys, 0.25);
+    b.measure("fpga_extract_features", || fpga.extract_features()[0].d[0].0);
+    let frames = fpga.extract_features();
+    b.measure("fpga_integrate", || {
+        fpga.integrate(&frames, [[Q13(12), Q13(-9)]; 2]);
+        fpga.steps
+    });
+
+    // L3d: full coordinator step, inline vs threaded.
+    let mut inline = WaterSystem::new(&m, 3, &initial(), 0.25, ParallelMode::Inline).unwrap();
+    b.measure("coordinator_step_inline", || {
+        inline.step().unwrap();
+        inline.ledger.md_steps
+    });
+    let mut threaded = WaterSystem::new(&m, 3, &initial(), 0.25, ParallelMode::Threaded).unwrap();
+    b.measure("coordinator_step_threaded", || {
+        threaded.step().unwrap();
+        threaded.ledger.md_steps
+    });
+
+    // Runtime: PJRT dispatch cost (vN path), when artifacts exist.
+    let hlo = nvnmd::artifact_path("water_mlp.hlo.txt");
+    if hlo.exists() {
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&hlo).unwrap();
+        let input = Tensor::new(vec![1.03, 0.65, 1.03, 1.02, 0.66, 1.04], &[2, 3]).unwrap();
+        b.measure("pjrt_water_mlp_batch2", || {
+            exe.run(std::slice::from_ref(&input)).unwrap()[0].data[0]
+        });
+        let md = nvnmd::artifact_path("water_md_step.hlo.txt");
+        if md.exists() {
+            let exe2 = rt.load_hlo_text(&md).unwrap();
+            let pos = Tensor::new(
+                vec![0.0, 0.0, 0.0, 0.766, 0.593, 0.0, -0.766, 0.593, 0.0],
+                &[3, 3],
+            )
+            .unwrap();
+            let vel = Tensor::new(vec![0.0; 9], &[3, 3]).unwrap();
+            b.measure("pjrt_water_md_step", || {
+                exe2.run(&[pos.clone(), vel.clone()]).unwrap()[0].data[0]
+            });
+        }
+    } else {
+        println!("  (PJRT benches skipped: run `make artifacts`)");
+    }
+
+    // Simulation throughput summary for §Perf.
+    let mut sim = WaterSystem::new(&m, 3, &initial(), 0.25, ParallelMode::Inline).unwrap();
+    let t0 = std::time::Instant::now();
+    let n = 200_000;
+    for _ in 0..n {
+        sim.step().unwrap();
+    }
+    let rate = n as f64 / t0.elapsed().as_secs_f64();
+    b.note("inline_sim_steps_per_sec", format!("{rate:.0}"));
+    b.note(
+        "sim_vs_modelled_hw",
+        format!(
+            "simulator runs {:.1}x the modelled 25 MHz hardware rate ({:.0} steps/s)",
+            rate / nvnmd::hw::timing::SystemTiming::water_nominal().steps_per_second(),
+            nvnmd::hw::timing::SystemTiming::water_nominal().steps_per_second()
+        ),
+    );
+    b.finish();
+}

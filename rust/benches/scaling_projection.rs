@@ -1,0 +1,12 @@
+//! Bench E10 (paper §VI): process-node projection.
+use nvnmd::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("scaling_projection");
+    match nvnmd::exp::scaling::run() {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("scaling failed: {e:#}"),
+    }
+    b.measure("projection_compute", || nvnmd::exp::scaling::compute().len());
+    b.finish();
+}

@@ -1,0 +1,27 @@
+//! Bench E1+E3 (paper Fig. 3a + Table I): activation evaluation cost and
+//! the tanh-vs-phi accuracy table.
+use nvnmd::benchkit::Bench;
+use nvnmd::nn::activation::{phi, phi_q13, tanh_cordic};
+use nvnmd::fixedpoint::Q13;
+
+fn main() {
+    let mut b = Bench::new("table1_activation");
+    let xs: Vec<f64> = (0..1024).map(|i| -4.0 + i as f64 * 8.0 / 1024.0).collect();
+    let qs: Vec<Q13> = xs.iter().map(|&x| Q13::from_f64(x)).collect();
+    b.measure("tanh_f64_x1024", || xs.iter().map(|x| x.tanh()).sum::<f64>());
+    b.measure("phi_f64_x1024", || xs.iter().map(|&x| phi(x)).sum::<f64>());
+    b.measure("phi_q13_x1024", || qs.iter().map(|&q| phi_q13(q).0 as i64).sum::<i64>());
+    b.measure("tanh_cordic14_x1024", || {
+        xs.iter().map(|&x| tanh_cordic(x.clamp(-1.1, 1.1), 14, 16)).sum::<f64>()
+    });
+
+    match nvnmd::exp::fig3::run_curves() {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("fig3a unavailable: {e:#}"),
+    }
+    match nvnmd::exp::table1::run() {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("table1 unavailable (run `make artifacts`): {e:#}"),
+    }
+    b.finish();
+}

@@ -1,0 +1,18 @@
+//! Bench E7 (paper Table II): the four-method property comparison.
+//! Honours NVNMD_BENCH_QUICK=1 for a reduced run.
+use nvnmd::benchkit::Bench;
+use nvnmd::exp::table2;
+
+fn main() {
+    let mut b = Bench::new("table2_properties");
+    let quick = std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1");
+    let cfg = table2::Config::with_quick(quick);
+    let (res, wall) = b.measure_once("table2_four_methods", || table2::run(cfg));
+    match res {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("table2 unavailable (run `make artifacts`): {e:#}"),
+    }
+    b.note("steps per method", cfg.steps);
+    b.note("total wall", format!("{wall:?}"));
+    b.finish();
+}

@@ -1,0 +1,14 @@
+//! Bench E9 (paper Table III): measured S/P/eta for all five methods.
+use nvnmd::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("table3_speed_energy");
+    let quick = std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1");
+    let (res, wall) = b.measure_once("table3_all_methods", || nvnmd::exp::table3::run(quick));
+    match res {
+        Ok(r) => println!("{}", r.render()),
+        Err(e) => println!("table3 unavailable (run `make artifacts`): {e:#}"),
+    }
+    b.note("total wall", format!("{wall:?}"));
+    b.finish();
+}

@@ -1,0 +1,144 @@
+//! Trajectory and model analysis: RMSE metrics, structural statistics
+//! (bond lengths, angles), vibrational spectra via autocorrelation + FFT
+//! (paper Fig. 10), and normal-mode analysis used to calibrate/verify the
+//! DFT-surrogate PES (paper Table II).
+
+pub mod spectrum;
+pub mod normal_modes;
+
+pub use spectrum::{mode_spectrum, peak_wavenumber, Dos};
+pub use normal_modes::{hessian, normal_mode_wavenumbers};
+
+use crate::util::Vec3;
+
+/// Root-mean-square error between flat prediction/target slices.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    assert!(!pred.is_empty());
+    let s: f64 = pred
+        .iter()
+        .zip(target)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// RMSE over rows of vectors (flattened).
+pub fn rmse_vecs(pred: &[Vec<f64>], target: &[Vec<f64>]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    let p: Vec<f64> = pred.iter().flatten().copied().collect();
+    let t: Vec<f64> = target.iter().flatten().copied().collect();
+    rmse(&p, &t)
+}
+
+/// Mean and standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Relative error |a − b| / |b| (the paper's Error¹/²/³ definition).
+pub fn relative_error(measured: f64, reference: f64) -> f64 {
+    (measured - reference).abs() / reference.abs()
+}
+
+/// Structural time series extracted from a water-molecule trajectory.
+#[derive(Debug, Clone, Default)]
+pub struct WaterSeries {
+    /// O–H1 and O–H2 bond lengths per frame (Å).
+    pub r1: Vec<f64>,
+    pub r2: Vec<f64>,
+    /// H–O–H angle per frame (degrees).
+    pub angle: Vec<f64>,
+}
+
+impl WaterSeries {
+    /// Record one frame given positions ordered [O, H1, H2].
+    pub fn push(&mut self, pos: &[Vec3]) {
+        let (o, h1, h2) = (pos[0], pos[1], pos[2]);
+        let b1 = h1 - o;
+        let b2 = h2 - o;
+        self.r1.push(b1.norm());
+        self.r2.push(b2.norm());
+        self.angle.push(b1.angle_between(b2).to_degrees());
+    }
+
+    pub fn len(&self) -> usize {
+        self.r1.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.r1.is_empty()
+    }
+
+    /// Mean bond length over both bonds (Å) — Table II "Bond length".
+    pub fn mean_bond_length(&self) -> f64 {
+        let (m1, _) = mean_std(&self.r1);
+        let (m2, _) = mean_std(&self.r2);
+        0.5 * (m1 + m2)
+    }
+
+    /// Mean H–O–H angle (degrees) — Table II "H-O-H angle".
+    pub fn mean_angle(&self) -> f64 {
+        mean_std(&self.angle).0
+    }
+
+    /// Internal-coordinate mode signals for the three vibration modes:
+    /// symmetric stretch (r1+r2)/√2, asymmetric stretch (r1−r2)/√2,
+    /// bend (angle). Mean-removed.
+    pub fn mode_signals(&self) -> [Vec<f64>; 3] {
+        let n = self.len();
+        let mut sym = Vec::with_capacity(n);
+        let mut asym = Vec::with_capacity(n);
+        for i in 0..n {
+            sym.push((self.r1[i] + self.r2[i]) * std::f64::consts::FRAC_1_SQRT_2);
+            asym.push((self.r1[i] - self.r2[i]) * std::f64::consts::FRAC_1_SQRT_2);
+        }
+        [sym, asym, self.angle.clone()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_basics() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[1.0, 2.0], &[2.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((rmse(&[0.0, 0.0, 0.0, 4.0], &[0.0; 4]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_error_matches_paper_formula() {
+        // Error¹ for bond length: |0.968 − 0.969| / 0.969 ≈ 0.10%.
+        let e = relative_error(0.968, 0.969);
+        assert!((e * 100.0 - 0.103).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn water_series_geometry() {
+        let mut ws = WaterSeries::default();
+        // O at origin, H at 0.97 along x, H in xy-plane at 104.5°.
+        let th = 104.5f64.to_radians();
+        ws.push(&[
+            Vec3::ZERO,
+            Vec3::new(0.97, 0.0, 0.0),
+            Vec3::new(0.97 * th.cos(), 0.97 * th.sin(), 0.0),
+        ]);
+        assert!((ws.mean_bond_length() - 0.97).abs() < 1e-12);
+        assert!((ws.mean_angle() - 104.5).abs() < 1e-9);
+        let [sym, asym, _] = ws.mode_signals();
+        assert!((sym[0] - 0.97 * 2.0 / 2f64.sqrt()).abs() < 1e-12);
+        assert!(asym[0].abs() < 1e-12);
+    }
+}

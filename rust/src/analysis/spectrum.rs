@@ -1,0 +1,128 @@
+//! Vibrational density of states from mode-coordinate time series
+//! (paper Fig. 10): autocorrelate the (mean-removed) internal coordinate,
+//! window, FFT, normalize, locate the peak.
+
+use crate::util::fft;
+use crate::util::units;
+
+/// A one-sided normalized spectrum.
+#[derive(Debug, Clone)]
+pub struct Dos {
+    /// Wavenumbers (cm⁻¹) per bin.
+    pub wavenumber: Vec<f64>,
+    /// Normalized power (peak = 1).
+    pub power: Vec<f64>,
+}
+
+impl Dos {
+    /// Wavenumber of the global peak, refined by parabolic interpolation.
+    pub fn peak(&self) -> f64 {
+        let (i, _) = fft::argmax(&self.power);
+        let frac = fft::parabolic_peak(&self.power, i);
+        let dnu = self.wavenumber[1] - self.wavenumber[0];
+        frac * dnu
+    }
+
+    /// Restrict to a wavenumber window (used to isolate a mode's band).
+    pub fn window(&self, lo: f64, hi: f64) -> Dos {
+        let mut w = Vec::new();
+        let mut p = Vec::new();
+        for (nu, pw) in self.wavenumber.iter().zip(&self.power) {
+            if (lo..=hi).contains(nu) {
+                w.push(*nu);
+                p.push(*pw);
+            }
+        }
+        Dos { wavenumber: w, power: p }
+    }
+}
+
+/// Compute the normalized DOS of a mode-coordinate signal sampled every
+/// `dt_fs` femtoseconds. Uses the autocorrelation route of Fig. 10
+/// (ACF → Hann window → zero-padded FFT).
+pub fn mode_spectrum(signal: &[f64], dt_fs: f64) -> Dos {
+    assert!(signal.len() >= 64, "signal too short for a spectrum");
+    let max_lag = (signal.len() / 2).min(1 << 15);
+    let acf = fft::autocorrelation(signal, max_lag);
+    let (freqs, mut power) = fft::power_spectrum(&acf, true, Some(8 * acf.len()));
+    // bins: cycles/sample → cm⁻¹
+    let wavenumber: Vec<f64> = freqs
+        .iter()
+        .map(|f| units::freq_fs_to_wavenumber(f / dt_fs))
+        .collect();
+    let maxp = power.iter().cloned().fold(f64::MIN, f64::max).max(1e-300);
+    for p in power.iter_mut() {
+        *p /= maxp;
+    }
+    Dos { wavenumber, power }
+}
+
+/// Peak wavenumber of a signal, restricted to a physically sensible band
+/// (cuts the zero-frequency/drift bin).
+pub fn peak_wavenumber(signal: &[f64], dt_fs: f64, band: (f64, f64)) -> f64 {
+    mode_spectrum(signal, dt_fs).window(band.0, band.1).peak_with_offset(band.0)
+}
+
+impl Dos {
+    fn peak_with_offset(&self, _lo: f64) -> f64 {
+        let (i, _) = fft::argmax(&self.power);
+        let frac = fft::parabolic_peak(&self.power, i);
+        if self.wavenumber.len() < 2 {
+            return *self.wavenumber.first().unwrap_or(&0.0);
+        }
+        let dnu = self.wavenumber[1] - self.wavenumber[0];
+        self.wavenumber[0] + frac * dnu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tone(nu_cm: f64, dt_fs: f64, n: usize) -> Vec<f64> {
+        let f = crate::util::units::wavenumber_to_freq_fs(nu_cm); // 1/fs
+        (0..n)
+            .map(|i| (2.0 * std::f64::consts::PI * f * i as f64 * dt_fs).sin())
+            .collect()
+    }
+
+    #[test]
+    fn recovers_single_mode_frequency() {
+        // 1603 cm⁻¹ bend-like tone, 0.25 fs sampling, 40k frames.
+        let dt = 0.25;
+        let signal = tone(1603.0, dt, 40_000);
+        let peak = peak_wavenumber(&signal, dt, (200.0, 3000.0));
+        assert!((peak - 1603.0).abs() < 15.0, "peak={peak}");
+    }
+
+    #[test]
+    fn recovers_stretch_frequency() {
+        let dt = 0.25;
+        let signal = tone(4241.0, dt, 40_000);
+        let peak = peak_wavenumber(&signal, dt, (3000.0, 5000.0));
+        assert!((peak - 4241.0).abs() < 20.0, "peak={peak}");
+    }
+
+    #[test]
+    fn separates_two_modes_by_band() {
+        let dt = 0.25;
+        let n = 40_000;
+        let a = tone(1600.0, dt, n);
+        let b = tone(4000.0, dt, n);
+        let mixed: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x + 0.5 * y).collect();
+        let low = peak_wavenumber(&mixed, dt, (500.0, 2500.0));
+        let high = peak_wavenumber(&mixed, dt, (3000.0, 5000.0));
+        assert!((low - 1600.0).abs() < 20.0, "low={low}");
+        assert!((high - 4000.0).abs() < 25.0, "high={high}");
+    }
+
+    #[test]
+    fn dos_normalized() {
+        let dt = 0.25;
+        let d = mode_spectrum(&tone(2000.0, dt, 8192), dt);
+        let maxp = d.power.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((maxp - 1.0).abs() < 1e-12);
+        assert_eq!(d.wavenumber.len(), d.power.len());
+        assert!(d.wavenumber.windows(2).all(|w| w[1] > w[0]));
+    }
+}

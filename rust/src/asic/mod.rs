@@ -1,0 +1,302 @@
+//! Cycle-level simulator of the MLP ASIC (Fig. 7 / §IV-B) — the paper's
+//! taped-out SilTerra 180 nm chip.
+//!
+//! Non-von-Neumann organization: the quantized shift parameters
+//! (s, n₁..n_K) and biases live in distributed near-compute storage,
+//! loaded **once** at initialization (`MlpChip::program`) and never
+//! re-fetched; layer results flow register-to-register without any
+//! off-chip traffic. `infer` is bit-accurate (it *is* the `nn::Sqnn`
+//! datapath) and additionally accounts cycles and operation energies per
+//! inference.
+
+use anyhow::Result;
+
+use crate::fixedpoint::Q13;
+use crate::hw::power::{EnergyModel, OpCounts, ProcessNode, CHIP_POWER_W};
+use crate::nn::{Mlp, Sqnn};
+
+/// Static configuration of the chip.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipConfig {
+    /// Core clock (paper: 25 MHz).
+    pub clock_hz: f64,
+    /// Fabrication node (paper: SilTerra 180 nm).
+    pub node: ProcessNode,
+    /// Die area (paper: 1.73 mm²) — reported, not derived.
+    pub die_mm2: f64,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig { clock_hz: crate::hw::timing::CLOCK_HZ, node: ProcessNode::N180, die_mm2: 1.73 }
+    }
+}
+
+/// One MLP chip instance.
+#[derive(Debug, Clone)]
+pub struct MlpChip {
+    pub cfg: ChipConfig,
+    pub id: usize,
+    net: Option<Sqnn>,
+    /// Lifetime counters.
+    pub inferences: u64,
+    pub total_cycles: u64,
+    pub ops: OpCounts,
+    /// §Perf: per-inference ops/latency derived once at program time
+    /// (the network is static after initialization — NvN).
+    per_inf_ops: OpCounts,
+    per_inf_cycles: u64,
+}
+
+impl MlpChip {
+    pub fn new(id: usize, cfg: ChipConfig) -> Self {
+        MlpChip {
+            cfg,
+            id,
+            net: None,
+            inferences: 0,
+            total_cycles: 0,
+            ops: OpCounts::default(),
+            per_inf_ops: OpCounts::default(),
+            per_inf_cycles: 0,
+        }
+    }
+
+    /// Program the distributed weight memory (the one-time
+    /// initialization the CPU performs, §IV-A: "w and b are only
+    /// initialized once before MLP inference").
+    pub fn program(&mut self, model: &Mlp, k: usize) {
+        self.program_sqnn(Sqnn::from_mlp(model, k));
+    }
+
+    pub fn program_sqnn(&mut self, net: Sqnn) {
+        self.net = Some(net);
+        self.per_inf_cycles = self.latency_cycles();
+        self.per_inf_ops = self.derive_per_inference_ops();
+    }
+
+    /// Static per-inference op counts of the programmed network.
+    fn derive_per_inference_ops(&self) -> OpCounts {
+        let net = self.net.as_ref().expect("chip not programmed");
+        let mut ops = OpCounts::default();
+        for (li, l) in net.layers.iter().enumerate() {
+            let weights = l.w.len() as u64;
+            let terms: u64 = l.w.iter().map(|w| w.terms() as u64).sum();
+            ops.shifts += terms; // active SU shifters
+            ops.adds += terms.saturating_sub(weights) + weights; // SU sums + tree
+            ops.adds += l.out_dim as u64; // bias adds
+            // NB: no sram_reads — the NvN point: weights/biases are
+            // statically wired into the SUs (distributed storage is part
+            // of the datapath), nothing is fetched per inference.
+            ops.reg_writes_bits += (l.out_dim as u64) * 13;
+            let is_hidden = li + 1 < net.layers.len();
+            if is_hidden || net.output_activation {
+                // AU: one squarer-multiply, one subtract per neuron
+                ops.mults += l.out_dim as u64;
+                ops.adds += l.out_dim as u64;
+            }
+        }
+        ops
+    }
+
+    pub fn is_programmed(&self) -> bool {
+        self.net.is_some()
+    }
+
+    pub fn network(&self) -> Option<&Sqnn> {
+        self.net.as_ref()
+    }
+
+    /// Pipeline latency in cycles for one inference: per layer, one
+    /// cycle for the parallel SU shift–accumulate, ⌈log₂(fan_in)⌉ for
+    /// the MU adder tree, one for bias+saturation, one for the AU
+    /// (hidden layers). Plus input/output register stages.
+    pub fn latency_cycles(&self) -> u64 {
+        let net = self.net.as_ref().expect("chip not programmed");
+        let mut cycles = 2; // input latch + output latch
+        let n_layers = net.layers.len();
+        for (li, l) in net.layers.iter().enumerate() {
+            let tree = (l.in_dim.max(2) as f64).log2().ceil() as u64;
+            cycles += 1 + tree + 1;
+            if li + 1 < n_layers || net.output_activation {
+                cycles += 1; // AU
+            }
+        }
+        cycles
+    }
+
+    /// Run one inference. Returns the Q13 outputs; updates cycle and
+    /// energy counters.
+    pub fn infer(&mut self, features: &[Q13]) -> Result<Vec<Q13>> {
+        let net = self
+            .net
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("chip {} not programmed", self.id))?;
+        anyhow::ensure!(
+            features.len() == net.in_dim(),
+            "chip {}: feature width {} != {}",
+            self.id,
+            features.len(),
+            net.in_dim()
+        );
+        let out = net.forward_q13(features);
+
+        // Account cycles and ops (precomputed at program time — the
+        // network is static, §Perf).
+        self.total_cycles += self.per_inf_cycles;
+        self.inferences += 1;
+        self.ops.merge(&self.per_inf_ops.clone());
+        Ok(out)
+    }
+
+    /// Allocation-free inference into a caller buffer (§Perf hot path
+    /// used by the coordinator step).
+    pub fn infer_into(&mut self, features: &[Q13], out: &mut [Q13]) -> Result<()> {
+        let net = self
+            .net
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("chip {} not programmed", self.id))?;
+        anyhow::ensure!(
+            features.len() == net.in_dim() && out.len() == net.out_dim(),
+            "chip {}: io width mismatch",
+            self.id
+        );
+        net.forward_q13_into(features, out);
+        self.total_cycles += self.per_inf_cycles;
+        self.inferences += 1;
+        self.ops.merge(&self.per_inf_ops.clone());
+        Ok(())
+    }
+
+    /// Float convenience wrapper.
+    pub fn infer_f64(&mut self, features: &[f64]) -> Result<Vec<f64>> {
+        let q: Vec<Q13> = features.iter().map(|&x| Q13::from_f64(x)).collect();
+        Ok(self.infer(&q)?.into_iter().map(|v| v.to_f64()).collect())
+    }
+
+    /// Modelled *dynamic* energy consumed so far (pJ).
+    pub fn dynamic_energy_pj(&self) -> f64 {
+        self.ops.energy_pj(&EnergyModel::at(self.cfg.node))
+    }
+
+    /// Modelled chip power at full utilization: the calibrated measured
+    /// power (static-dominated at 25 MHz; see `hw::power`).
+    pub fn power_w(&self) -> f64 {
+        CHIP_POWER_W
+    }
+
+    /// Simulated wall-clock time spent inferring (s of chip time).
+    pub fn busy_seconds(&self) -> f64 {
+        self.total_cycles as f64 / self.cfg.clock_hz
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.inferences = 0;
+        self.total_cycles = 0;
+        self.ops = OpCounts::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+    use crate::util::rng::Pcg;
+
+    fn water_like_chip() -> MlpChip {
+        let mut rng = Pcg::new(3);
+        let mut m = Mlp::init_random("w", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.7;
+            }
+        }
+        let mut chip = MlpChip::new(0, ChipConfig::default());
+        chip.program(&m, 3);
+        chip
+    }
+
+    #[test]
+    fn unprogrammed_chip_refuses() {
+        let mut chip = MlpChip::new(0, ChipConfig::default());
+        assert!(!chip.is_programmed());
+        assert!(chip.infer(&[Q13::ZERO; 3]).is_err());
+    }
+
+    #[test]
+    fn wrong_width_rejected() {
+        let mut chip = water_like_chip();
+        assert!(chip.infer(&[Q13::ZERO; 2]).is_err());
+        assert!(chip.infer(&[Q13::ZERO; 3]).is_ok());
+    }
+
+    #[test]
+    fn infer_matches_sqnn_bit_exactly() {
+        let mut chip = water_like_chip();
+        let net = chip.network().unwrap().clone();
+        let mut rng = Pcg::new(5);
+        for _ in 0..500 {
+            let x: Vec<Q13> = (0..3).map(|_| Q13::from_f64(rng.range(-1.5, 1.5))).collect();
+            let a = chip.infer(&x).unwrap();
+            let b = net.forward_q13(&x);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn latency_matches_architecture() {
+        let chip = water_like_chip();
+        // layers 3→3, 3→3, 3→2: per hidden layer 1+⌈log2 3⌉+1+1 = 5,
+        // output layer 1+2+1 = 4, +2 IO = 16.
+        assert_eq!(chip.latency_cycles(), 2 + 5 + 5 + 4);
+    }
+
+    #[test]
+    fn counters_accumulate_linearly() {
+        let mut chip = water_like_chip();
+        let x = [Q13::from_f64(1.0), Q13::from_f64(0.6), Q13::from_f64(1.0)];
+        chip.infer(&x).unwrap();
+        let ops1 = chip.ops;
+        let cyc1 = chip.total_cycles;
+        for _ in 0..9 {
+            chip.infer(&x).unwrap();
+        }
+        assert_eq!(chip.inferences, 10);
+        assert_eq!(chip.total_cycles, 10 * cyc1);
+        assert_eq!(chip.ops, ops1.scale(10));
+        chip.reset_counters();
+        assert_eq!(chip.inferences, 0);
+        assert_eq!(chip.total_cycles, 0);
+    }
+
+    #[test]
+    fn energy_accounting_is_static_dominated_at_25mhz() {
+        // Run the chip "for one second" of simulated time and check the
+        // dynamic energy is a small fraction of the 8.7 mW measured
+        // budget — the paper's point that the NvN datapath is cheap.
+        let mut chip = water_like_chip();
+        let x = [Q13::from_f64(1.0), Q13::from_f64(0.6), Q13::from_f64(1.0)];
+        let lat = chip.latency_cycles();
+        let inf_per_s = (chip.cfg.clock_hz / lat as f64) as u64;
+        // scale down 100× and extrapolate to keep the test fast
+        let n = (inf_per_s / 100).max(1);
+        for _ in 0..n {
+            chip.infer(&x).unwrap();
+        }
+        let dyn_w = chip.dynamic_energy_pj() * 1e-12 * 100.0 / 1.0;
+        assert!(dyn_w < 0.2 * chip.power_w(), "dynamic {dyn_w} W vs {}", chip.power_w());
+        assert!(dyn_w > 0.0);
+    }
+
+    #[test]
+    fn busy_time_tracks_cycles() {
+        let mut chip = water_like_chip();
+        let x = [Q13::ZERO; 3];
+        for _ in 0..1000 {
+            chip.infer(&x).unwrap();
+        }
+        let t = chip.busy_seconds();
+        let expect = 1000.0 * chip.latency_cycles() as f64 / chip.cfg.clock_hz;
+        assert!((t - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,215 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Each file in `rust/benches/` is a `harness = false` target whose
+//! `main` builds a [`Bench`] and registers measurements and report
+//! sections. Reports print the paper's table/figure alongside measured
+//! values, and are additionally written to `artifacts/bench/<name>.json`
+//! so EXPERIMENTS.md numbers are regenerable.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Value};
+
+/// Statistics of a timed measurement.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+}
+
+/// A benchmark session.
+pub struct Bench {
+    pub name: String,
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+    results: Vec<Stats>,
+    report: Vec<(String, String)>,
+    extra: Vec<(String, Value)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Honour quick mode for CI-style smoke runs: NVNMD_BENCH_QUICK=1.
+        let quick = std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1");
+        Bench {
+            name: name.to_string(),
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(150) },
+            measure: if quick { Duration::from_millis(80) } else { Duration::from_millis(600) },
+            min_samples: 10,
+            results: Vec::new(),
+            report: Vec::new(),
+            extra: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs exactly one operation per call. A
+    /// `black_box`-style sink prevents the optimizer from deleting work:
+    /// return a value and it is consumed via `std::hint::black_box`.
+    pub fn measure<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup & calibration: find iterations per sample ≈ 1ms.
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let iters_per_sample = ((1_000_000.0 / per).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure || samples.len() < self.min_samples {
+            let s = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let median = samples[n / 2];
+        let min = samples[0];
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let st = Stats {
+            name: name.to_string(),
+            iters: iters_per_sample * n as u64,
+            mean_ns: mean,
+            median_ns: median,
+            min_ns: min,
+            stddev_ns: var.sqrt(),
+        };
+        println!(
+            "  {:<44} {:>12}/iter  (min {}, n={})",
+            name,
+            fmt_ns(st.median_ns),
+            fmt_ns(st.min_ns),
+            n
+        );
+        self.results.push(st.clone());
+        st
+    }
+
+    /// Record a one-shot wall-clock measurement of `f` (for end-to-end
+    /// runs too long to repeat).
+    pub fn measure_once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> (T, Duration) {
+        let s = Instant::now();
+        let out = std::hint::black_box(f());
+        let el = s.elapsed();
+        println!("  {:<44} {:>12} (single run)", name, fmt_ns(el.as_nanos() as f64));
+        self.results.push(Stats {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: el.as_nanos() as f64,
+            median_ns: el.as_nanos() as f64,
+            min_ns: el.as_nanos() as f64,
+            stddev_ns: 0.0,
+        });
+        (out, el)
+    }
+
+    /// Add a line to the human report (paper-vs-measured commentary).
+    pub fn note(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.report.push((key.to_string(), value.to_string()));
+    }
+
+    /// Attach arbitrary structured data to the JSON report.
+    pub fn attach(&mut self, key: &str, value: Value) {
+        self.extra.push((key.to_string(), value));
+    }
+
+    /// Print the report block and write the JSON artifact.
+    pub fn finish(self) {
+        println!("\n== {} ==", self.name);
+        for (k, v) in &self.report {
+            println!("  {k}: {v}");
+        }
+        let results: Vec<Value> = self
+            .results
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("name", json::s(&r.name)),
+                    ("median_ns", json::num(r.median_ns)),
+                    ("mean_ns", json::num(r.mean_ns)),
+                    ("min_ns", json::num(r.min_ns)),
+                    ("stddev_ns", json::num(r.stddev_ns)),
+                    ("iters", json::num(r.iters as f64)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("bench", json::s(&self.name)),
+            ("results", Value::Arr(results)),
+            (
+                "notes",
+                Value::Obj(
+                    self.report
+                        .iter()
+                        .map(|(k, v)| (k.clone(), json::s(v)))
+                        .collect(),
+                ),
+            ),
+        ];
+        for (k, v) in &self.extra {
+            fields.push((k.as_str(), v.clone()));
+        }
+        let out = json::obj(fields);
+        let path = crate::artifact_path("bench").join(format!("{}.json", self.name));
+        if let Err(e) = json::write_file(&path, &out) {
+            eprintln!("warning: could not write bench artifact: {e}");
+        } else {
+            println!("  [report: {}]", path.display());
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        std::env::set_var("NVNMD_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let st = b.measure("sum_1000", || (0..1000u64).sum::<u64>());
+        assert!(st.median_ns > 0.0);
+        assert!(st.iters > 0);
+        // A 1000-element sum should be well under 100µs.
+        assert!(st.median_ns < 1e5, "median {}", st.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,360 @@
+//! The Layer-3 coordinator — the paper's heterogeneous parallel MLMD
+//! computing system (Fig. 1 / §IV-C): a host (this process) orchestrating
+//! one FPGA model (feature extraction + integration) and **two MLP ASIC
+//! chips working in parallel**, one per hydrogen atom.
+//!
+//! The per-step workflow is exactly the paper's §IV-C:
+//! 1. the FPGA computes the feature triples of both hydrogens;
+//! 2. both feature sets go to the two MLP chips **simultaneously**, which
+//!    predict the two hydrogen forces in parallel;
+//! 3. forces return to the FPGA, the oxygen force follows from Newton's
+//!    third law, and the integrator advances the positions.
+//!
+//! Two chip backends are provided: [`ParallelMode::Threaded`] runs each
+//! chip simulator on its own worker thread (the architecture
+//! demonstration — real concurrent devices with channel transport), and
+//! [`ParallelMode::Inline`] calls them sequentially in-process (the fast
+//! path for multi-million-step property runs; identical numerics). The
+//! modelled hardware time is identical in both: the step's cycle cost
+//! takes max(chip latencies), not their sum.
+
+pub mod pool;
+pub mod vn;
+
+use anyhow::Result;
+
+use crate::asic::{ChipConfig, MlpChip};
+use crate::fixedpoint::Q13;
+use crate::fpga::WaterFpga;
+use crate::hw::power::{self, OpCounts};
+use crate::hw::timing::{StepCycles, CLOCK_HZ};
+use crate::md::System;
+use crate::nn::Mlp;
+use crate::util::Vec3;
+use pool::ChipPool;
+
+/// Chip execution backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Each chip on a dedicated worker thread (channel transport).
+    Threaded,
+    /// Chips invoked inline (same numerics, no thread hops).
+    Inline,
+}
+
+/// Cycle/energy/utilization accounting of a run.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    pub md_steps: u64,
+    /// Modelled hardware cycles (StepCycles budget; chip stage uses the
+    /// *max* of the two parallel chips).
+    pub modelled_cycles: u64,
+    /// Host wall-clock spent in `step()` (simulation cost, not modelled
+    /// hardware time).
+    pub host_wall: std::time::Duration,
+    pub chip_inferences: u64,
+    /// Aggregated chip op counts (both chips).
+    pub chip_ops: OpCounts,
+    /// Aggregated FPGA op counts.
+    pub fpga_ops: OpCounts,
+}
+
+impl Ledger {
+    /// Modelled hardware seconds for the run.
+    pub fn hw_seconds(&self, clock_hz: f64) -> f64 {
+        self.modelled_cycles as f64 / clock_hz
+    }
+    /// The paper's S metric over this run (s/step/atom, 3 atoms).
+    pub fn s_per_step_atom(&self, clock_hz: f64) -> f64 {
+        if self.md_steps == 0 {
+            return 0.0;
+        }
+        self.hw_seconds(clock_hz) / self.md_steps as f64 / 3.0
+    }
+    /// Modelled energy over the run (J): system power × modelled time
+    /// (the paper's η = S×P uses measured power; see `hw::power`).
+    pub fn energy_j(&self, clock_hz: f64) -> f64 {
+        power::SYSTEM_POWER_W * self.hw_seconds(clock_hz)
+    }
+}
+
+/// The heterogeneous water-MLMD system.
+pub struct WaterSystem {
+    pub fpga: WaterFpga,
+    chips: ChipBackend,
+    pub ledger: Ledger,
+    step_cycles: StepCycles,
+    pub clock_hz: f64,
+    chip_latency: u64,
+    /// Optional weak-coupling thermostat (T_target, dt/τ): a direct-force
+    /// MLP is not exactly conservative, so long property runs heat from
+    /// quantization/model noise; the host control plane rescales the FPGA
+    /// velocity state every [`THERMOSTAT_STRIDE`] steps (the same
+    /// protocol the float drivers use). See DESIGN.md §Numerics.
+    pub thermostat: Option<(f64, f64)>,
+    masses: Vec<f64>,
+}
+
+/// Steps between control-plane thermostat interventions.
+pub const THERMOSTAT_STRIDE: u64 = 16;
+
+enum ChipBackend {
+    Threaded(ChipPool),
+    Inline(Vec<MlpChip>),
+}
+
+impl WaterSystem {
+    /// Build and program the system: the host-CPU initialization path
+    /// (Fig. 1) — load the trained model into both chips' distributed
+    /// memories and the initial state into the FPGA.
+    pub fn new(model: &Mlp, k: usize, sys: &System, dt_fs: f64, mode: ParallelMode) -> Result<Self> {
+        anyhow::ensure!(model.in_dim() == 3 && model.out_dim() == 2, "water model must be 3→…→2");
+        let mut chips: Vec<MlpChip> = (0..2)
+            .map(|id| {
+                let mut c = MlpChip::new(id, ChipConfig::default());
+                c.program(model, k);
+                c
+            })
+            .collect();
+        let chip_latency = chips[0].latency_cycles();
+        let mut fpga = WaterFpga::new(sys, dt_fs);
+        // The model predicts F / output_scale; the FPGA undoes that with
+        // a free power-of-two shift at reconstruction.
+        anyhow::ensure!(
+            model.output_scale > 0.0 && model.output_scale.log2().fract() == 0.0,
+            "output_scale {} must be a power of two for the shift datapath",
+            model.output_scale
+        );
+        fpga.force_shift = model.output_scale.log2() as i32;
+        fpga.program_feature_conditioning(&model.feature_center, &model.feature_scale);
+        let mut cycles = StepCycles::water();
+        // The MLP stage of the budget is the *actual* programmed-network
+        // latency (the nominal budget assumes the water arch).
+        cycles.mlp = chip_latency;
+        let backend = match mode {
+            ParallelMode::Threaded => ChipBackend::Threaded(ChipPool::spawn(chips.drain(..).collect())),
+            ParallelMode::Inline => ChipBackend::Inline(chips),
+        };
+        Ok(WaterSystem {
+            fpga,
+            chips: backend,
+            ledger: Ledger::default(),
+            step_cycles: cycles,
+            clock_hz: CLOCK_HZ,
+            chip_latency,
+            thermostat: None,
+            masses: sys.masses.clone(),
+        })
+    }
+
+    /// Control-plane thermostat tick (host CPU): Berendsen λ from the
+    /// decoded velocity state, applied as a fixed-point rescale.
+    fn thermostat_tick(&mut self) {
+        let Some((t_target, dt_over_tau)) = self.thermostat else {
+            return;
+        };
+        let vels = self.fpga.velocities();
+        let ke: f64 = vels
+            .iter()
+            .zip(&self.masses)
+            .map(|(v, m)| 0.5 * m * v.norm_sq())
+            .sum::<f64>()
+            / crate::util::units::ACC_CONV;
+        let t_now = 2.0 * ke / (6.0 * crate::util::units::KB);
+        if t_now <= 1e-9 {
+            return;
+        }
+        let coupling = dt_over_tau * THERMOSTAT_STRIDE as f64;
+        let lambda = (1.0 + coupling * (t_target / t_now - 1.0)).max(0.0).sqrt();
+        self.fpga.scale_velocities(lambda);
+    }
+
+    /// One MD step through the full heterogeneous pipeline.
+    ///
+    /// §Perf: host wall-clock is sampled every 64 steps (an `Instant`
+    /// pair per step cost ~12% of the inline path).
+    pub fn step(&mut self) -> Result<()> {
+        let sample_wall = self.ledger.md_steps % 64 == 0;
+        let t0 = if sample_wall { Some(std::time::Instant::now()) } else { None };
+        // (1) FPGA feature extraction.
+        let frames = self.fpga.extract_features();
+        let f0: [Q13; 3] = frames[0].d;
+        let f1: [Q13; 3] = frames[1].d;
+
+        // (2) two chips in parallel.
+        let mut c = [[Q13::ZERO; 2]; 2];
+        match &mut self.chips {
+            ChipBackend::Threaded(pool) => {
+                let res = pool.infer_pair(f0.to_vec(), f1.to_vec())?;
+                anyhow::ensure!(res.0.len() == 2 && res.1.len() == 2, "chip output width");
+                c[0] = [res.0[0], res.0[1]];
+                c[1] = [res.1[0], res.1[1]];
+            }
+            ChipBackend::Inline(chips) => {
+                // §Perf: allocation-free inline path.
+                chips[0].infer_into(&f0, &mut c[0])?;
+                chips[1].infer_into(&f1, &mut c[1])?;
+            }
+        }
+
+        // (3) forces back to FPGA: N3L + integration.
+        self.fpga.integrate(&frames, c);
+
+        // Ledger.
+        self.ledger.md_steps += 1;
+        self.ledger.chip_inferences += 2;
+        self.ledger.modelled_cycles += self.step_cycles.total();
+        if self.thermostat.is_some() && self.ledger.md_steps % THERMOSTAT_STRIDE == 0 {
+            self.thermostat_tick();
+        }
+        if let Some(t0) = t0 {
+            // extrapolate the sampled step over the 64-step stride
+            self.ledger.host_wall += t0.elapsed() * 64;
+        }
+        Ok(())
+    }
+
+    /// Run `n` steps, invoking `tap` with the decoded positions every
+    /// `stride` steps (0 = never).
+    pub fn run(&mut self, n: usize, stride: usize, mut tap: impl FnMut(&[Vec3])) -> Result<()> {
+        for s in 0..n {
+            self.step()?;
+            if stride > 0 && s % stride == 0 {
+                tap(&self.fpga.positions());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn positions(&self) -> Vec<Vec3> {
+        self.fpga.positions()
+    }
+
+    /// Collect final counters (draining worker-thread stats into the
+    /// ledger) and return the ledger.
+    pub fn finish(mut self) -> Result<Ledger> {
+        let (infs, _cycles, ops) = match &mut self.chips {
+            ChipBackend::Threaded(pool) => pool.stats()?,
+            ChipBackend::Inline(chips) => {
+                let mut ops = OpCounts::default();
+                let mut infs = 0;
+                let mut cyc = 0;
+                for c in chips.iter() {
+                    ops.merge(&c.ops);
+                    infs += c.inferences;
+                    cyc += c.total_cycles;
+                }
+                (infs, cyc, ops)
+            }
+        };
+        self.ledger.chip_ops = ops;
+        self.ledger.fpga_ops = self.fpga.ops;
+        debug_assert_eq!(infs, self.ledger.chip_inferences);
+        Ok(self.ledger)
+    }
+
+    pub fn chip_latency_cycles(&self) -> u64 {
+        self.chip_latency
+    }
+    pub fn step_cycle_budget(&self) -> StepCycles {
+        self.step_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::WaterSeries;
+    use crate::md::initialize_velocities;
+    use crate::nn::Activation;
+    use crate::potentials::WaterPes;
+    use crate::util::rng::Pcg;
+
+    /// A hand-made water model good enough for smoke tests (real accuracy
+    /// comes from the trained artifact; these tests check plumbing, not
+    /// physics).
+    fn toy_model() -> Mlp {
+        let mut rng = Pcg::new(77);
+        let mut m = Mlp::init_random("toy-water", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.3;
+            }
+        }
+        m
+    }
+
+    fn initial_system(seed: u64) -> System {
+        let pes = WaterPes::dft_surrogate();
+        let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
+        let mut rng = Pcg::new(seed);
+        initialize_velocities(&mut sys, 50.0, 6, &mut rng);
+        sys
+    }
+
+    #[test]
+    fn threaded_and_inline_are_bit_identical() {
+        let m = toy_model();
+        let sys = initial_system(1);
+        let mut a = WaterSystem::new(&m, 3, &sys, 0.25, ParallelMode::Threaded).unwrap();
+        let mut b = WaterSystem::new(&m, 3, &sys, 0.25, ParallelMode::Inline).unwrap();
+        for _ in 0..300 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        let pa = a.positions();
+        let pb = b.positions();
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x, y, "threaded vs inline positions must be bit-identical");
+        }
+        let la = a.finish().unwrap();
+        let lb = b.finish().unwrap();
+        assert_eq!(la.chip_inferences, lb.chip_inferences);
+        assert_eq!(la.chip_ops, lb.chip_ops);
+        assert_eq!(la.modelled_cycles, lb.modelled_cycles);
+    }
+
+    #[test]
+    fn ledger_matches_budget() {
+        let m = toy_model();
+        let sys = initial_system(2);
+        let mut s = WaterSystem::new(&m, 3, &sys, 0.25, ParallelMode::Inline).unwrap();
+        let budget = s.step_cycle_budget().total();
+        for _ in 0..100 {
+            s.step().unwrap();
+        }
+        let l = s.finish().unwrap();
+        assert_eq!(l.md_steps, 100);
+        assert_eq!(l.modelled_cycles, 100 * budget);
+        assert_eq!(l.chip_inferences, 200);
+        // S close to paper (budget calibrated in hw::timing)
+        let sps = l.s_per_step_atom(CLOCK_HZ);
+        assert!((sps - 1.6e-6).abs() / 1.6e-6 < 0.1, "S = {sps:e}");
+    }
+
+    #[test]
+    fn trajectory_stays_bounded_with_toy_model() {
+        // Plumbing test: even an untrained model saturates at ±1 force
+        // coefficients; the fixed-point system must stay finite/bounded.
+        let m = toy_model();
+        let sys = initial_system(3);
+        let mut s = WaterSystem::new(&m, 3, &sys, 0.25, ParallelMode::Inline).unwrap();
+        let mut series = WaterSeries::default();
+        s.run(2_000, 10, |pos| series.push(pos)).unwrap();
+        assert_eq!(series.len(), 200);
+        for p in s.positions() {
+            // state registers saturate at ±32 Å per axis; an untrained
+            // model may drift right up to the rails but must stay finite
+            assert!(p.norm() <= 32.0 * 1.8, "position escaped: {p:?}");
+            assert!(p.norm().is_finite());
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_model_shape() {
+        let mut rng = Pcg::new(1);
+        let bad = Mlp::init_random("bad", &[4, 3, 3], Activation::Phi, &mut rng);
+        let sys = initial_system(4);
+        assert!(WaterSystem::new(&bad, 3, &sys, 0.25, ParallelMode::Inline).is_err());
+    }
+}

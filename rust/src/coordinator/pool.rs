@@ -1,0 +1,211 @@
+//! Worker-thread pool of ASIC chip simulators with channel transport —
+//! the concurrent-device half of the coordinator, also used as a batch
+//! inference service (round-robin dispatch) by the serving example and
+//! the Fig. 9 evaluation.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::asic::MlpChip;
+use crate::fixedpoint::Q13;
+use crate::hw::power::OpCounts;
+
+enum Req {
+    /// Run one inference; reply on the embedded sender.
+    Infer(Vec<Q13>, mpsc::Sender<Result<Vec<Q13>>>),
+    /// Report (inferences, cycles, ops).
+    Stats(mpsc::Sender<(u64, u64, OpCounts)>),
+    Stop,
+}
+
+struct Worker {
+    tx: mpsc::Sender<Req>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A pool of chip workers, one thread per chip.
+pub struct ChipPool {
+    workers: Vec<Worker>,
+    next: usize,
+}
+
+impl ChipPool {
+    /// Spawn one worker thread per chip.
+    pub fn spawn(chips: Vec<MlpChip>) -> ChipPool {
+        let workers = chips
+            .into_iter()
+            .map(|mut chip| {
+                let (tx, rx) = mpsc::channel::<Req>();
+                let handle = std::thread::Builder::new()
+                    .name(format!("mlp-chip-{}", chip.id))
+                    .spawn(move || {
+                        while let Ok(req) = rx.recv() {
+                            match req {
+                                Req::Infer(x, reply) => {
+                                    let _ = reply.send(chip.infer(&x));
+                                }
+                                Req::Stats(reply) => {
+                                    let _ = reply.send((chip.inferences, chip.total_cycles, chip.ops));
+                                }
+                                Req::Stop => break,
+                            }
+                        }
+                    })
+                    .expect("spawn chip worker");
+                Worker { tx, handle: Some(handle) }
+            })
+            .collect();
+        ChipPool { workers, next: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Dispatch two inferences to the first two chips *concurrently* and
+    /// wait for both — the paper's two-hydrogen parallel step.
+    pub fn infer_pair(&mut self, a: Vec<Q13>, b: Vec<Q13>) -> Result<(Vec<Q13>, Vec<Q13>)> {
+        anyhow::ensure!(self.workers.len() >= 2, "need ≥2 chips");
+        let (ra_tx, ra_rx) = mpsc::channel();
+        let (rb_tx, rb_rx) = mpsc::channel();
+        self.workers[0].tx.send(Req::Infer(a, ra_tx)).context("chip 0 send")?;
+        self.workers[1].tx.send(Req::Infer(b, rb_tx)).context("chip 1 send")?;
+        let ya = ra_rx.recv().context("chip 0 reply")??;
+        let yb = rb_rx.recv().context("chip 1 reply")??;
+        Ok((ya, yb))
+    }
+
+    /// Batch inference service: round-robin the rows over all chips,
+    /// `chunk` rows in flight per chip, results returned in input order.
+    pub fn infer_batch(&mut self, rows: &[Vec<Q13>]) -> Result<Vec<Vec<Q13>>> {
+        let n = self.workers.len();
+        anyhow::ensure!(n > 0, "empty pool");
+        let mut pending: Vec<(usize, mpsc::Receiver<Result<Vec<Q13>>>)> = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            let w = (self.next + i) % n;
+            self.workers[w]
+                .tx
+                .send(Req::Infer(row.clone(), tx))
+                .with_context(|| format!("chip {w} send"))?;
+            pending.push((i, rx));
+        }
+        self.next = (self.next + rows.len()) % n;
+        let mut out = vec![Vec::new(); rows.len()];
+        for (i, rx) in pending {
+            out[i] = rx.recv().context("chip reply")??;
+        }
+        Ok(out)
+    }
+
+    /// Aggregate counters across all chips.
+    pub fn stats(&mut self) -> Result<(u64, u64, OpCounts)> {
+        let mut total = (0u64, 0u64, OpCounts::default());
+        for w in &self.workers {
+            let (tx, rx) = mpsc::channel();
+            w.tx.send(Req::Stats(tx)).context("stats send")?;
+            let (i, c, o) = rx.recv().context("stats reply")?;
+            total.0 += i;
+            total.1 += c;
+            total.2.merge(&o);
+        }
+        Ok(total)
+    }
+}
+
+impl Drop for ChipPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Req::Stop);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asic::ChipConfig;
+    use crate::nn::{Activation, Mlp};
+    use crate::util::rng::Pcg;
+
+    fn pool_of(n: usize) -> (ChipPool, Mlp) {
+        let mut rng = Pcg::new(8);
+        let mut m = Mlp::init_random("p", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.5;
+            }
+        }
+        let chips = (0..n)
+            .map(|id| {
+                let mut c = MlpChip::new(id, ChipConfig::default());
+                c.program(&m, 3);
+                c
+            })
+            .collect();
+        (ChipPool::spawn(chips), m)
+    }
+
+    #[test]
+    fn pair_matches_direct_inference() {
+        let (mut pool, m) = pool_of(2);
+        let net = crate::nn::Sqnn::from_mlp(&m, 3);
+        let a: Vec<Q13> = [0.9, 0.6, 1.0].iter().map(|&x| Q13::from_f64(x)).collect();
+        let b: Vec<Q13> = [1.1, 0.7, 0.95].iter().map(|&x| Q13::from_f64(x)).collect();
+        let (ya, yb) = pool.infer_pair(a.clone(), b.clone()).unwrap();
+        assert_eq!(ya, net.forward_q13(&a));
+        assert_eq!(yb, net.forward_q13(&b));
+    }
+
+    #[test]
+    fn batch_preserves_order_across_chips() {
+        let (mut pool, m) = pool_of(3);
+        let net = crate::nn::Sqnn::from_mlp(&m, 3);
+        let mut rng = Pcg::new(4);
+        let rows: Vec<Vec<Q13>> = (0..50)
+            .map(|_| (0..3).map(|_| Q13::from_f64(rng.range(-1.0, 1.5))).collect())
+            .collect();
+        let out = pool.infer_batch(&rows).unwrap();
+        assert_eq!(out.len(), 50);
+        for (row, y) in rows.iter().zip(&out) {
+            assert_eq!(*y, net.forward_q13(row));
+        }
+    }
+
+    #[test]
+    fn stats_aggregate_all_work() {
+        let (mut pool, _m) = pool_of(2);
+        let rows: Vec<Vec<Q13>> = (0..20).map(|_| vec![Q13::ZERO; 3]).collect();
+        pool.infer_batch(&rows).unwrap();
+        let (inferences, cycles, ops) = pool.stats().unwrap();
+        assert_eq!(inferences, 20);
+        assert!(cycles > 0);
+        assert!(ops.adds > 0);
+    }
+
+    #[test]
+    fn bad_input_width_propagates_error() {
+        let (mut pool, _m) = pool_of(2);
+        let err = pool.infer_pair(vec![Q13::ZERO; 2], vec![Q13::ZERO; 3]);
+        assert!(err.is_err());
+        // pool still alive afterwards
+        let ok = pool.infer_pair(vec![Q13::ZERO; 3], vec![Q13::ZERO; 3]);
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let (pool, _m) = pool_of(4);
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,199 @@
+//! The von-Neumann baseline driver ("vN-MLMD" in Tables II/III): the
+//! *same* MLMD algorithm — features → MLP forces → Eq. (2)–(3)
+//! integration — executed in floating point on the host, with the MLP
+//! behind a pluggable evaluator so the same driver runs:
+//!
+//! * [`MlpForceModel`] — the float model evaluated in-process;
+//! * `runtime::HloForceModel` — the AOT-lowered JAX graph executed via
+//!   PJRT (the measured vN path of Table III);
+//! * a DeePMD-style model (also via PJRT).
+
+use anyhow::Result;
+
+use crate::features;
+use crate::md::{euler_step, ForceField, System};
+use crate::nn::Mlp;
+use crate::util::Vec3;
+
+/// Something that maps the two hydrogens' feature triples to their
+/// local-frame force coefficients.
+pub trait HForceModel {
+    fn eval(&mut self, feats: &[[f64; 3]; 2]) -> Result<[[f64; 2]; 2]>;
+    fn name(&self) -> String {
+        "h-force-model".into()
+    }
+}
+
+impl HForceModel for Box<dyn HForceModel> {
+    fn eval(&mut self, feats: &[[f64; 3]; 2]) -> Result<[[f64; 2]; 2]> {
+        (**self).eval(feats)
+    }
+    fn name(&self) -> String {
+        (**self).name()
+    }
+}
+
+/// In-process float MLP evaluator.
+pub struct MlpForceModel {
+    pub model: Mlp,
+}
+
+impl HForceModel for MlpForceModel {
+    fn eval(&mut self, feats: &[[f64; 3]; 2]) -> Result<[[f64; 2]; 2]> {
+        let a = self.model.forward_physical(&feats[0]);
+        let b = self.model.forward_physical(&feats[1]);
+        Ok([[a[0], a[1]], [b[0], b[1]]])
+    }
+    fn name(&self) -> String {
+        format!("mlp:{}", self.model.name)
+    }
+}
+
+/// The vN-MLMD driver.
+pub struct VnMlmd<M: HForceModel> {
+    pub sys: System,
+    pub model: M,
+    pub dt: f64,
+    pub steps_done: u64,
+    forces: Vec<Vec3>,
+}
+
+impl<M: HForceModel> VnMlmd<M> {
+    pub fn new(sys: System, model: M, dt: f64) -> Self {
+        assert_eq!(sys.len(), 3, "water driver expects [O, H1, H2]");
+        VnMlmd { sys, model, dt, steps_done: 0, forces: vec![Vec3::ZERO; 3] }
+    }
+
+    /// Evaluate MLP forces for the current positions (features → model →
+    /// local-frame reconstruction → Newton's third law).
+    pub fn eval_forces(&mut self) -> Result<[Vec3; 3]> {
+        let pos = &self.sys.pos;
+        let feats = [features::water_features(pos, 1), features::water_features(pos, 2)];
+        let c = self.model.eval(&feats)?;
+        let f1 = features::water_force_from_local(pos, 1, c[0]);
+        let f2 = features::water_force_from_local(pos, 2, c[1]);
+        Ok([-(f1 + f2), f1, f2])
+    }
+
+    /// One MD step with the paper's Eq. (2)–(3) integrator.
+    pub fn step(&mut self) -> Result<()> {
+        let f = self.eval_forces()?;
+        self.forces.copy_from_slice(&f);
+        // semi-implicit Euler with externally supplied forces: reuse
+        // euler_step against a wrapper field that replays `f`.
+        struct Replay<'a>(&'a [Vec3; 3]);
+        impl ForceField for Replay<'_> {
+            fn compute(&self, _pos: &[Vec3], forces: &mut [Vec3]) -> f64 {
+                forces.copy_from_slice(self.0);
+                0.0
+            }
+        }
+        // euler_step consumes F(t) from `forces` on entry.
+        let replay = Replay(&f);
+        let mut buf = self.forces.clone();
+        euler_step(&mut self.sys, &replay, self.dt, &mut buf);
+        self.steps_done += 1;
+        Ok(())
+    }
+
+    pub fn run(&mut self, n: usize, stride: usize, mut tap: impl FnMut(&[Vec3])) -> Result<()> {
+        for s in 0..n {
+            self.step()?;
+            if stride > 0 && s % stride == 0 {
+                tap(&self.sys.pos);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::initialize_velocities;
+    use crate::nn::Activation;
+    use crate::potentials::WaterPes;
+    use crate::util::rng::Pcg;
+
+    /// Oracle evaluator: local-frame projection of the true PES forces —
+    /// lets us test the driver's feature/frame plumbing exactly.
+    struct OracleModel;
+    impl HForceModel for OracleModel {
+        fn eval(&mut self, _feats: &[[f64; 3]; 2]) -> Result<[[f64; 2]; 2]> {
+            unreachable!("OracleModel used via eval_with_pos tests only")
+        }
+    }
+
+    #[test]
+    fn driver_with_oracle_matches_direct_euler() {
+        // Plug a model that inverts the local-frame encoding of the PES
+        // forces: the driver trajectory must equal plain Euler on the PES.
+        struct PesLocal {
+            pos: Vec<Vec3>,
+        }
+        impl HForceModel for PesLocal {
+            fn eval(&mut self, _f: &[[f64; 3]; 2]) -> Result<[[f64; 2]; 2]> {
+                let pes = WaterPes::dft_surrogate();
+                let mut fr = vec![Vec3::ZERO; 3];
+                pes.compute(&self.pos, &mut fr);
+                Ok([
+                    features::water_force_to_local(&self.pos, 1, fr[1]),
+                    features::water_force_to_local(&self.pos, 2, fr[2]),
+                ])
+            }
+        }
+
+        let pes = WaterPes::dft_surrogate();
+        let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
+        let mut rng = Pcg::new(12);
+        initialize_velocities(&mut sys, 200.0, 6, &mut rng);
+
+        let dt = 0.25;
+        let mut reference = sys.clone();
+        let mut fbuf = vec![Vec3::ZERO; 3];
+        pes.compute(&reference.pos, &mut fbuf);
+
+        let mut driver = VnMlmd::new(sys, PesLocal { pos: Vec::new() }, dt);
+        for _ in 0..500 {
+            driver.model.pos = driver.sys.pos.clone();
+            driver.step().unwrap();
+            euler_step(&mut reference, pes, dt, &mut fbuf);
+        }
+        for i in 0..3 {
+            let d = (driver.sys.pos[i] - reference.pos[i]).norm();
+            assert!(d < 1e-9, "atom {i}: {d}");
+        }
+    }
+
+    #[test]
+    fn mlp_model_drives_without_blowup() {
+        let mut rng = Pcg::new(3);
+        let mut m = Mlp::init_random("t", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.2;
+            }
+        }
+        let pes = WaterPes::dft_surrogate();
+        let sys = System::new(pes.equilibrium(), WaterPes::masses());
+        let mut driver = VnMlmd::new(sys, MlpForceModel { model: m }, 0.25);
+        driver.run(1_000, 0, |_| {}).unwrap();
+        for p in &driver.sys.pos {
+            assert!(p.norm().is_finite());
+        }
+        assert_eq!(driver.steps_done, 1_000);
+    }
+
+    #[test]
+    fn forces_satisfy_newtons_third_law() {
+        let mut rng = Pcg::new(4);
+        let m = Mlp::init_random("t", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        let pes = WaterPes::dft_surrogate();
+        let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
+        sys.pos[1] += Vec3::new(0.03, 0.01, -0.02);
+        let mut driver = VnMlmd::new(sys, MlpForceModel { model: m }, 0.25);
+        let f = driver.eval_forces().unwrap();
+        let net = f[0] + f[1] + f[2];
+        assert!(net.norm() < 1e-12, "net {net:?}");
+    }
+}

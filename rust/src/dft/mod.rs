@@ -1,0 +1,257 @@
+//! Toy self-consistent-field "DFT" engine — the compute-cost surrogate
+//! for the paper's SIESTA AIMD row of Table III.
+//!
+//! Per MD step it performs the structural workload of a small
+//! LCAO DFT code: build a distance-dependent Hamiltonian over a basis of
+//! `n_basis` orbitals, then iterate (diagonalize → occupy → mix density →
+//! rebuild H) to self-consistency — O(n³) dense eigensolves × SCF
+//! iterations, the cost profile the Table III DFT row measures. The
+//! *forces* it returns are delegated to the calibrated PES oracle
+//! (`potentials::WaterPes`), which is also what the training pipeline
+//! treats as the DFT ground truth; the SCF machinery provides honest
+//! compute cost (and a converged toy band energy), not new physics. See
+//! DESIGN.md §Substitutions.
+
+use crate::linalg::{eigh, Mat};
+use crate::md::ForceField;
+use crate::potentials::WaterPes;
+use crate::util::Vec3;
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ScfConfig {
+    /// Orbitals per atom (water: O gets 2×, H 1× this base) — total
+    /// basis ≈ `4 × base` for H₂O.
+    pub orbitals_per_atom: usize,
+    /// Maximum SCF iterations per step.
+    pub max_iter: usize,
+    /// Density-mixing factor.
+    pub mixing: f64,
+    /// Convergence threshold on the density change (Frobenius).
+    pub tol: f64,
+}
+
+impl Default for ScfConfig {
+    fn default() -> Self {
+        // Basis sized so one SCF step costs ~O(10⁶–10⁷) flops and a step
+        // needs O(10) iterations — a "minimal DZP-flavoured" workload.
+        ScfConfig { orbitals_per_atom: 16, max_iter: 60, mixing: 0.5, tol: 1e-6 }
+    }
+}
+
+/// Diagnostics of the last step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScfStats {
+    pub iterations: usize,
+    pub converged: bool,
+    pub band_energy: f64,
+}
+
+/// The toy SCF engine for the water molecule.
+pub struct ToyDft {
+    pub cfg: ScfConfig,
+    pub last: ScfStats,
+    n_basis: usize,
+    /// orbital → atom assignment
+    orb_atom: Vec<usize>,
+    /// persistent density matrix (warm start across MD steps)
+    density: Mat,
+}
+
+impl ToyDft {
+    pub fn new(cfg: ScfConfig) -> Self {
+        // [O, H1, H2]: O carries 2× the base orbitals.
+        let per = [2 * cfg.orbitals_per_atom, cfg.orbitals_per_atom, cfg.orbitals_per_atom];
+        let n_basis: usize = per.iter().sum();
+        let mut orb_atom = Vec::with_capacity(n_basis);
+        for (atom, &count) in per.iter().enumerate() {
+            orb_atom.extend(std::iter::repeat(atom).take(count));
+        }
+        ToyDft {
+            cfg,
+            last: ScfStats::default(),
+            n_basis,
+            orb_atom,
+            density: Mat::eye(n_basis),
+        }
+    }
+
+    pub fn n_basis(&self) -> usize {
+        self.n_basis
+    }
+
+    /// Build the distance-dependent one-electron Hamiltonian: on-site
+    /// energies by element, hoppings decaying exponentially with
+    /// interatomic distance, intra-atomic level spacing, plus a Hartree-
+    /// like diagonal shift from the current density.
+    fn hamiltonian(&self, pos: &[Vec3], density: &Mat) -> Mat {
+        let n = self.n_basis;
+        let mut h = Mat::zeros(n, n);
+        for i in 0..n {
+            let ai = self.orb_atom[i];
+            let onsite = if ai == 0 { -1.2 } else { -0.6 };
+            // level spacing within an atom's block
+            h[(i, i)] = onsite + 0.05 * (i % 7) as f64 + 0.3 * density[(i, i)];
+            for j in i + 1..n {
+                let aj = self.orb_atom[j];
+                let t = if ai == aj {
+                    0.08 // intra-atom coupling
+                } else {
+                    let r = (pos[ai] - pos[aj]).norm();
+                    0.9 * (-1.7 * r).exp()
+                };
+                h[(i, j)] = t;
+                h[(j, i)] = t;
+            }
+        }
+        h
+    }
+
+    /// One self-consistency loop for the given geometry; returns the
+    /// converged band energy.
+    pub fn scf(&mut self, pos: &[Vec3]) -> f64 {
+        let n = self.n_basis;
+        let n_occ = n / 2;
+        let mut density = self.density.clone();
+        let mut stats = ScfStats::default();
+        for it in 0..self.cfg.max_iter {
+            let h = self.hamiltonian(pos, &density);
+            let (vals, vecs) = eigh(&h);
+            // occupy the lowest n_occ orbitals
+            let mut new_density = Mat::zeros(n, n);
+            for k in 0..n_occ {
+                for i in 0..n {
+                    let vik = vecs[(i, k)];
+                    if vik == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        new_density[(i, j)] += vik * vecs[(j, k)];
+                    }
+                }
+            }
+            // mix
+            let mut delta = 0.0;
+            for idx in 0..n * n {
+                let d = new_density.data[idx] - density.data[idx];
+                delta += d * d;
+                density.data[idx] += self.cfg.mixing * d;
+            }
+            stats.iterations = it + 1;
+            stats.band_energy = vals[..n_occ].iter().sum();
+            if delta.sqrt() < self.cfg.tol {
+                stats.converged = true;
+                break;
+            }
+        }
+        self.density = density;
+        self.last = stats;
+        stats.band_energy
+    }
+}
+
+impl ForceField for ToyDft {
+    /// The "AIMD" force call: run the SCF workload, return the oracle
+    /// forces (Hellmann–Feynman stand-in; see module docs).
+    fn compute(&self, pos: &[Vec3], forces: &mut [Vec3]) -> f64 {
+        // interior mutability dance: SCF needs &mut for the density warm
+        // start; ForceField::compute takes &self. Clone a worker.
+        let mut worker = ToyDft {
+            cfg: self.cfg,
+            last: self.last,
+            n_basis: self.n_basis,
+            orb_atom: self.orb_atom.clone(),
+            density: self.density.clone(),
+        };
+        let band = worker.scf(pos);
+        let pes_e = WaterPes::dft_surrogate().compute(pos, forces);
+        // report the PES energy (the physically calibrated one); band
+        // energy available via stats for diagnostics
+        let _ = band;
+        pes_e
+    }
+
+    fn name(&self) -> &'static str {
+        "toy-scf-dft"
+    }
+}
+
+impl ToyDft {
+    /// The stateful step used by the Table III timing run (keeps the
+    /// density warm start, which is how real AIMD amortizes SCF).
+    pub fn aimd_force_step(&mut self, pos: &[Vec3], forces: &mut [Vec3]) -> f64 {
+        self.scf(pos);
+        WaterPes::dft_surrogate().compute(pos, forces)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Vec<Vec3> {
+        WaterPes::dft_surrogate().equilibrium()
+    }
+
+    #[test]
+    fn scf_converges_at_equilibrium() {
+        let mut dft = ToyDft::new(ScfConfig::default());
+        let e = dft.scf(&geom());
+        assert!(dft.last.converged, "SCF did not converge: {:?}", dft.last);
+        assert!(e < 0.0, "band energy should be negative: {e}");
+        assert!(dft.last.iterations >= 3, "suspiciously fast: {:?}", dft.last);
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let mut dft = ToyDft::new(ScfConfig::default());
+        let mut pos = geom();
+        dft.scf(&pos);
+        let cold = dft.last.iterations;
+        // tiny geometry change → warm density should reconverge faster
+        pos[1] += Vec3::new(0.002, 0.0, 0.0);
+        dft.scf(&pos);
+        let warm = dft.last.iterations;
+        assert!(warm <= cold, "warm {warm} vs cold {cold}");
+    }
+
+    #[test]
+    fn band_energy_responds_to_geometry() {
+        let mut dft = ToyDft::new(ScfConfig::default());
+        let e0 = dft.scf(&geom());
+        let mut stretched = geom();
+        stretched[1] = stretched[1] * 1.3;
+        let e1 = dft.scf(&stretched);
+        assert!((e0 - e1).abs() > 1e-6, "band energy insensitive to geometry");
+    }
+
+    #[test]
+    fn forces_are_the_calibrated_oracle() {
+        let dft = ToyDft::new(ScfConfig { orbitals_per_atom: 4, max_iter: 8, ..Default::default() });
+        let mut f_dft = vec![Vec3::ZERO; 3];
+        let mut f_pes = vec![Vec3::ZERO; 3];
+        let mut pos = geom();
+        pos[2] += Vec3::new(0.02, -0.03, 0.01);
+        let e_dft = dft.compute(&pos, &mut f_dft);
+        let e_pes = WaterPes::dft_surrogate().compute(&pos, &mut f_pes);
+        assert_eq!(e_dft, e_pes);
+        for (a, b) in f_dft.iter().zip(&f_pes) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn cost_scales_with_basis() {
+        use std::time::Instant;
+        let mut small = ToyDft::new(ScfConfig { orbitals_per_atom: 4, max_iter: 10, ..Default::default() });
+        let mut big = ToyDft::new(ScfConfig { orbitals_per_atom: 12, max_iter: 10, ..Default::default() });
+        let pos = geom();
+        let t0 = Instant::now();
+        small.scf(&pos);
+        let ts = t0.elapsed();
+        let t1 = Instant::now();
+        big.scf(&pos);
+        let tb = t1.elapsed();
+        assert!(tb > ts, "bigger basis must cost more ({ts:?} vs {tb:?})");
+    }
+}

@@ -1,0 +1,105 @@
+//! E8 — paper Fig. 10: normalized vibrational DOS of the three water
+//! modes (symmetric stretch, asymmetric stretch, bend) for all four
+//! methods, written as CSV series (wavenumber, power per method).
+
+use anyhow::Result;
+
+use crate::analysis::spectrum::{mode_spectrum, Dos};
+use crate::util::json::{self, Value};
+
+use super::water_md;
+use super::{load_model, Report};
+
+const MODES: [&str; 3] = ["symmetric_stretch", "asymmetric_stretch", "bending"];
+
+fn spectra(series: &crate::analysis::WaterSeries, dt: f64) -> [Dos; 3] {
+    let [sym, asym, bend] = series.mode_signals();
+    [
+        mode_spectrum(&sym, dt),
+        mode_spectrum(&asym, dt),
+        mode_spectrum(&bend, dt),
+    ]
+}
+
+pub fn run(quick: bool) -> Result<Report> {
+    let mut report = Report::new("Fig. 10 — vibrational DOS, three modes × four methods");
+    let steps = if quick { 8_000 } else { 48_000 };
+    let dt = 0.25;
+    let seed = 42;
+
+    let (s_dft, p_dft) = water_md::run_dft(steps, dt, seed);
+    let (vn_model, _) = water_md::vn_model("water_mlp.hlo.txt", "water_qnn_k3")?;
+    let (s_vn, p_vn) = water_md::run_vn(vn_model, steps, dt, seed)?;
+    let model = load_model("water_qnn_k3")?;
+    let (s_nvn, p_nvn, _) = water_md::run_nvn(&model, model.quant_k.max(3), steps, dt, seed, false)?;
+    let (dp_model, _) = water_md::vn_model("water_deepmd.hlo.txt", "water_deepmd_like")?;
+    let (s_dp, p_dp) = water_md::run_vn(dp_model, steps, dt, seed)?;
+
+    let all = [
+        ("dft", spectra(&s_dft, dt)),
+        ("vn_mlmd", spectra(&s_vn, dt)),
+        ("nvn_mlmd", spectra(&s_nvn, dt)),
+        ("deepmd_like", spectra(&s_dp, dt)),
+    ];
+
+    // One CSV per mode: wavenumber, then a power column per method,
+    // restricted to the mode's band.
+    for (mi, mode) in MODES.iter().enumerate() {
+        let band = if mi == 2 { water_md::BEND_BAND } else { water_md::STRETCH_BAND };
+        let windows: Vec<Dos> = all.iter().map(|(_n, sp)| sp[mi].window(band.0, band.1)).collect();
+        let n = windows.iter().map(|d| d.wavenumber.len()).min().unwrap_or(0);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let mut row = vec![windows[0].wavenumber[i]];
+                row.extend(windows.iter().map(|d| d.power[i]));
+                row
+            })
+            .collect();
+        report.save_csv(
+            &format!("fig10_{mode}"),
+            "wavenumber_cm1,dft,vn_mlmd,nvn_mlmd,deepmd_like",
+            &rows,
+        )?;
+    }
+
+    // Peak table like the visual peaks of Fig. 10.
+    let peak_rows: Vec<Vec<String>> = [
+        ("DFT", p_dft),
+        ("vN-MLMD", p_vn),
+        ("NvN-MLMD", p_nvn),
+        ("DeePMD-like", p_dp),
+    ]
+    .iter()
+    .map(|(n, p)| {
+        vec![
+            n.to_string(),
+            format!("{:.0}", p.nu_sym),
+            format!("{:.0}", p.nu_asym),
+            format!("{:.0}", p.nu_bend),
+        ]
+    })
+    .collect();
+    report.table(
+        "DOS peak locations (cm⁻¹)",
+        &["method", "sym", "asym", "bend"],
+        &peak_rows,
+    );
+    report.attach(
+        "peaks",
+        Value::Arr(
+            [("dft", p_dft), ("vn", p_vn), ("nvn", p_nvn), ("deepmd", p_dp)]
+                .iter()
+                .map(|(n, p)| {
+                    json::obj(vec![
+                        ("method", json::s(n)),
+                        ("sym", json::num(p.nu_sym)),
+                        ("asym", json::num(p.nu_asym)),
+                        ("bend", json::num(p.nu_bend)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    report.save("fig10")?;
+    Ok(report)
+}

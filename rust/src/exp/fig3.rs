@@ -1,0 +1,94 @@
+//! E1/E2 — paper Fig. 3: (a) tanh vs φ curves, (b) transistor counts of
+//! the two activation circuits.
+
+use anyhow::Result;
+
+use crate::hw::synth;
+use crate::nn::activation::{phi, tanh_cordic};
+use crate::util::json::{self, Value};
+
+use super::Report;
+
+/// Fig. 3(a): sampled curves (CSV artifact) + deviation summary.
+pub fn run_curves() -> Result<Report> {
+    let mut report = Report::new("Fig. 3(a) — tanh(x) vs φ(x)");
+    let mut rows = Vec::new();
+    let mut max_dev: f64 = 0.0;
+    let mut x = -4.0f64;
+    while x <= 4.0 + 1e-9 {
+        let t = x.tanh();
+        let p = phi(x);
+        let c = tanh_cordic(x.clamp(-1.1, 1.1), 14, 16);
+        rows.push(vec![x, t, p, c]);
+        max_dev = max_dev.max((t - p).abs());
+        x += 0.02;
+    }
+    report.save_csv("fig3a_curves", "x,tanh,phi,cordic_tanh_native_range", &rows)?;
+    report.note(format!("max |tanh − φ| on [−4,4]: {max_dev:.4} (curves nearly coincide near 0)"));
+    report.note("paper: \"tanh(x) and φ(x) are similar at the numerical value\"");
+    report.attach("max_deviation", json::num(max_dev));
+    report.save("fig3a")?;
+    Ok(report)
+}
+
+/// Fig. 3(b): transistor counts from the synthesis model.
+pub fn run_transistors() -> Result<Report> {
+    let mut report = Report::new("Fig. 3(b) — transistor cost of the activation circuits");
+    let tanh_net = synth::tanh_cordic_unit(synth::CORDIC_BITS, synth::CORDIC_ITERS);
+    let phi_net = synth::phi_unit(synth::Q13_BITS);
+    let t_tanh = tanh_net.transistors();
+    let t_phi = phi_net.transistors();
+
+    let rows = vec![
+        vec![
+            "tanh (CORDIC, 16-bit × 14 iter)".to_string(),
+            t_tanh.to_string(),
+            synth::PAPER_TANH_T.to_string(),
+            format!("{:.2}", t_tanh as f64 / synth::PAPER_TANH_T as f64),
+        ],
+        vec![
+            "φ(x) unit (13-bit, Fig. 7 AU)".to_string(),
+            t_phi.to_string(),
+            synth::PAPER_PHI_T.to_string(),
+            format!("{:.2}", t_phi as f64 / synth::PAPER_PHI_T as f64),
+        ],
+    ];
+    report.table(
+        "Transistors (measured model vs paper DC report)",
+        &["circuit", "measured", "paper", "ratio"],
+        &rows,
+    );
+    report.note(format!(
+        "φ/tanh = {:.1}% (paper: 8%)",
+        100.0 * t_phi as f64 / t_tanh as f64
+    ));
+    for (prim, n, t) in phi_net.breakdown() {
+        report.note(format!("φ breakdown: {prim:?} ×{n} = {t} T"));
+    }
+    report.attach(
+        "measured",
+        json::obj(vec![
+            ("tanh", Value::Num(t_tanh as f64)),
+            ("phi", Value::Num(t_phi as f64)),
+        ]),
+    );
+    report.save("fig3b")?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_reports_build() {
+        let dir = std::env::temp_dir().join("nvnmd_fig3_test");
+        std::env::set_var("NVNMD_ARTIFACTS", &dir);
+        let a = run_curves().unwrap();
+        assert!(a.render().contains("tanh"));
+        let b = run_transistors().unwrap();
+        assert!(b.render().contains("transistor") || b.render().contains("Transistors"));
+        std::env::remove_var("NVNMD_ARTIFACTS");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

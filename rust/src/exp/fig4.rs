@@ -1,0 +1,112 @@
+//! E4 — paper Fig. 4: CNN vs QNN accuracy for K = 1..5 on the six
+//! datasets. QNN RMSEs are evaluated through the Rust **Q13 shift–add
+//! datapath** (`nn::Sqnn`) — the same bit-accurate arithmetic the ASIC
+//! simulator runs — so this is the chip-level accuracy, not a float
+//! proxy.
+
+use anyhow::Result;
+
+use crate::analysis::rmse_vecs;
+use crate::nn::Sqnn;
+use crate::util::json::{self, Value};
+
+use super::{load_dataset, load_model, Report};
+use super::table1::SYSTEMS;
+
+pub struct SystemSweep {
+    pub system: String,
+    pub cnn_mev: f64,
+    /// QNN RMSE (meV/Å) for K = 1..5.
+    pub qnn_mev: [f64; 5],
+}
+
+impl SystemSweep {
+    /// RMSE ratio CNN/QNN per K (the paper's secondary axis).
+    pub fn ratio(&self) -> [f64; 5] {
+        self.qnn_mev.map(|q| self.cnn_mev / q)
+    }
+}
+
+pub fn compute() -> Result<Vec<SystemSweep>> {
+    let mut out = Vec::new();
+    for name in SYSTEMS {
+        let ds = load_dataset(name)?;
+        let cnn = load_model(&format!("{name}_cnn_phi"))?;
+        let cnn_preds: Vec<Vec<f64>> = ds.test_x.iter().map(|x| cnn.forward_physical(x)).collect();
+        let cnn_rmse = 1000.0 * rmse_vecs(&cnn_preds, &ds.test_y);
+        let mut qnn = [0.0; 5];
+        for k in 1..=5usize {
+            let m = load_model(&format!("{name}_qnn_k{k}"))?;
+            // chip-level evaluation: Q13 features, shift-add MACs; the
+            // output rescale is the FPGA's free power-of-two shift
+            let s = Sqnn::from_mlp(&m, k);
+            let scale = m.output_scale;
+            let preds: Vec<Vec<f64>> = ds
+                .test_x
+                .iter()
+                .map(|x| s.forward(x).into_iter().map(|v| v * scale).collect())
+                .collect();
+            qnn[k - 1] = 1000.0 * rmse_vecs(&preds, &ds.test_y);
+        }
+        out.push(SystemSweep { system: name.to_string(), cnn_mev: cnn_rmse, qnn_mev: qnn });
+    }
+    Ok(out)
+}
+
+pub fn run() -> Result<Report> {
+    let mut report = Report::new("Fig. 4 — CNN vs QNN (Q13 chip datapath) across K");
+    let sweeps = compute()?;
+    let mut table = Vec::new();
+    let mut data = Vec::new();
+    for s in &sweeps {
+        table.push(vec![
+            s.system.clone(),
+            format!("{:.2}", s.cnn_mev),
+            format!("{:.2}", s.qnn_mev[0]),
+            format!("{:.2}", s.qnn_mev[1]),
+            format!("{:.2}", s.qnn_mev[2]),
+            format!("{:.2}", s.qnn_mev[3]),
+            format!("{:.2}", s.qnn_mev[4]),
+        ]);
+        data.push(json::obj(vec![
+            ("system", json::s(&s.system)),
+            ("cnn_mev", json::num(s.cnn_mev)),
+            ("qnn_mev", json::arr_f64(&s.qnn_mev)),
+        ]));
+    }
+    report.table(
+        "Force RMSE (meV/Å); QNN through the bit-accurate shift datapath",
+        &["system", "CNN", "K=1", "K=2", "K=3", "K=4", "K=5"],
+        &table,
+    );
+    // Shape claims of the paper.
+    let mut k1_worse = 0;
+    let mut k3_converged = 0;
+    for s in &sweeps {
+        if s.qnn_mev[0] > 1.3 * s.qnn_mev[2] {
+            k1_worse += 1;
+        }
+        if s.qnn_mev[4] > 0.75 * s.qnn_mev[2] {
+            k3_converged += 1;
+        }
+        report.note(format!(
+            "{}: K=3 loss vs CNN = {:+.1}% (paper band: 6.5–12%)",
+            s.system,
+            100.0 * (s.qnn_mev[2] - s.cnn_mev) / s.cnn_mev
+        ));
+    }
+    report.note(format!(
+        "K=1 clearly worse than K=3 on {k1_worse}/6 systems; K≥3 plateau on {k3_converged}/6"
+    ));
+    report.attach("systems", Value::Arr(data));
+    let csv: Vec<Vec<f64>> = sweeps
+        .iter()
+        .enumerate()
+        .flat_map(|(i, s)| {
+            (1..=5).map(move |k| vec![i as f64, k as f64, s.qnn_mev[k - 1], s.cnn_mev])
+        })
+        .collect();
+    report.save_csv("fig4_sweep", "system_index,k,qnn_mev,cnn_mev", &csv)?;
+    report.save("fig4")?;
+    Ok(report)
+}

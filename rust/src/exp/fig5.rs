@@ -1,0 +1,126 @@
+//! E5 — paper Fig. 5: hardware overhead of shift-based SQNN relative to
+//! multiplier-based FQNN (16-bit) for K = 1..5 across the six network
+//! sizes. Pure synthesis-model experiment (no trained artifacts needed).
+
+use anyhow::Result;
+
+use crate::datasets::all_specs;
+use crate::hw::synth::{mlp_netlist, WeightDatapath, FQNN_BITS, Q13_BITS};
+use crate::util::json::{self, Value};
+
+use super::Report;
+
+pub struct Row {
+    pub system: String,
+    pub arch: Vec<usize>,
+    pub fqnn_t: u64,
+    /// SQNN transistors for K = 1..5.
+    pub sqnn_t: [u64; 5],
+}
+
+impl Row {
+    /// N^s_K / N^m × 100% (the paper's y-axis).
+    pub fn ratio_pct(&self) -> [f64; 5] {
+        self.sqnn_t.map(|s| 100.0 * s as f64 / self.fqnn_t as f64)
+    }
+}
+
+pub fn compute() -> Vec<Row> {
+    all_specs()
+        .iter()
+        .map(|spec| {
+            let fqnn = mlp_netlist(&spec.arch, FQNN_BITS, WeightDatapath::Multiplier).transistors();
+            let mut sqnn = [0u64; 5];
+            for k in 1..=5u64 {
+                sqnn[(k - 1) as usize] =
+                    mlp_netlist(&spec.arch, Q13_BITS, WeightDatapath::Shift { k }).transistors();
+            }
+            Row { system: spec.name.to_string(), arch: spec.arch.clone(), fqnn_t: fqnn, sqnn_t: sqnn }
+        })
+        .collect()
+}
+
+pub fn run() -> Result<Report> {
+    let mut report = Report::new("Fig. 5 — SQNN/FQNN transistor ratio (N^s_K / N^m)");
+    let rows = compute();
+    let mut table = Vec::new();
+    let mut data = Vec::new();
+    for r in &rows {
+        let pct = r.ratio_pct();
+        table.push(vec![
+            format!("{} {:?}", r.system, r.arch),
+            r.fqnn_t.to_string(),
+            format!("{:.0}%", pct[0]),
+            format!("{:.0}%", pct[1]),
+            format!("{:.0}%", pct[2]),
+            format!("{:.0}%", pct[3]),
+            format!("{:.0}%", pct[4]),
+        ]);
+        data.push(json::obj(vec![
+            ("system", json::s(&r.system)),
+            ("fqnn_t", json::num(r.fqnn_t as f64)),
+            (
+                "sqnn_t",
+                json::arr_f64(&r.sqnn_t.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+            ),
+        ]));
+    }
+    report.table(
+        "Transistor ratio vs K (FQNN = 16-bit multiplier datapath)",
+        &["system (arch)", "FQNN T", "K=1", "K=2", "K=3", "K=4", "K=5"],
+        &table,
+    );
+    // Paper claims: at K=3, 50–70% savings; bigger systems save more;
+    // K=4/5 add ~10–20% cost over K=3.
+    let k3: Vec<f64> = rows.iter().map(|r| r.ratio_pct()[2]).collect();
+    report.note(format!(
+        "K=3 ratios: {:?} (paper: ~30–50%, i.e. 50–70% saving)",
+        k3.iter().map(|x| format!("{x:.0}%")).collect::<Vec<_>>()
+    ));
+    let k5_over_k3: Vec<f64> = rows
+        .iter()
+        .map(|r| 100.0 * (r.sqnn_t[4] as f64 / r.sqnn_t[2] as f64 - 1.0))
+        .collect();
+    report.note(format!(
+        "K=5 over K=3 extra cost: {:?} (paper: ~10–20%)",
+        k5_over_k3.iter().map(|x| format!("{x:.0}%")).collect::<Vec<_>>()
+    ));
+    report.attach("rows", Value::Arr(data));
+    let csv: Vec<Vec<f64>> = rows
+        .iter()
+        .enumerate()
+        .flat_map(|(i, r)| {
+            let pct = r.ratio_pct();
+            (1..=5).map(move |k| vec![i as f64, k as f64, pct[k - 1]])
+        })
+        .collect();
+    report.save_csv("fig5_ratio", "system_index,k,ratio_pct", &csv)?;
+    report.save("fig5")?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_claims() {
+        let rows = compute();
+        assert_eq!(rows.len(), 6);
+        // ratio falls with system complexity at K=3
+        let k3: Vec<f64> = rows.iter().map(|r| r.ratio_pct()[2]).collect();
+        for w in k3.windows(2) {
+            assert!(w[1] <= w[0] + 2.0, "ratios {k3:?}");
+        }
+        // ratio grows with K for every system
+        for r in &rows {
+            let p = r.ratio_pct();
+            assert!(p.windows(2).all(|w| w[1] > w[0]), "{p:?}");
+        }
+        // headline band at K=3 for the non-trivial systems
+        for r in &rows[1..] {
+            let p3 = r.ratio_pct()[2];
+            assert!((25.0..=55.0).contains(&p3), "{}: {p3}", r.system);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! E6 — paper Fig. 9: atomic forces predicted by the MLP chip vs the DFT
+//! reference, on fresh configurations. The chip path is the full
+//! pipeline — Q13 feature quantization → shift–add MLP (via the threaded
+//! `ChipPool`) → local-frame reconstruction — compared against the
+//! surrogate-PES forces in Cartesian space (meV/Å RMSE, like the paper).
+
+use anyhow::Result;
+
+use crate::analysis;
+use crate::asic::{ChipConfig, MlpChip};
+use crate::coordinator::pool::ChipPool;
+use crate::features;
+use crate::fixedpoint::Q13;
+use crate::md::{initialize_velocities, Engine, ForceField, System};
+use crate::potentials::WaterPes;
+use crate::util::json::{self, Value};
+use crate::util::rng::Pcg;
+use crate::util::Vec3;
+
+use super::{load_model, Report};
+
+/// Paper's measured chip RMSE (meV/Å).
+pub const PAPER_RMSE: f64 = 7.56;
+
+pub struct ChipEval {
+    /// (DFT force component, chip force component) pairs — the scatter.
+    pub scatter: Vec<(f64, f64)>,
+    pub rmse_mev: f64,
+}
+
+/// Sample `n_frames` fresh configurations (400 K MD, unseen seed) and
+/// push them through the chip pool.
+pub fn compute(n_frames: usize) -> Result<ChipEval> {
+    let model = load_model("water_qnn_k3")?;
+    let k = model.quant_k.max(3);
+    let chips: Vec<MlpChip> = (0..2)
+        .map(|id| {
+            let mut c = MlpChip::new(id, ChipConfig::default());
+            c.program(&model, k);
+            c
+        })
+        .collect();
+    let mut pool = ChipPool::spawn(chips);
+
+    // Fresh configurations from re-initialized NVE bursts (same protocol
+    // as the training sampler, held-out seed — see datasets::water_dataset
+    // for why not a thermostatted trajectory).
+    let pes = WaterPes::dft_surrogate();
+    let mut rng = Pcg::new(0xF19); // held-out seed
+    let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
+    initialize_velocities(&mut sys, 2.0 * 350.0, 6, &mut rng);
+    let mut eng = Engine::new(sys, pes, 0.25);
+    for _ in 0..400 {
+        eng.step_verlet();
+    }
+
+    let mut scatter = Vec::new();
+    let mut se = 0.0;
+    let mut n = 0usize;
+    for frame in 0..n_frames {
+        if frame % 40 == 39 {
+            // re-draw velocities: new NVE burst
+            initialize_velocities(&mut eng.sys, 2.0 * 350.0, 6, &mut rng);
+            for _ in 0..400 {
+                eng.step_verlet();
+            }
+        }
+        for _ in 0..8 {
+            eng.step_verlet();
+        }
+        let pos = eng.sys.pos.clone();
+        let mut f_ref = vec![Vec3::ZERO; 3];
+        pes.compute(&pos, &mut f_ref);
+
+        // chip path: FPGA feature conditioning (constant-subtract + pow2
+        // gain) then the Q13 bus
+        let rows: Vec<Vec<Q13>> = [1usize, 2]
+            .iter()
+            .map(|&h| {
+                model
+                    .condition(&features::water_features(&pos, h))
+                    .iter()
+                    .map(|&x| Q13::from_f64(x))
+                    .collect()
+            })
+            .collect();
+        let outs = pool.infer_batch(&rows)?;
+        for (hi, h) in [1usize, 2].iter().enumerate() {
+            // the FPGA's power-of-two output rescale
+            let c = [
+                outs[hi][0].to_f64() * model.output_scale,
+                outs[hi][1].to_f64() * model.output_scale,
+            ];
+            let f_chip = features::water_force_from_local(&pos, *h, c);
+            let f_true = f_ref[*h];
+            for (a, b) in f_chip.to_array().iter().zip(f_true.to_array()) {
+                scatter.push((b, *a));
+                se += (a - b) * (a - b);
+                n += 1;
+            }
+        }
+    }
+    Ok(ChipEval { scatter, rmse_mev: 1000.0 * (se / n as f64).sqrt() })
+}
+
+pub fn run() -> Result<Report> {
+    let mut report = Report::new("Fig. 9 — MLP-chip forces vs DFT surrogate");
+    let eval = compute(600)?;
+    report.note(format!(
+        "chip force RMSE = {:.2} meV/Å over {} components (paper: {PAPER_RMSE} meV/Å)",
+        eval.rmse_mev,
+        eval.scatter.len()
+    ));
+    let spread = analysis::mean_std(&eval.scatter.iter().map(|p| p.0).collect::<Vec<_>>()).1;
+    report.note(format!(
+        "force spread σ = {:.3} eV/Å ⇒ relative error {:.1}%",
+        spread,
+        0.1 * eval.rmse_mev / spread
+    ));
+    let csv: Vec<Vec<f64>> = eval.scatter.iter().map(|&(d, c)| vec![d, c]).collect();
+    report.save_csv("fig9_scatter", "dft_force_evA,chip_force_evA", &csv)?;
+    report.attach("rmse_mev", json::num(eval.rmse_mev));
+    report.attach("n_points", Value::Num(eval.scatter.len() as f64));
+    report.save("fig9")?;
+    Ok(report)
+}

@@ -1,0 +1,96 @@
+//! `nvnmd gen-data` — the build-time dataset generator (consumed by the
+//! Python trainer) plus the cross-language quantizer parity vectors.
+
+use anyhow::Result;
+
+use crate::datasets;
+use crate::quant;
+use crate::util::json::{self, Value};
+
+pub fn run(out_dir: &str, quick: bool) -> Result<()> {
+    let out = std::path::Path::new(out_dir);
+    std::fs::create_dir_all(out)?;
+    for mut spec in datasets::all_specs() {
+        if quick {
+            spec.n_configs = (spec.n_configs / 10).max(8);
+        }
+        let t0 = std::time::Instant::now();
+        let ds = match spec.name {
+            "water" => datasets::water_dataset(&spec),
+            "silicon" => datasets::silicon_dataset(&spec),
+            name => {
+                let mol = match name {
+                    "ethanol" => crate::potentials::ff::ethanol(),
+                    "toluene" => crate::potentials::ff::toluene(),
+                    "naphthalene" => crate::potentials::ff::naphthalene(),
+                    "aspirin" => crate::potentials::ff::aspirin(),
+                    other => anyhow::bail!("unknown system {other}"),
+                };
+                datasets::molecule_dataset(&spec, mol)
+            }
+        };
+        let path = out.join(format!("{}.json", spec.name));
+        ds.save(&path)?;
+        println!(
+            "  {}: {} train / {} test rows ({} features) in {:.1}s → {}",
+            spec.name,
+            ds.n_train(),
+            ds.n_test(),
+            ds.feature_dim,
+            t0.elapsed().as_secs_f64(),
+            path.display()
+        );
+    }
+    write_quant_vectors(out.parent().unwrap_or(out))?;
+    Ok(())
+}
+
+/// Deterministic quantizer test vectors for the Python parity test.
+fn write_quant_vectors(dir: &std::path::Path) -> Result<()> {
+    let mut vectors = Vec::new();
+    let mut w = 1e-4f64;
+    while w < 4.0 {
+        for k in 1..=5usize {
+            for sign in [1.0, -1.0] {
+                let q = quant::quantize_weight(sign * w, k);
+                vectors.push(json::obj(vec![
+                    ("w", json::num(sign * w)),
+                    ("k", json::num(k as f64)),
+                    ("sign", json::num(q.sign as f64)),
+                    ("exps", json::arr_i32(&q.exps)),
+                    ("value", json::num(q.value())),
+                ]));
+            }
+        }
+        w *= 1.37;
+    }
+    let doc = json::obj(vec![
+        ("note", json::s("rust quant::quantize_weight outputs; python must match exactly")),
+        ("vectors", Value::Arr(vectors)),
+    ]);
+    let path = dir.join("quant_vectors.json");
+    json::write_file(&path, &doc)?;
+    println!("  quant vectors → {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_generation_writes_all_artifacts() {
+        let dir = std::env::temp_dir().join("nvnmd_gen_data_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        run(dir.join("datasets").to_str().unwrap(), true).unwrap();
+        for name in ["water", "ethanol", "toluene", "naphthalene", "aspirin", "silicon"] {
+            let p = dir.join("datasets").join(format!("{name}.json"));
+            assert!(p.exists(), "{p:?}");
+        }
+        assert!(dir.join("quant_vectors.json").exists());
+        // parse one back
+        let ds = crate::datasets::Dataset::load(&dir.join("datasets/ethanol.json")).unwrap();
+        assert_eq!(ds.feature_dim, 32);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

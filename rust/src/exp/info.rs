@@ -1,0 +1,46 @@
+//! `nvnmd info` — artifact inventory and environment check.
+
+use anyhow::Result;
+
+use super::Report;
+
+pub fn run() -> Result<Report> {
+    let mut report = Report::new("environment & artifact inventory");
+
+    match crate::runtime::Runtime::cpu() {
+        Ok(rt) => report.note(format!("PJRT: ok (platform {})", rt.platform())),
+        Err(e) => report.note(format!("PJRT: UNAVAILABLE — {e}")),
+    };
+
+    let mut rows = Vec::new();
+    for (kind, rel) in [
+        ("dataset", "datasets/water.json"),
+        ("dataset", "datasets/ethanol.json"),
+        ("dataset", "datasets/toluene.json"),
+        ("dataset", "datasets/naphthalene.json"),
+        ("dataset", "datasets/aspirin.json"),
+        ("dataset", "datasets/silicon.json"),
+        ("quant vectors", "quant_vectors.json"),
+        ("model", "models/water_cnn_phi.json"),
+        ("model", "models/water_cnn_tanh.json"),
+        ("model", "models/water_qnn_k3.json"),
+        ("model", "models/water_deepmd_like.json"),
+        ("model metrics", "models/metrics.json"),
+        ("HLO", "water_mlp.hlo.txt"),
+        ("HLO", "water_mlp_cnn.hlo.txt"),
+        ("HLO", "water_md_step.hlo.txt"),
+        ("HLO", "water_deepmd.hlo.txt"),
+        ("HLO", "water_mlp_shiftkernel.hlo.txt"),
+    ] {
+        let p = crate::artifact_path(rel);
+        let status = if p.exists() {
+            let bytes = std::fs::metadata(&p).map(|m| m.len()).unwrap_or(0);
+            format!("ok ({bytes} B)")
+        } else {
+            "MISSING (run `make artifacts`)".into()
+        };
+        rows.push(vec![kind.to_string(), rel.to_string(), status]);
+    }
+    report.table("artifacts", &["kind", "path", "status"], &rows);
+    Ok(report)
+}

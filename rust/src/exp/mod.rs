@@ -1,0 +1,156 @@
+//! Experiment implementations (E1–E10 of DESIGN.md) shared by the CLI
+//! (`nvnmd <cmd>`) and the bench targets (`cargo bench`). Each module
+//! returns a [`Report`] — rendered tables/notes plus a JSON artifact
+//! under `artifacts/report/`.
+
+pub mod gen_data;
+pub mod fig3;
+pub mod table1;
+pub mod fig4;
+pub mod fig5;
+pub mod fig9;
+pub mod table2;
+pub mod fig10;
+pub mod table3;
+pub mod scaling;
+pub mod run_md;
+pub mod info;
+pub mod water_md;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::nn::Mlp;
+use crate::util::json::{self, Value};
+use crate::util::table;
+
+/// A rendered experiment result.
+pub struct Report {
+    pub title: String,
+    body: String,
+    data: Vec<(String, Value)>,
+    pub saved_to: Option<PathBuf>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Report { title: title.to_string(), body: String::new(), data: Vec::new(), saved_to: None }
+    }
+
+    pub fn table(&mut self, caption: &str, headers: &[&str], rows: &[Vec<String>]) -> &mut Self {
+        self.body.push_str(&format!("\n{caption}\n"));
+        self.body.push_str(&table::render(headers, rows));
+        self
+    }
+
+    pub fn note(&mut self, text: impl std::fmt::Display) -> &mut Self {
+        self.body.push_str(&format!("  • {text}\n"));
+        self
+    }
+
+    pub fn attach(&mut self, key: &str, v: Value) -> &mut Self {
+        self.data.push((key.to_string(), v));
+        self
+    }
+
+    /// Persist the JSON artifact under `artifacts/report/<slug>.json`.
+    pub fn save(&mut self, slug: &str) -> Result<()> {
+        let mut fields = vec![("title".to_string(), json::s(&self.title))];
+        fields.extend(self.data.iter().cloned());
+        let path = crate::artifact_path("report").join(format!("{slug}.json"));
+        json::write_file(&path, &Value::Obj(fields))?;
+        self.saved_to = Some(path);
+        Ok(())
+    }
+
+    /// Also write a CSV next to the JSON (for figures).
+    pub fn save_csv(&mut self, slug: &str, header: &str, rows: &[Vec<f64>]) -> Result<()> {
+        let path = crate::artifact_path("report").join(format!("{slug}.csv"));
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut text = String::from(header);
+        text.push('\n');
+        for row in rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            text.push_str(&cells.join(","));
+            text.push('\n');
+        }
+        std::fs::write(&path, text)?;
+        self.note(format!("CSV: {}", path.display()));
+        Ok(())
+    }
+
+    pub fn render(&self) -> String {
+        format!("== {} ==\n{}", self.title, self.body)
+    }
+}
+
+/// Load a trained model artifact by stem (e.g. `water_qnn_k3`).
+pub fn load_model(stem: &str) -> Result<Mlp> {
+    let path = crate::artifact_path(&format!("models/{stem}.json"));
+    Mlp::load(&path).with_context(|| {
+        format!(
+            "loading model artifact {} — run `make artifacts` first",
+            path.display()
+        )
+    })
+}
+
+/// Load a dataset artifact by name.
+pub fn load_dataset(name: &str) -> Result<crate::datasets::Dataset> {
+    let path = crate::artifact_path(&format!("datasets/{name}.json"));
+    crate::datasets::Dataset::load(&path).with_context(|| {
+        format!(
+            "loading dataset artifact {} — run `make artifacts` first",
+            path.display()
+        )
+    })
+}
+
+/// All experiments for `nvnmd all`.
+#[allow(clippy::type_complexity)]
+pub fn all_experiments(quick: bool) -> Vec<(&'static str, Box<dyn FnOnce() -> Result<Report>>)> {
+    vec![
+        ("fig3a", Box::new(fig3::run_curves) as Box<dyn FnOnce() -> Result<Report>>),
+        ("fig3b", Box::new(fig3::run_transistors)),
+        ("table1", Box::new(table1::run)),
+        ("fig4", Box::new(fig4::run)),
+        ("fig5", Box::new(fig5::run)),
+        ("fig9", Box::new(fig9::run)),
+        ("table2", Box::new(move || table2::run(table2::Config::with_quick(quick)))),
+        ("fig10", Box::new(move || fig10::run(quick))),
+        ("table3", Box::new(move || table3::run(quick))),
+        ("scaling", Box::new(scaling::run)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_tables_and_notes() {
+        let mut r = Report::new("demo");
+        r.note("hello");
+        r.table("cap", &["a", "b"], &[vec!["1".into(), "2".into()]]);
+        let text = r.render();
+        assert!(text.contains("demo") && text.contains("hello") && text.contains("cap"));
+        assert!(text.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn report_saves_json() {
+        let dir = std::env::temp_dir().join("nvnmd_test_report");
+        std::env::set_var("NVNMD_ARTIFACTS", &dir);
+        let mut r = Report::new("t");
+        r.attach("x", json::num(1.5));
+        r.save("unit_test_report").unwrap();
+        let path = r.saved_to.clone().unwrap();
+        let v = json::read_file(&path).unwrap();
+        assert_eq!(v.get("x").unwrap().as_f64().unwrap(), 1.5);
+        std::env::remove_var("NVNMD_ARTIFACTS");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,103 @@
+//! E10 — paper §VI: the process-node projection. A₁ ≈ 10² from clock
+//! frequency (25 MHz → GHz-class), A₂ ≈ 10² from transistor-density-
+//! driven intra-ASIC parallelization (180 nm → 14 nm), so S falls from
+//! ~10⁻⁶ to ~10⁻¹⁰ s/step/atom.
+
+use anyhow::Result;
+
+use crate::hw::power::ProcessNode;
+use crate::hw::timing::{SystemTiming, PAPER_NVN_S};
+use crate::util::json::{self, Value};
+use crate::util::table::sci;
+
+use super::Report;
+
+pub struct Projection {
+    pub node: ProcessNode,
+    pub clock_hz: f64,
+    pub a1: f64,
+    pub a2: f64,
+    pub s_projected: f64,
+}
+
+pub fn compute() -> Vec<Projection> {
+    let base = SystemTiming::water_nominal();
+    let s0 = base.s_per_step_atom();
+    [
+        (ProcessNode::N180, 25.0e6),
+        (ProcessNode { nm: 65.0, vdd: 1.2 }, 600.0e6),
+        (ProcessNode { nm: 28.0, vdd: 1.0 }, 1.5e9),
+        (ProcessNode::N14, 2.5e9),
+    ]
+    .iter()
+    .map(|&(node, clock)| {
+        let a1 = clock / base.clock_hz;
+        let a2 = ProcessNode::N180.density_vs(node);
+        Projection { node, clock_hz: clock, a1, a2, s_projected: s0 / (a1 * a2) }
+    })
+    .collect()
+}
+
+pub fn run() -> Result<Report> {
+    let mut report = Report::new("§VI projection — NvN-MLMD at advanced process nodes");
+    let rows = compute();
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:.0} nm", p.node.nm),
+                format!("{:.2e} Hz", p.clock_hz),
+                format!("{:.0}×", p.a1),
+                format!("{:.0}×", p.a2),
+                sci(p.s_projected, 1),
+            ]
+        })
+        .collect();
+    report.table(
+        "A₁ = clock scaling, A₂ = density-driven parallelization",
+        &["node", "clock", "A₁", "A₂", "projected S (s/step/atom)"],
+        &table,
+    );
+    let last = rows.last().unwrap();
+    report.note(format!(
+        "14 nm projection: A₁×A₂ = {:.0} ≈ 10⁴ (paper) ⇒ S ≈ {} s/step/atom (paper: ~10⁻¹⁰)",
+        last.a1 * last.a2,
+        sci(last.s_projected, 1)
+    ));
+    report.note(format!("baseline measured S at 180 nm / 25 MHz: {}", sci(PAPER_NVN_S, 1)));
+    report.attach(
+        "projections",
+        Value::Arr(
+            rows.iter()
+                .map(|p| {
+                    json::obj(vec![
+                        ("node_nm", json::num(p.node.nm)),
+                        ("clock_hz", json::num(p.clock_hz)),
+                        ("a1", json::num(p.a1)),
+                        ("a2", json::num(p.a2)),
+                        ("s", json::num(p.s_projected)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    report.save("scaling")?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projection_reaches_paper_magnitude() {
+        let rows = compute();
+        let last = rows.last().unwrap();
+        let a = last.a1 * last.a2;
+        assert!((3e3..3e5).contains(&a), "A1×A2 = {a}");
+        assert!(last.s_projected < 1e-9, "S = {}", last.s_projected);
+        // baseline row is identity
+        assert!((rows[0].a1 - 1.0).abs() < 1e-12);
+        assert!((rows[0].a2 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,85 @@
+//! E3 — paper Table I: force RMSE of tanh-MLP vs φ-MLP on the six
+//! datasets. Models come from the Python trainer; the RMSEs here are
+//! recomputed in Rust (float forward pass on the held-out test split).
+
+use anyhow::Result;
+
+use crate::analysis::rmse_vecs;
+use crate::util::json::{self, Value};
+
+use super::{load_dataset, load_model, Report};
+
+pub const SYSTEMS: [&str; 6] = ["water", "ethanol", "toluene", "naphthalene", "aspirin", "silicon"];
+
+/// Paper Table I values (meV/Å) for side-by-side reporting.
+pub const PAPER: [(&str, f64, f64); 6] = [
+    ("water", 25.04, 24.83),
+    ("ethanol", 29.33, 29.84),
+    ("toluene", 53.15, 52.70),
+    ("naphthalene", 46.45, 46.63),
+    ("aspirin", 74.85, 75.20),
+    ("silicon", 67.10, 67.28),
+];
+
+pub struct Row {
+    pub system: String,
+    pub tanh_mev: f64,
+    pub phi_mev: f64,
+}
+
+pub fn compute() -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for name in SYSTEMS {
+        let ds = load_dataset(name)?;
+        let tanh = load_model(&format!("{name}_cnn_tanh"))?;
+        let phi = load_model(&format!("{name}_cnn_phi"))?;
+        let pred_t: Vec<Vec<f64>> = ds.test_x.iter().map(|x| tanh.forward_physical(x)).collect();
+        let pred_p: Vec<Vec<f64>> = ds.test_x.iter().map(|x| phi.forward_physical(x)).collect();
+        rows.push(Row {
+            system: name.to_string(),
+            tanh_mev: 1000.0 * rmse_vecs(&pred_t, &ds.test_y),
+            phi_mev: 1000.0 * rmse_vecs(&pred_p, &ds.test_y),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run() -> Result<Report> {
+    let mut report = Report::new("Table I — force RMSE (meV/Å): tanh-MLP vs φ-MLP");
+    let rows = compute()?;
+    let mut table = Vec::new();
+    let mut data = Vec::new();
+    for r in &rows {
+        let paper = PAPER.iter().find(|(n, _, _)| *n == r.system).unwrap();
+        table.push(vec![
+            r.system.clone(),
+            format!("{:.2}", r.tanh_mev),
+            format!("{:.2}", r.phi_mev),
+            format!("{:+.2}", r.tanh_mev - r.phi_mev),
+            format!("{:.2} / {:.2}", paper.1, paper.2),
+        ]);
+        data.push(json::obj(vec![
+            ("system", json::s(&r.system)),
+            ("tanh_mev", json::num(r.tanh_mev)),
+            ("phi_mev", json::num(r.phi_mev)),
+        ]));
+        // the headline claim: swapping tanh→φ costs ~nothing
+        let rel = (r.tanh_mev - r.phi_mev).abs() / r.tanh_mev.max(1e-9);
+        if rel > 0.15 {
+            report.note(format!(
+                "NOTE: {}: tanh/φ differ by {:.0}% — larger than the paper's ≤2%",
+                r.system,
+                rel * 100.0
+            ));
+        }
+    }
+    report.table(
+        "Measured (this repo, synthetic datasets) vs paper (MD17/DFT datasets)",
+        &["system", "tanh", "φ", "difference", "paper tanh/φ"],
+        &table,
+    );
+    report.note("shape claim: replacing tanh with φ brings no material accuracy loss");
+    report.attach("rows", Value::Arr(data));
+    report.save("table1")?;
+    Ok(report)
+}

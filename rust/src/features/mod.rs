@@ -1,0 +1,267 @@
+//! Feature extraction — module (i) of the paper's MLMD pipeline (Fig. 2):
+//! convert atomic coordinates into symmetry-invariant descriptors.
+//!
+//! ## Water (the taped-out system)
+//!
+//! Per hydrogen atom `a` (the chip predicts H forces; O follows from
+//! Newton's third law, §IV-C) the features are inverse distances
+//!
+//! `D_a = (1/r_aO, 1/r_ab, 1/r_bO)`
+//!
+//! where `b` is the other hydrogen — a complete, translation/rotation/
+//! permutation-invariant coordinate set for a 3-atom molecule (paper
+//! §II-B; the paper's input layer width is 3).
+//!
+//! The MLP output is 2-dimensional (paper §IV-B): the force on `a`
+//! expressed in the **local bond frame**, `F_a = c₁·û_aO + c₂·û_ab`.
+//! This is exact — the physical force on a hydrogen lies in the molecular
+//! plane spanned by those two directions — and makes the 3→…→2 network
+//! rotationally equivariant by construction.
+//!
+//! ## Generic molecules (datasets for Table I / Figs. 4–5)
+//!
+//! Per atom: `(1/r_j, x_j/r_j², y_j/r_j², z_j/r_j²)` for each of the
+//! `n_nb` nearest reference-topology neighbors — a DeePMD-style local
+//! descriptor evaluated in the canonical molecule frame (datasets are
+//! orientation-fixed; see DESIGN.md §Substitutions).
+
+use crate::util::Vec3;
+
+/// Water feature vector for one hydrogen: (1/r_aO, 1/r_ab, 1/r_bO).
+/// `which_h` is 1 or 2, with positions ordered [O, H1, H2].
+pub fn water_features(pos: &[Vec3], which_h: usize) -> [f64; 3] {
+    debug_assert!(which_h == 1 || which_h == 2);
+    let o = pos[0];
+    let a = pos[which_h];
+    let b = pos[3 - which_h];
+    [
+        1.0 / (a - o).norm(),
+        1.0 / (a - b).norm(),
+        1.0 / (b - o).norm(),
+    ]
+}
+
+/// Local bond frame of hydrogen `which_h`: (û_aO, û_ab).
+pub fn water_frame(pos: &[Vec3], which_h: usize) -> (Vec3, Vec3) {
+    let o = pos[0];
+    let a = pos[which_h];
+    let b = pos[3 - which_h];
+    ((o - a).normalized(), (b - a).normalized())
+}
+
+/// Project a hydrogen's Cartesian force onto the local frame:
+/// solve F = c₁·û₁ + c₂·û₂ in the span (exact for planar forces; any
+/// out-of-plane residual — zero for a 3-atom PES — is dropped).
+pub fn water_force_to_local(pos: &[Vec3], which_h: usize, f: Vec3) -> [f64; 2] {
+    let (u1, u2) = water_frame(pos, which_h);
+    // Solve the 2×2 Gram system [1, g; g, 1]·c = [f·u1, f·u2].
+    let g = u1.dot(u2);
+    let det = 1.0 - g * g;
+    debug_assert!(det.abs() > 1e-9, "degenerate bond frame");
+    let b1 = f.dot(u1);
+    let b2 = f.dot(u2);
+    [(b1 - g * b2) / det, (b2 - g * b1) / det]
+}
+
+/// Reconstruct the Cartesian force from local coefficients.
+pub fn water_force_from_local(pos: &[Vec3], which_h: usize, c: [f64; 2]) -> Vec3 {
+    let (u1, u2) = water_frame(pos, which_h);
+    u1 * c[0] + u2 * c[1]
+}
+
+/// Generic per-atom descriptor: 4 features per neighbor, neighbors fixed
+/// by the reference-topology ordering (`nb_idx`).
+pub fn local_descriptor(pos: &[Vec3], atom: usize, nb_idx: &[usize]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(4 * nb_idx.len());
+    let ri = pos[atom];
+    for &j in nb_idx {
+        let d = pos[j] - ri;
+        let r2 = d.norm_sq();
+        let r = r2.sqrt();
+        out.push(1.0 / r);
+        out.push(d.x / r2);
+        out.push(d.y / r2);
+        out.push(d.z / r2);
+    }
+    out
+}
+
+/// Neighbor ordering for an atom: indices of the `n_nb` nearest other
+/// atoms in the reference geometry (stable across configurations).
+pub fn reference_neighbors(ref_coords: &[Vec3], atom: usize, n_nb: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..ref_coords.len()).filter(|&j| j != atom).collect();
+    idx.sort_by(|&a, &b| {
+        let da = (ref_coords[a] - ref_coords[atom]).norm();
+        let db = (ref_coords[b] - ref_coords[atom]).norm();
+        da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(n_nb);
+    idx
+}
+
+/// Periodic variant for bulk systems: minimum-image distances in a cubic
+/// box; also returns the same fixed neighbor list semantics.
+pub fn reference_neighbors_pbc(ref_coords: &[Vec3], atom: usize, n_nb: usize, box_l: f64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..ref_coords.len()).filter(|&j| j != atom).collect();
+    idx.sort_by(|&a, &b| {
+        let da = (ref_coords[a] - ref_coords[atom]).min_image(box_l).norm();
+        let db = (ref_coords[b] - ref_coords[atom]).min_image(box_l).norm();
+        da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(n_nb);
+    idx
+}
+
+/// Periodic descriptor (minimum-image displacements).
+pub fn local_descriptor_pbc(pos: &[Vec3], atom: usize, nb_idx: &[usize], box_l: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(4 * nb_idx.len());
+    let ri = pos[atom];
+    for &j in nb_idx {
+        let d = (pos[j] - ri).min_image(box_l);
+        let r2 = d.norm_sq();
+        let r = r2.sqrt();
+        out.push(1.0 / r);
+        out.push(d.x / r2);
+        out.push(d.y / r2);
+        out.push(d.z / r2);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potentials::WaterPes;
+    use crate::md::ForceField;
+    use crate::util::rng::Pcg;
+
+    fn random_rotation(rng: &mut Pcg) -> [[f64; 3]; 3] {
+        // Rodrigues from random axis-angle.
+        let axis = Vec3::new(rng.normal(), rng.normal(), rng.normal()).normalized();
+        let th = rng.range(0.0, std::f64::consts::TAU);
+        let (s, c) = th.sin_cos();
+        let (x, y, z) = (axis.x, axis.y, axis.z);
+        [
+            [c + x * x * (1.0 - c), x * y * (1.0 - c) - z * s, x * z * (1.0 - c) + y * s],
+            [y * x * (1.0 - c) + z * s, c + y * y * (1.0 - c), y * z * (1.0 - c) - x * s],
+            [z * x * (1.0 - c) - y * s, z * y * (1.0 - c) + x * s, c + z * z * (1.0 - c)],
+        ]
+    }
+
+    fn rot(m: &[[f64; 3]; 3], v: Vec3) -> Vec3 {
+        Vec3::new(
+            m[0][0] * v.x + m[0][1] * v.y + m[0][2] * v.z,
+            m[1][0] * v.x + m[1][1] * v.y + m[1][2] * v.z,
+            m[2][0] * v.x + m[2][1] * v.y + m[2][2] * v.z,
+        )
+    }
+
+    #[test]
+    fn water_features_invariant_under_rigid_motion() {
+        let pes = WaterPes::dft_surrogate();
+        let mut pos = pes.equilibrium();
+        pos[1] += Vec3::new(0.02, -0.03, 0.05);
+        let f0 = water_features(&pos, 1);
+        let mut rng = Pcg::new(21);
+        for _ in 0..20 {
+            let m = random_rotation(&mut rng);
+            let t = Vec3::new(rng.normal(), rng.normal(), rng.normal());
+            let moved: Vec<Vec3> = pos.iter().map(|p| rot(&m, *p) + t).collect();
+            let f1 = water_features(&moved, 1);
+            for (a, b) in f0.iter().zip(&f1) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn water_features_swap_symmetry() {
+        // Swapping H labels swaps which_h semantics consistently:
+        // D(H1 in [O,H1,H2]) == D(H2 in [O,H2,H1]).
+        let pes = WaterPes::dft_surrogate();
+        let mut pos = pes.equilibrium();
+        pos[1] += Vec3::new(0.03, 0.0, -0.02);
+        let swapped = vec![pos[0], pos[2], pos[1]];
+        let a = water_features(&pos, 1);
+        let b = water_features(&swapped, 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn local_force_roundtrip_is_exact_for_pes_forces() {
+        // The PES force on H is in span(û_aO, û_ab): projection +
+        // reconstruction must be lossless.
+        let pes = WaterPes::dft_surrogate();
+        let mut pos = pes.equilibrium();
+        pos[1] += Vec3::new(0.04, -0.02, 0.01);
+        pos[2] += Vec3::new(-0.03, 0.02, -0.02);
+        let mut f = vec![Vec3::ZERO; 3];
+        pes.compute(&pos, &mut f);
+        for h in [1usize, 2] {
+            let c = water_force_to_local(&pos, h, f[h]);
+            let back = water_force_from_local(&pos, h, c);
+            assert!((back - f[h]).norm() < 1e-9, "h={h}: {back:?} vs {:?}", f[h]);
+        }
+    }
+
+    #[test]
+    fn local_force_equivariance() {
+        // Rotate the configuration: coefficients stay fixed, Cartesian
+        // reconstruction co-rotates.
+        let pes = WaterPes::dft_surrogate();
+        let mut pos = pes.equilibrium();
+        pos[1] += Vec3::new(0.05, 0.01, -0.03);
+        let mut f = vec![Vec3::ZERO; 3];
+        pes.compute(&pos, &mut f);
+        let c0 = water_force_to_local(&pos, 1, f[1]);
+        let mut rng = Pcg::new(5);
+        let m = random_rotation(&mut rng);
+        let moved: Vec<Vec3> = pos.iter().map(|p| rot(&m, *p)).collect();
+        let mut fm = vec![Vec3::ZERO; 3];
+        pes.compute(&moved, &mut fm);
+        let c1 = water_force_to_local(&moved, 1, fm[1]);
+        assert!((c0[0] - c1[0]).abs() < 1e-8 && (c0[1] - c1[1]).abs() < 1e-8);
+        let rec = water_force_from_local(&moved, 1, c0);
+        assert!((rec - rot(&m, f[1])).norm() < 1e-8);
+    }
+
+    #[test]
+    fn reference_neighbors_sorted_and_stable() {
+        let coords = vec![
+            Vec3::ZERO,
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 2.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.5),
+        ];
+        let nb = reference_neighbors(&coords, 0, 3);
+        assert_eq!(nb, vec![1, 3, 2]);
+        let nb2 = reference_neighbors(&coords, 0, 2);
+        assert_eq!(nb2, vec![1, 3]);
+    }
+
+    #[test]
+    fn descriptor_shape_and_values() {
+        let coords = vec![Vec3::ZERO, Vec3::new(2.0, 0.0, 0.0), Vec3::new(0.0, 1.0, 0.0)];
+        let nb = reference_neighbors(&coords, 0, 2);
+        let d = local_descriptor(&coords, 0, &nb);
+        assert_eq!(d.len(), 8);
+        // nearest neighbor is atom 2 at distance 1
+        assert!((d[0] - 1.0).abs() < 1e-12); // 1/r
+        assert!((d[2] - 1.0).abs() < 1e-12); // y/r²
+        // second neighbor atom 1 at distance 2
+        assert!((d[4] - 0.5).abs() < 1e-12);
+        assert!((d[5] - 0.5).abs() < 1e-12); // x/r² = 2/4
+    }
+
+    #[test]
+    fn pbc_descriptor_uses_minimum_image() {
+        let coords = vec![Vec3::ZERO, Vec3::new(9.5, 0.0, 0.0)];
+        let nb = reference_neighbors_pbc(&coords, 0, 1, 10.0);
+        let d = local_descriptor_pbc(&coords, 0, &nb, 10.0);
+        // image distance 0.5, direction −x
+        assert!((d[0] - 2.0).abs() < 1e-12);
+        assert!((d[1] + 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,241 @@
+//! Signed fixed-point arithmetic — the numeric substrate of the paper's
+//! datapath.
+//!
+//! The paper's three modules all use **signed 13-bit fixed point: 1 sign
+//! bit, 2 integer bits, 10 fractional bits** (§IV-C), i.e. range [−4, 4)
+//! with LSB 2⁻¹⁰. The FQNN comparison baseline (Fig. 5) uses 16-bit fixed
+//! point. Two implementations are provided:
+//!
+//! * [`Q13`] — the hot-path type: a 13-bit value sign-extended in an
+//!   `i32`, with saturating hardware-style ops (truncating multiply,
+//!   arithmetic shifts). This is what the ASIC/FPGA simulators compute
+//!   with, bit for bit.
+//! * [`Fix`] + [`FxFormat`] — a general runtime-parametrized format used
+//!   by the FQNN baseline and by format-exploration benches.
+//!
+//! Rounding conventions (documented because they are part of the modelled
+//! RTL): float→fixed conversion rounds to nearest (ties away from zero),
+//! datapath multiplies/shifts truncate toward −∞ (Verilog `>>>`), and all
+//! datapath results saturate symmetrically at the format limits.
+
+pub mod q13;
+pub use q13::Q13;
+
+/// A signed fixed-point format: `total_bits` including sign, of which
+/// `frac_bits` are fractional.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FxFormat {
+    pub total_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl FxFormat {
+    /// The paper's system format: 1 sign + 2 integer + 10 fraction.
+    pub const Q1_2_10: FxFormat = FxFormat { total_bits: 13, frac_bits: 10 };
+    /// The FQNN baseline format of Fig. 5 (16-bit fixed point; we keep the
+    /// same 10-bit binary point so both formats share signal scaling).
+    pub const Q16: FxFormat = FxFormat { total_bits: 16, frac_bits: 10 };
+
+    pub fn new(total_bits: u32, frac_bits: u32) -> Self {
+        assert!(total_bits >= 2 && total_bits <= 63);
+        assert!(frac_bits < total_bits);
+        FxFormat { total_bits, frac_bits }
+    }
+    /// Largest representable raw value: 2^(total-1) − 1.
+    pub fn max_raw(&self) -> i64 {
+        (1i64 << (self.total_bits - 1)) - 1
+    }
+    /// Smallest representable raw value: −2^(total-1).
+    pub fn min_raw(&self) -> i64 {
+        -(1i64 << (self.total_bits - 1))
+    }
+    /// Value of one least-significant bit.
+    pub fn lsb(&self) -> f64 {
+        (2f64).powi(-(self.frac_bits as i32))
+    }
+    /// Largest representable value.
+    pub fn max_value(&self) -> f64 {
+        self.max_raw() as f64 * self.lsb()
+    }
+    /// Smallest representable value.
+    pub fn min_value(&self) -> f64 {
+        self.min_raw() as f64 * self.lsb()
+    }
+    /// Encode a float: round to nearest, saturate.
+    pub fn encode(&self, x: f64) -> i64 {
+        if x.is_nan() {
+            return 0;
+        }
+        let scaled = x * (1i64 << self.frac_bits) as f64;
+        let r = scaled.round() as i64;
+        r.clamp(self.min_raw(), self.max_raw())
+    }
+    /// Decode a raw value to float.
+    pub fn decode(&self, raw: i64) -> f64 {
+        raw as f64 * self.lsb()
+    }
+    /// Quantize a float through this format (encode∘decode).
+    pub fn quantize(&self, x: f64) -> f64 {
+        self.decode(self.encode(x))
+    }
+    /// Saturate an (already scaled) raw value into range.
+    pub fn saturate(&self, raw: i64) -> i64 {
+        raw.clamp(self.min_raw(), self.max_raw())
+    }
+}
+
+/// A value in a runtime-chosen fixed-point format.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fix {
+    pub raw: i64,
+    pub fmt: FxFormat,
+}
+
+impl Fix {
+    pub fn from_f64(x: f64, fmt: FxFormat) -> Self {
+        Fix { raw: fmt.encode(x), fmt }
+    }
+    pub fn to_f64(self) -> f64 {
+        self.fmt.decode(self.raw)
+    }
+    pub fn zero(fmt: FxFormat) -> Self {
+        Fix { raw: 0, fmt }
+    }
+    /// Saturating add (same format required).
+    pub fn add(self, o: Fix) -> Fix {
+        assert_eq!(self.fmt, o.fmt);
+        Fix { raw: self.fmt.saturate(self.raw + o.raw), fmt: self.fmt }
+    }
+    pub fn sub(self, o: Fix) -> Fix {
+        assert_eq!(self.fmt, o.fmt);
+        Fix { raw: self.fmt.saturate(self.raw - o.raw), fmt: self.fmt }
+    }
+    /// Saturating multiply with truncation toward −∞ of the extra
+    /// fractional bits (hardware `>>>`).
+    pub fn mul(self, o: Fix) -> Fix {
+        assert_eq!(self.fmt, o.fmt);
+        let wide = (self.raw as i128) * (o.raw as i128);
+        let shifted = wide >> self.fmt.frac_bits;
+        Fix { raw: self.fmt.saturate(shifted as i64), fmt: self.fmt }
+    }
+    /// Arithmetic shift by `n` (+left/−right), saturating.
+    pub fn shift(self, n: i32) -> Fix {
+        let raw = shift_raw(self.raw, n);
+        Fix { raw: self.fmt.saturate(raw), fmt: self.fmt }
+    }
+    pub fn neg(self) -> Fix {
+        Fix { raw: self.fmt.saturate(-self.raw), fmt: self.fmt }
+    }
+}
+
+/// The paper's shift function P(x, n) (Eq. 11) on raw integers:
+/// left shift for n>0, arithmetic right shift for n<0, identity for n=0.
+pub fn shift_raw(x: i64, n: i32) -> i64 {
+    if n > 0 {
+        if n >= 63 {
+            return if x >= 0 { i64::MAX } else { i64::MIN };
+        }
+        // detect overflow of the left shift
+        let shifted = x << n;
+        if (shifted >> n) != x {
+            if x >= 0 {
+                i64::MAX
+            } else {
+                i64::MIN
+            }
+        } else {
+            shifted
+        }
+    } else if n < 0 {
+        let k = (-n).min(63);
+        x >> k
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q1_2_10_range_and_lsb() {
+        let f = FxFormat::Q1_2_10;
+        assert_eq!(f.max_raw(), 4095);
+        assert_eq!(f.min_raw(), -4096);
+        assert!((f.lsb() - 0.0009765625).abs() < 1e-15);
+        assert!((f.max_value() - 3.9990234375).abs() < 1e-12);
+        assert_eq!(f.min_value(), -4.0);
+    }
+
+    #[test]
+    fn encode_rounds_to_nearest() {
+        let f = FxFormat::Q1_2_10;
+        assert_eq!(f.encode(0.0), 0);
+        assert_eq!(f.encode(1.0), 1024);
+        assert_eq!(f.encode(f.lsb() * 0.49), 0);
+        assert_eq!(f.encode(f.lsb() * 0.51), 1);
+        assert_eq!(f.encode(-f.lsb() * 0.51), -1);
+        // saturation
+        assert_eq!(f.encode(100.0), 4095);
+        assert_eq!(f.encode(-100.0), -4096);
+        assert_eq!(f.encode(f64::NAN), 0);
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_lsb() {
+        let f = FxFormat::Q1_2_10;
+        let mut x = -3.9;
+        while x < 3.9 {
+            let q = f.quantize(x);
+            assert!((q - x).abs() <= f.lsb() / 2.0 + 1e-15, "x={x} q={q}");
+            x += 0.00137;
+        }
+    }
+
+    #[test]
+    fn fix_arithmetic() {
+        let f = FxFormat::Q1_2_10;
+        let a = Fix::from_f64(1.5, f);
+        let b = Fix::from_f64(-0.75, f);
+        assert_eq!(a.add(b).to_f64(), 0.75);
+        assert_eq!(a.sub(b).to_f64(), 2.25);
+        assert_eq!(a.mul(b).to_f64(), -1.125);
+        // saturating add
+        let big = Fix::from_f64(3.9, f);
+        assert_eq!(big.add(big).raw, f.max_raw());
+        let nbig = Fix::from_f64(-4.0, f);
+        assert_eq!(nbig.add(nbig).raw, f.min_raw());
+    }
+
+    #[test]
+    fn mul_truncates_toward_neg_inf() {
+        let f = FxFormat::Q1_2_10;
+        // 3 LSB * 0.5 = 1.5 LSB → truncates to 1 LSB; negative → −2 LSB.
+        let three = Fix { raw: 3, fmt: f };
+        let half = Fix::from_f64(0.5, f);
+        assert_eq!(three.mul(half).raw, 1);
+        let nthree = Fix { raw: -3, fmt: f };
+        assert_eq!(nthree.mul(half).raw, -2);
+    }
+
+    #[test]
+    fn shift_raw_matches_eq11() {
+        assert_eq!(shift_raw(5, 2), 20);
+        assert_eq!(shift_raw(5, -1), 2);
+        assert_eq!(shift_raw(-5, -1), -3); // arithmetic shift, toward −∞
+        assert_eq!(shift_raw(7, 0), 7);
+        assert_eq!(shift_raw(1, 100), i64::MAX);
+        assert_eq!(shift_raw(-1, 100), i64::MIN);
+        assert_eq!(shift_raw(-1, -100), -1);
+        assert_eq!(shift_raw(1, -100), 0);
+    }
+
+    #[test]
+    fn q16_wider_than_q13() {
+        let a = FxFormat::Q1_2_10;
+        let b = FxFormat::Q16;
+        assert!(b.max_value() > a.max_value());
+        assert_eq!(a.lsb(), b.lsb()); // same binary point by design
+    }
+}

@@ -1,0 +1,195 @@
+//! `Q13` — the paper's signed 13-bit Q(1,2,10) datapath value, optimized
+//! for the simulator hot path.
+//!
+//! Stored sign-extended in an `i32`; all operations reproduce the RTL
+//! conventions of the generic [`super::Fix`] implementation (saturating,
+//! truncating) and a property test in this module asserts agreement.
+
+use super::{FxFormat, shift_raw};
+
+/// Number of fractional bits (binary point position).
+pub const FRAC: u32 = 10;
+/// Total bits including sign.
+pub const BITS: u32 = 13;
+/// Max raw value (+3.999…).
+pub const MAX_RAW: i32 = (1 << (BITS - 1)) - 1; // 4095
+/// Min raw value (−4.0).
+pub const MIN_RAW: i32 = -(1 << (BITS - 1)); // -4096
+/// Value of one LSB.
+pub const LSB: f64 = 1.0 / (1 << FRAC) as f64;
+
+/// A Q(1,2,10) fixed-point value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Q13(pub i32);
+
+#[inline(always)]
+fn sat(x: i32) -> i32 {
+    x.clamp(MIN_RAW, MAX_RAW)
+}
+
+impl Q13 {
+    pub const ZERO: Q13 = Q13(0);
+    pub const ONE: Q13 = Q13(1 << FRAC);
+    pub const MAX: Q13 = Q13(MAX_RAW);
+    pub const MIN: Q13 = Q13(MIN_RAW);
+
+    /// Round-to-nearest, saturating conversion from f64.
+    #[inline]
+    pub fn from_f64(x: f64) -> Q13 {
+        if x.is_nan() {
+            return Q13(0);
+        }
+        let r = (x * (1 << FRAC) as f64).round();
+        if r >= MAX_RAW as f64 {
+            Q13(MAX_RAW)
+        } else if r <= MIN_RAW as f64 {
+            Q13(MIN_RAW)
+        } else {
+            Q13(r as i32)
+        }
+    }
+
+    #[inline(always)]
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 * LSB
+    }
+
+    /// Saturating add.
+    #[inline(always)]
+    pub fn add(self, o: Q13) -> Q13 {
+        Q13(sat(self.0 + o.0))
+    }
+
+    /// Saturating subtract.
+    #[inline(always)]
+    pub fn sub(self, o: Q13) -> Q13 {
+        Q13(sat(self.0 - o.0))
+    }
+
+    /// Saturating negate.
+    #[inline(always)]
+    pub fn neg(self) -> Q13 {
+        Q13(sat(-self.0))
+    }
+
+    /// Hardware multiply: full 26-bit product, truncate (arithmetic right
+    /// shift) the 10 extra fraction bits, saturate.
+    #[inline(always)]
+    pub fn mul(self, o: Q13) -> Q13 {
+        let wide = (self.0 as i64) * (o.0 as i64);
+        Q13(sat((wide >> FRAC) as i32))
+    }
+
+    /// The paper's shift P(x, n) (Eq. 11), saturating.
+    #[inline(always)]
+    pub fn shift(self, n: i32) -> Q13 {
+        Q13(sat(shift_raw(self.0 as i64, n).clamp(i32::MIN as i64, i32::MAX as i64) as i32))
+    }
+
+    /// |x| with saturation (|MIN| would overflow 13 bits).
+    #[inline(always)]
+    pub fn abs(self) -> Q13 {
+        if self.0 < 0 {
+            self.neg()
+        } else {
+            self
+        }
+    }
+
+    pub fn raw(self) -> i32 {
+        self.0
+    }
+}
+
+/// Multiply-accumulate over slices in a *wide* (i64) accumulator, then a
+/// single truncate+saturate at the end. This models an RTL dot-product
+/// unit with a full-width accumulator — used by the FQNN reference
+/// datapath.
+pub fn dot_wide(a: &[Q13], b: &[Q13]) -> Q13 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc: i64 = 0;
+    for (x, y) in a.iter().zip(b) {
+        acc += (x.0 as i64) * (y.0 as i64);
+    }
+    Q13(sat((acc >> FRAC) as i32))
+}
+
+/// The format descriptor corresponding to `Q13`.
+pub fn format() -> FxFormat {
+    FxFormat::Q1_2_10
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Fix;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn constants() {
+        assert_eq!(Q13::ONE.to_f64(), 1.0);
+        assert_eq!(Q13::MAX.to_f64(), 4.0 - LSB);
+        assert_eq!(Q13::MIN.to_f64(), -4.0);
+    }
+
+    #[test]
+    fn agrees_with_generic_fix() {
+        // Property: Q13 ops == generic Fix ops in the Q(1,2,10) format for
+        // random operands (including extremes).
+        let fmt = format();
+        let mut rng = Pcg::new(2024);
+        for _ in 0..20_000 {
+            let xa = rng.range(-5.0, 5.0);
+            let xb = rng.range(-5.0, 5.0);
+            let (a, b) = (Q13::from_f64(xa), Q13::from_f64(xb));
+            let (fa, fb) = (Fix::from_f64(xa, fmt), Fix::from_f64(xb, fmt));
+            assert_eq!(a.0 as i64, fa.raw, "encode {xa}");
+            assert_eq!(a.add(b).0 as i64, fa.add(fb).raw, "add {xa} {xb}");
+            assert_eq!(a.sub(b).0 as i64, fa.sub(fb).raw, "sub {xa} {xb}");
+            assert_eq!(a.mul(b).0 as i64, fa.mul(fb).raw, "mul {xa} {xb}");
+            let n = (rng.below(9) as i32) - 4;
+            assert_eq!(a.shift(n).0 as i64, fa.shift(n).raw, "shift {xa} by {n}");
+        }
+    }
+
+    #[test]
+    fn saturation_edges() {
+        assert_eq!(Q13::MAX.add(Q13::ONE), Q13::MAX);
+        assert_eq!(Q13::MIN.sub(Q13::ONE), Q13::MIN);
+        assert_eq!(Q13::MIN.neg(), Q13::MAX); // |−4096| saturates to 4095
+        assert_eq!(Q13::MAX.mul(Q13::MAX), Q13::MAX);
+        assert_eq!(Q13::MAX.mul(Q13::MIN), Q13::MIN);
+        assert_eq!(Q13::from_f64(2.0).shift(1), Q13::MAX);
+        assert_eq!(Q13::from_f64(-2.5).shift(1), Q13::MIN);
+    }
+
+    #[test]
+    fn mul_truncation_sign() {
+        // 3·2⁻¹⁰ × 0.5 = 1.5·2⁻¹⁰ → 1 (trunc toward −∞); negative → −2.
+        assert_eq!(Q13(3).mul(Q13::from_f64(0.5)).0, 1);
+        assert_eq!(Q13(-3).mul(Q13::from_f64(0.5)).0, -2);
+    }
+
+    #[test]
+    fn dot_wide_matches_float_within_lsb() {
+        let mut rng = Pcg::new(7);
+        for _ in 0..200 {
+            let n = 1 + rng.below(16) as usize;
+            let a: Vec<f64> = (0..n).map(|_| rng.range(-0.4, 0.4)).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.range(-0.4, 0.4)).collect();
+            let qa: Vec<Q13> = a.iter().map(|&x| Q13::from_f64(x)).collect();
+            let qb: Vec<Q13> = b.iter().map(|&x| Q13::from_f64(x)).collect();
+            let exact: f64 = qa.iter().zip(&qb).map(|(x, y)| x.to_f64() * y.to_f64()).sum();
+            let got = dot_wide(&qa, &qb).to_f64();
+            assert!((got - exact).abs() <= LSB, "n={n} got={got} exact={exact}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_lossless_on_grid() {
+        for raw in [MIN_RAW, -1, 0, 1, 512, MAX_RAW] {
+            let q = Q13(raw);
+            assert_eq!(Q13::from_f64(q.to_f64()), q);
+        }
+    }
+}

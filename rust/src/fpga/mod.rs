@@ -1,0 +1,495 @@
+//! Cycle-level model of the FPGA (Xilinx XC7Z100 in the paper): the
+//! feature-extraction module (i) and the integration module (iii) of
+//! Fig. 2, in fixed point.
+//!
+//! Signal formats (DESIGN.md §Numerics): module-to-module signals are the
+//! paper's Q(1,2,10); the integrator keeps its *state* (positions,
+//! velocities) in 26-bit accumulators with 20 fraction bits — standard
+//! RTL practice (a 13-bit state register cannot hold a 0.002 Å/step
+//! velocity increment) — while a `strict13` mode stores state in Q13 too,
+//! used by the ablation bench to demonstrate the resulting drift.
+
+pub mod rsqrt;
+
+use crate::fixedpoint::{q13, Q13};
+use crate::hw::power::OpCounts;
+use crate::md::System;
+use crate::util::units::ACC_CONV;
+use crate::util::Vec3;
+
+/// Working fraction of the rsqrt / conditioning pipeline.
+const fn rsqrt_work_frac() -> u32 {
+    24
+}
+
+/// Fraction bits of the integrator state (26-bit registers).
+pub const STATE_FRAC: u32 = 20;
+/// Saturation bound of the 26-bit state registers.
+const STATE_MAX: i64 = (1 << 25) - 1;
+const STATE_MIN: i64 = -(1 << 25);
+/// Fraction bits of the per-atom dt·ACC/m constants (set by the host at
+/// initialization — "CPU for initialization and control", Fig. 1).
+pub const CONST_FRAC: u32 = 24;
+/// Fraction bits of the dt constant.
+pub const DT_FRAC: u32 = 14;
+
+fn sat_state(x: i64) -> i64 {
+    x.clamp(STATE_MIN, STATE_MAX)
+}
+
+/// Round-to-nearest right shift. The integrator MUST NOT truncate
+/// (arithmetic >> rounds toward −∞): a −½-LSB systematic bias on every
+/// velocity increment pumps net momentum into the system — the molecule's
+/// center of mass accelerates until the ±4 Å Q13 position bus saturates
+/// and the geometry collapses (found the hard way; see the
+/// `no_systematic_momentum_pumping` test).
+#[inline(always)]
+fn rshift_round(x: i64, n: u32) -> i64 {
+    (x + (1i64 << (n - 1))) >> n
+}
+
+/// Per-hydrogen output of the feature module: the Q13 feature triple and
+/// the Q13 unit vectors of the local bond frame (reused by the force
+/// reconstruction).
+#[derive(Debug, Clone, Copy)]
+pub struct HFeatures {
+    pub d: [Q13; 3],
+    pub u_ho: [Q13; 3],
+    pub u_hh: [Q13; 3],
+}
+
+/// The water-system FPGA: feature extraction + integration + state.
+#[derive(Debug, Clone)]
+pub struct WaterFpga {
+    /// Position/velocity state, raw 26-bit (frac 20), [atom][axis],
+    /// atoms ordered [O, H1, H2].
+    pos: [[i64; 3]; 3],
+    vel: [[i64; 3]; 3],
+    /// dt·ACC_CONV/m per atom, raw frac-24.
+    c_raw: [i64; 3],
+    /// dt, raw frac-14.
+    dt_raw: i64,
+    /// Strict 13-bit state (ablation mode).
+    pub strict13: bool,
+    /// Power-of-two force rescale applied at reconstruction: the chip
+    /// predicts F / 2^force_shift (so the Q13 output range covers the
+    /// force distribution); the FPGA undoes it with a free left shift.
+    pub force_shift: i32,
+    /// Feature conditioning (programmed by the host at init): the raw
+    /// inverse distances are centered by these frac-24 constants and
+    /// amplified by 2^feat_shift before truncation to the Q13 bus — a
+    /// constant subtract + wire shift in RTL. Indexed like the feature
+    /// triple (r_aO, r_ab, r_bO ⇒ per-pair constants by distance kind).
+    feat_center_raw: [i64; 3],
+    feat_shift: [i32; 3],
+    /// Operation counters (energy model).
+    pub ops: OpCounts,
+    pub steps: u64,
+}
+
+impl WaterFpga {
+    /// Initialize from a float system ([O, H1, H2]) — the host CPU's
+    /// initialization path.
+    pub fn new(sys: &System, dt_fs: f64) -> Self {
+        assert_eq!(sys.len(), 3, "water FPGA expects [O, H1, H2]");
+        let enc_state = |v: f64| sat_state((v * (1i64 << STATE_FRAC) as f64).round() as i64);
+        let mut pos = [[0i64; 3]; 3];
+        let mut vel = [[0i64; 3]; 3];
+        for i in 0..3 {
+            let p = sys.pos[i].to_array();
+            let v = sys.vel[i].to_array();
+            for a in 0..3 {
+                pos[i][a] = enc_state(p[a]);
+                vel[i][a] = enc_state(v[a]);
+            }
+        }
+        let mut c_raw = [0i64; 3];
+        for i in 0..3 {
+            let c = dt_fs * ACC_CONV / sys.masses[i];
+            c_raw[i] = (c * (1i64 << CONST_FRAC) as f64).round() as i64;
+        }
+        WaterFpga {
+            pos,
+            vel,
+            c_raw,
+            dt_raw: (dt_fs * (1i64 << DT_FRAC) as f64).round() as i64,
+            strict13: false,
+            force_shift: 0,
+            feat_center_raw: [0; 3],
+            feat_shift: [0; 3],
+            ops: OpCounts::default(),
+            steps: 0,
+        }
+    }
+
+    /// Program the feature-conditioning constants (host init path).
+    /// `center` is the per-feature physical center, `scale` the
+    /// power-of-two gain (as trained/exported by the model).
+    pub fn program_feature_conditioning(&mut self, center: &[f64], scale: &[f64]) {
+        if center.is_empty() {
+            self.feat_center_raw = [0; 3];
+            self.feat_shift = [0; 3];
+            return;
+        }
+        assert_eq!(center.len(), 3, "water feature center must be length 3");
+        for (slot, &c) in self.feat_center_raw.iter_mut().zip(center) {
+            *slot = (c * (1i64 << rsqrt_work_frac()) as f64).round() as i64;
+        }
+        for i in 0..3 {
+            let s = match scale.len() {
+                0 => 1.0,
+                1 => scale[0],
+                _ => scale[i],
+            };
+            assert!(
+                s > 0.0 && s.log2().fract() == 0.0,
+                "feature scale {s} must be a power of two"
+            );
+            self.feat_shift[i] = s.log2() as i32;
+        }
+    }
+
+    /// Control-plane velocity rescale (the host CPU's weak-coupling
+    /// thermostat, Fig. 1's "CPU for initialization and control"):
+    /// multiply the velocity state by a frac-24 constant.
+    pub fn scale_velocities(&mut self, lambda: f64) {
+        let lam = (lambda * (1i64 << CONST_FRAC) as f64).round() as i64;
+        for i in 0..3 {
+            for a in 0..3 {
+                self.vel[i][a] = sat_state(rshift_round(self.vel[i][a] * lam, CONST_FRAC));
+            }
+        }
+        self.ops.mults += 9;
+    }
+
+    /// Decode current positions to float (for analysis taps).
+    pub fn positions(&self) -> Vec<Vec3> {
+        (0..3)
+            .map(|i| {
+                Vec3::new(
+                    self.pos[i][0] as f64 / (1i64 << STATE_FRAC) as f64,
+                    self.pos[i][1] as f64 / (1i64 << STATE_FRAC) as f64,
+                    self.pos[i][2] as f64 / (1i64 << STATE_FRAC) as f64,
+                )
+            })
+            .collect()
+    }
+
+    pub fn velocities(&self) -> Vec<Vec3> {
+        (0..3)
+            .map(|i| {
+                Vec3::new(
+                    self.vel[i][0] as f64 / (1i64 << STATE_FRAC) as f64,
+                    self.vel[i][1] as f64 / (1i64 << STATE_FRAC) as f64,
+                    self.vel[i][2] as f64 / (1i64 << STATE_FRAC) as f64,
+                )
+            })
+            .collect()
+    }
+
+    /// Position of atom `i` on the 13-bit inter-module bus (truncated).
+    fn pos_q13(&self, i: usize, a: usize) -> Q13 {
+        let raw = self.pos[i][a] >> (STATE_FRAC - q13::FRAC);
+        Q13(raw.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
+    }
+
+    /// Quantize state through Q13 (strict13 ablation: the state registers
+    /// themselves are 13-bit).
+    fn apply_strict13(&mut self) {
+        if !self.strict13 {
+            return;
+        }
+        let round = |raw: &mut i64| {
+            let q = (*raw >> (STATE_FRAC - q13::FRAC))
+                .clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64);
+            *raw = q << (STATE_FRAC - q13::FRAC);
+        };
+        for i in 0..3 {
+            for a in 0..3 {
+                round(&mut self.pos[i][a]);
+                round(&mut self.vel[i][a]);
+            }
+        }
+    }
+
+    /// Feature-extraction module: Q13 features and frames for both
+    /// hydrogens. Distances are computed from the 13-bit bus view of the
+    /// positions (module (i) consumes 13-bit signals); the inverse
+    /// distances pass through the conditioning stage (constant subtract
+    /// + 2^m gain at frac-24 precision) before truncation to the Q13 bus.
+    pub fn extract_features(&mut self) -> [HFeatures; 2] {
+        let mut out = [HFeatures { d: [Q13::ZERO; 3], u_ho: [Q13::ZERO; 3], u_hh: [Q13::ZERO; 3] }; 2];
+        for (hi, h) in [1usize, 2].iter().enumerate() {
+            let other = 3 - h;
+            let (inv_ho, u_ho) = self.inv_dist_and_unit(*h, 0);
+            let (inv_hh, u_hh) = self.inv_dist_and_unit(*h, other);
+            let (inv_oo, _) = self.inv_dist_and_unit(other, 0); // r_bO
+            out[hi] = HFeatures {
+                d: [
+                    self.condition(inv_ho, 0),
+                    self.condition(inv_hh, 1),
+                    self.condition(inv_oo, 2),
+                ],
+                u_ho,
+                u_hh,
+            };
+        }
+        self.ops.shifts += 6 + 6; // rsqrt normalizations + gain shifts
+        self.ops.adds += 6 * 3 + 6; // diffs + accumulations + centering
+        self.ops.mults += 6 * 3 + 6 * 4; // squares + Newton multiplies (×2 iter)
+        self.ops.sram_reads += 6; // LUT reads
+        out
+    }
+
+    /// Conditioning stage on one inverse distance (frac-24 raw in,
+    /// Q13 out): (inv − c) << m, truncate, saturate.
+    fn condition(&self, inv_raw24: i64, idx: usize) -> Q13 {
+        let centered = inv_raw24 - self.feat_center_raw[idx];
+        let amplified = crate::fixedpoint::shift_raw(centered, self.feat_shift[idx]);
+        let q = amplified >> (rsqrt_work_frac() - q13::FRAC);
+        Q13(q.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
+    }
+
+    /// 1/|r_j − r_i| as high-precision raw (frac 24) plus the Q13 unit
+    /// vector (r_j − r_i)/r.
+    fn inv_dist_and_unit(&self, i: usize, j: usize) -> (i64, [Q13; 3]) {
+        let mut d = [Q13::ZERO; 3];
+        let mut r2_raw: i64 = 0; // frac 20
+        for a in 0..3 {
+            let diff = self.pos_q13(j, a).sub(self.pos_q13(i, a));
+            d[a] = diff;
+            r2_raw += (diff.0 as i64) * (diff.0 as i64); // frac 20
+        }
+        let inv24 = rsqrt::rsqrt_raw(r2_raw, STATE_FRAC, rsqrt_work_frac(), 2);
+        let inv_q13 = Q13(
+            (inv24 >> (rsqrt_work_frac() - q13::FRAC))
+                .clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32,
+        );
+        let mut u = [Q13::ZERO; 3];
+        for a in 0..3 {
+            u[a] = d[a].mul(inv_q13);
+        }
+        (inv24, u)
+    }
+
+    /// Force reconstruction + Newton's-third-law oxygen force +
+    /// integration (module (iii), Eqs. (2)–(3)). `c` are the two chips'
+    /// local-frame outputs [(c1, c2); 2], frames from `extract_features`.
+    pub fn integrate(&mut self, frames: &[HFeatures; 2], c: [[Q13; 2]; 2]) {
+        // Reconstruct Cartesian hydrogen forces on the 13-bit datapath.
+        // Note the wide (i64) accumulation before the rescale shift: the
+        // rescaled force feeds the 26-bit-constant multiply below, so no
+        // 13-bit saturation applies between reconstruction and use —
+        // matching an RTL that fuses reconstruct→rescale→MAC.
+        let mut f = [[0i64; 3]; 3]; // raw frac-10, wide
+        for hi in 0..2 {
+            for a in 0..3 {
+                let fa = frames[hi].u_ho[a].mul(c[hi][0]).0 as i64
+                    + frames[hi].u_hh[a].mul(c[hi][1]).0 as i64;
+                f[1 + hi][a] = fa << self.force_shift;
+            }
+        }
+        // Oxygen: F_O = −(F_H1 + F_H2).
+        for a in 0..3 {
+            f[0][a] = -(f[1][a] + f[2][a]);
+        }
+        self.ops.mults += 12;
+        self.ops.adds += 12;
+
+        // Integrate. v += F·c_i (13×26-bit multiply, renormalized);
+        // r += v·dt.
+        for i in 0..3 {
+            for a in 0..3 {
+                // F raw frac 10 × c raw frac 24 → frac 34 → state frac 20,
+                // rounded (not truncated — see rshift_round).
+                let dv = rshift_round(f[i][a] * self.c_raw[i], 10 + CONST_FRAC - STATE_FRAC);
+                self.vel[i][a] = sat_state(self.vel[i][a] + dv);
+                // v frac 20 × dt frac 14 → frac 34 → frac 20.
+                let dr = rshift_round(self.vel[i][a] * self.dt_raw, DT_FRAC);
+                self.pos[i][a] = sat_state(self.pos[i][a] + dr);
+            }
+        }
+        self.ops.mults += 18;
+        self.ops.adds += 18;
+        self.ops.reg_writes_bits += 18 * 26;
+        self.steps += 1;
+        self.apply_strict13();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features;
+    use crate::potentials::WaterPes;
+    use crate::md::ForceField;
+
+    fn eq_system() -> System {
+        let pes = WaterPes::dft_surrogate();
+        System::new(pes.equilibrium(), WaterPes::masses())
+    }
+
+    #[test]
+    fn features_match_float_reference_within_lsb() {
+        let sys = eq_system();
+        let mut fpga = WaterFpga::new(&sys, 0.25);
+        let feats = fpga.extract_features();
+        for (hi, h) in [1usize, 2].iter().enumerate() {
+            let want = features::water_features(&sys.pos, *h);
+            for a in 0..3 {
+                let got = feats[hi].d[a].to_f64();
+                assert!(
+                    (got - want[a]).abs() < 6.0 * q13::LSB,
+                    "h{h} feature {a}: {got} vs {want:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unit_vectors_are_unit_norm() {
+        let sys = eq_system();
+        let mut fpga = WaterFpga::new(&sys, 0.25);
+        let feats = fpga.extract_features();
+        for f in &feats {
+            for u in [&f.u_ho, &f.u_hh] {
+                let n: f64 = u.iter().map(|q| q.to_f64() * q.to_f64()).sum();
+                assert!((n.sqrt() - 1.0).abs() < 0.01, "norm {}", n.sqrt());
+            }
+        }
+    }
+
+    #[test]
+    fn integration_matches_float_euler_closely() {
+        // Drive the FPGA integrator with *exact* PES forces (projected to
+        // local frames, quantized like the chip interface) and compare a
+        // short trajectory against the float semi-implicit Euler.
+        let pes = WaterPes::dft_surrogate();
+        let mut sys = eq_system();
+        sys.pos[1] += Vec3::new(0.02, -0.01, 0.015);
+        sys.vel[1] = Vec3::new(0.004, 0.002, -0.003);
+
+        let dt = 0.25;
+        let mut fpga = WaterFpga::new(&sys, dt);
+        let mut float_sys = sys.clone();
+        let mut forces = vec![Vec3::ZERO; 3];
+        pes.compute(&float_sys.pos, &mut forces);
+
+        for _ in 0..200 {
+            // fixed-point path
+            let frames = fpga.extract_features();
+            let pos_fx = fpga.positions();
+            let mut f_fx = vec![Vec3::ZERO; 3];
+            pes.compute(&pos_fx, &mut f_fx);
+            let mut c = [[Q13::ZERO; 2]; 2];
+            for hi in 0..2 {
+                let loc = features::water_force_to_local(&pos_fx, 1 + hi, f_fx[1 + hi]);
+                c[hi] = [Q13::from_f64(loc[0]), Q13::from_f64(loc[1])];
+            }
+            fpga.integrate(&frames, c);
+            // float path
+            crate::md::euler_step(&mut float_sys, pes, dt, &mut forces);
+        }
+        for i in 0..3 {
+            let d = (fpga.positions()[i] - float_sys.pos[i]).norm();
+            assert!(d < 0.02, "atom {i} diverged by {d} Å after 50 fs");
+        }
+    }
+
+    #[test]
+    fn strict13_drifts_more_than_wide_state() {
+        // Ablation: 13-bit state registers lose the sub-LSB increments
+        // and the trajectory degrades measurably vs the 26-bit state.
+        let pes = WaterPes::dft_surrogate();
+        let mut sys = eq_system();
+        sys.vel[1] = Vec3::new(0.01, 0.0, 0.0);
+        sys.zero_momentum();
+        let dt = 0.25;
+
+        let run = |strict: bool| -> f64 {
+            let mut fpga = WaterFpga::new(&sys, dt);
+            fpga.strict13 = strict;
+            let mut float_sys = sys.clone();
+            let mut forces = vec![Vec3::ZERO; 3];
+            pes.compute(&float_sys.pos, &mut forces);
+            for _ in 0..400 {
+                let frames = fpga.extract_features();
+                let pos_fx = fpga.positions();
+                let mut f_fx = vec![Vec3::ZERO; 3];
+                pes.compute(&pos_fx, &mut f_fx);
+                let mut c = [[Q13::ZERO; 2]; 2];
+                for hi in 0..2 {
+                    let loc = features::water_force_to_local(&pos_fx, 1 + hi, f_fx[1 + hi]);
+                    c[hi] = [Q13::from_f64(loc[0]), Q13::from_f64(loc[1])];
+                }
+                fpga.integrate(&frames, c);
+                crate::md::euler_step(&mut float_sys, pes, dt, &mut forces);
+            }
+            (0..3)
+                .map(|i| (fpga.positions()[i] - float_sys.pos[i]).norm())
+                .fold(0.0, f64::max)
+        };
+        let wide = run(false);
+        let strict = run(true);
+        assert!(strict > 2.0 * wide, "strict13 {strict} vs wide {wide}");
+    }
+
+    #[test]
+    fn no_systematic_momentum_pumping() {
+        // Regression for an RTL-class bug: truncating shifts in the
+        // integrator bias every dv by −½ LSB, so the center of mass
+        // accelerates without bound. With round-to-nearest the COM must
+        // stay put (sub-LSB) over a long zero-net-force run.
+        let pes = WaterPes::dft_surrogate();
+        let mut sys = eq_system();
+        sys.vel[1] = Vec3::new(0.01, -0.006, 0.004);
+        sys.vel[2] = Vec3::new(-0.008, 0.005, -0.002);
+        sys.zero_momentum();
+        let mut fpga = WaterFpga::new(&sys, 0.25);
+        let masses = [15.9994, 1.00794, 1.00794];
+        let com0 = {
+            let p = fpga.positions();
+            (p[0] * masses[0] + p[1] * masses[1] + p[2] * masses[2]) / 18.015
+        };
+        for _ in 0..20_000 {
+            let frames = fpga.extract_features();
+            let pos_fx = fpga.positions();
+            let mut f_fx = vec![Vec3::ZERO; 3];
+            pes.compute(&pos_fx, &mut f_fx);
+            let mut c = [[Q13::ZERO; 2]; 2];
+            for hi in 0..2 {
+                let loc = crate::features::water_force_to_local(&pos_fx, 1 + hi, f_fx[1 + hi]);
+                c[hi] = [Q13::from_f64(loc[0]), Q13::from_f64(loc[1])];
+            }
+            fpga.integrate(&frames, c);
+        }
+        let com1 = {
+            let p = fpga.positions();
+            (p[0] * masses[0] + p[1] * masses[1] + p[2] * masses[2]) / 18.015
+        };
+        let drift = (com1 - com0).norm();
+        assert!(drift < 0.05, "COM drifted {drift} Å over 5 ps — momentum pumping");
+    }
+
+    #[test]
+    fn op_counters_grow() {
+        let sys = eq_system();
+        let mut fpga = WaterFpga::new(&sys, 0.25);
+        let frames = fpga.extract_features();
+        let before = fpga.ops;
+        fpga.integrate(&frames, [[Q13::ZERO; 2]; 2]);
+        assert!(fpga.ops.mults > before.mults);
+        assert!(fpga.ops.adds > before.adds);
+        assert_eq!(fpga.steps, 1);
+    }
+
+    #[test]
+    fn state_saturates_instead_of_wrapping() {
+        let mut sys = eq_system();
+        sys.vel[1] = Vec3::new(1e6, 0.0, 0.0); // absurd velocity
+        let fpga = WaterFpga::new(&sys, 0.25);
+        // encoded state must be clamped, not wrapped negative
+        let v = fpga.velocities()[1];
+        assert!(v.x > 0.0 && v.x <= 32.0, "v.x = {}", v.x);
+    }
+}

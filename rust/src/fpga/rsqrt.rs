@@ -1,0 +1,151 @@
+//! Fixed-point reciprocal square root — the FPGA feature module's core
+//! (features are inverse distances 1/r computed from r² accumulations).
+//!
+//! Hardware algorithm: normalize r² into [1, 4) by even shifts, look up a
+//! 64-entry seed table for 1/√m, refine with one Newton–Raphson step
+//! (y ← y·(3 − m·y²)/2), denormalize. All integer arithmetic; matches
+//! `1/sqrt` to within ~1 Q13 LSB over the feature range.
+
+use std::sync::OnceLock;
+
+use crate::fixedpoint::{q13, shift_raw, Q13};
+
+/// Seed-table fraction bits.
+const SEED_FRAC: u32 = 12;
+const LUT_SIZE: usize = 64;
+
+fn lut() -> &'static [i64; LUT_SIZE] {
+    static LUT: OnceLock<[i64; LUT_SIZE]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0i64; LUT_SIZE];
+        for (i, slot) in t.iter_mut().enumerate() {
+            // m midpoint in [1, 4)
+            let m = 1.0 + 3.0 * (i as f64 + 0.5) / LUT_SIZE as f64;
+            *slot = ((1.0 / m.sqrt()) * (1i64 << SEED_FRAC) as f64).round() as i64;
+        }
+        t
+    })
+}
+
+/// Working precision of the Newton refinement (fraction bits).
+const WORK_FRAC: u32 = 24;
+
+/// Compute 1/sqrt(x) as a raw fixed-point value with `frac_out` fraction
+/// bits, where `x_raw` has `frac_in` fraction bits. `newton_iters` ≥ 1;
+/// two iterations reach ~2⁻²⁶ relative accuracy (needed ahead of the
+/// feature-conditioning gain). Returns i64::MAX/2-saturated output for
+/// x ≤ 0 (hardware guards divide-by-zero with saturation).
+pub fn rsqrt_raw(x_raw: i64, frac_in: u32, frac_out: u32, newton_iters: u32) -> i64 {
+    if x_raw <= 0 {
+        return i64::MAX / 2;
+    }
+    // Normalize: find k with m = x · 2^(2k) ∈ [1, 4).
+    let mut m_raw = x_raw;
+    let mut k: i32 = 0;
+    let lo = 1i64 << frac_in;
+    let hi = lo << 2;
+    while m_raw < lo {
+        m_raw <<= 2;
+        k += 1;
+    }
+    while m_raw >= hi {
+        m_raw >>= 2;
+        k -= 1;
+    }
+    // Seed from the LUT, widened to the working precision.
+    let idx = (((m_raw - lo) as u128 * LUT_SIZE as u128) / ((hi - lo) as u128)) as usize;
+    let mut y = lut()[idx.min(LUT_SIZE - 1)] << (WORK_FRAC - SEED_FRAC); // frac WORK
+
+    // Newton: y ← y·(3 − m·y²)/2, all in frac WORK.
+    for _ in 0..newton_iters {
+        let ysq = ((y as i128 * y as i128) >> WORK_FRAC) as i64; // frac WORK
+        let t = ((m_raw as i128 * ysq as i128) >> frac_in) as i64; // frac WORK
+        let three = 3i64 << WORK_FRAC;
+        y = ((y as i128 * (three - t) as i128) >> (WORK_FRAC + 1)) as i64;
+    }
+
+    // Denormalize: 1/sqrt(x) = y · 2^k, convert frac WORK → frac_out.
+    shift_raw(y, k + frac_out as i32 - WORK_FRAC as i32)
+}
+
+/// Compute Q13(1/sqrt(x)) where `x_raw` is a non-negative fixed-point
+/// value with `frac` fraction bits (one Newton step — the original
+/// 13-bit-output unit). Saturates for x ≤ 0.
+pub fn rsqrt_q13(x_raw: i64, frac: u32) -> Q13 {
+    let raw = rsqrt_raw(x_raw, frac, q13::FRAC, 1);
+    Q13(raw.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_range(lo: f64, hi: f64, tol_lsb: f64) {
+        let frac = 20u32;
+        let mut x = lo;
+        while x < hi {
+            let raw = (x * (1i64 << frac) as f64).round() as i64;
+            let got = rsqrt_q13(raw, frac).to_f64();
+            let want = 1.0 / (raw as f64 / (1i64 << frac) as f64).sqrt();
+            assert!(
+                (got - want).abs() <= tol_lsb * q13::LSB,
+                "x={x}: got {got} want {want}"
+            );
+            x *= 1.013;
+        }
+    }
+
+    #[test]
+    fn accurate_over_feature_range() {
+        // water distances r ∈ (0.7, 2.3) ⇒ r² ∈ (0.49, 5.3)
+        check_range(0.45, 5.5, 1.5);
+    }
+
+    #[test]
+    fn accurate_over_wide_range() {
+        check_range(0.08, 14.9, 2.5);
+    }
+
+    #[test]
+    fn saturates_on_zero_and_negative() {
+        assert_eq!(rsqrt_q13(0, 20), Q13::MAX);
+        assert_eq!(rsqrt_q13(-5, 20), Q13::MAX);
+    }
+
+    #[test]
+    fn saturates_on_tiny_input() {
+        // 1/sqrt(tiny) overflows Q13 → MAX.
+        let raw = 1i64; // 2^-20
+        assert_eq!(rsqrt_q13(raw, 20), Q13::MAX);
+    }
+
+    #[test]
+    fn rsqrt_raw_two_newton_is_high_precision() {
+        // ahead of the ×2^m feature gain the unit must be accurate to
+        // well below one amplified LSB: rel err < 1e-6 with 2 iterations.
+        let frac = 20u32;
+        let mut x = 0.45;
+        while x < 5.5 {
+            let raw = (x * (1i64 << frac) as f64).round() as i64;
+            let got = rsqrt_raw(raw, frac, 24, 2) as f64 / (1i64 << 24) as f64;
+            let want = 1.0 / (raw as f64 / (1i64 << frac) as f64).sqrt();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 1e-6, "x={x}: rel err {rel}");
+            x *= 1.017;
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        let frac = 20u32;
+        let mut prev = i32::MAX;
+        let mut x = 0.3;
+        while x < 10.0 {
+            let raw = (x * (1i64 << frac) as f64) as i64;
+            let q = rsqrt_q13(raw, frac).0;
+            assert!(q <= prev, "not monotone at {x}");
+            prev = q;
+            x *= 1.07;
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Hardware models: gate-level transistor-count synthesis (the stand-in
+//! for the paper's Synopsys DC reports, Figs. 3b/5), the per-operation
+//! energy model (Table III power rows), and the cycle/latency model of
+//! the heterogeneous system (Table III speed row).
+
+pub mod synth;
+pub mod power;
+pub mod timing;
+
+pub use synth::Netlist;
+pub use power::{EnergyModel, ProcessNode};
+pub use timing::SystemTiming;

@@ -1,0 +1,242 @@
+//! Energy/power model — the basis of the paper's Table III energy rows.
+//!
+//! Per-operation energies start from the widely used 45 nm/0.9 V numbers
+//! (Horowitz, ISSCC 2014: "Computing's energy problem") and scale with
+//! process node as E ∝ C·V² (capacitance ≈ linear in feature size). The
+//! chip/system power constants are then *calibrated* to the paper's two
+//! measurements — 8.7 mW per MLP chip and 1.9 W system total — with the
+//! calibration residual absorbed into the static (leakage + clock tree +
+//! I/O) terms, exactly the terms a dynamic op-count model cannot predict.
+//! The GPU/CPU rows of Table III use the paper's published device powers
+//! (they cannot be measured on this testbed); see EXPERIMENTS.md.
+
+/// A fabrication process node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProcessNode {
+    pub nm: f64,
+    pub vdd: f64,
+}
+
+impl ProcessNode {
+    /// Horowitz reference node.
+    pub const N45: ProcessNode = ProcessNode { nm: 45.0, vdd: 0.9 };
+    /// The paper's ASIC (SilTerra 180 nm, 1.8 V core).
+    pub const N180: ProcessNode = ProcessNode { nm: 180.0, vdd: 1.8 };
+    /// The projection node of §VI.
+    pub const N14: ProcessNode = ProcessNode { nm: 14.0, vdd: 0.8 };
+
+    /// Energy scale factor relative to the 45 nm reference:
+    /// E ∝ C·V² with C ∝ feature size.
+    pub fn energy_scale(&self) -> f64 {
+        (self.nm / Self::N45.nm) * (self.vdd / Self::N45.vdd).powi(2)
+    }
+
+    /// Achievable clock frequency scale (§VI: advanced nodes reach GHz;
+    /// delay ∝ CV/I roughly ∝ feature size at constant field).
+    pub fn freq_scale(&self) -> f64 {
+        Self::N45.nm / self.nm
+    }
+
+    /// Transistor-density scale relative to this node (for the §VI
+    /// intra-ASIC parallelization argument): density ∝ 1/feature².
+    pub fn density_vs(&self, other: ProcessNode) -> f64 {
+        (self.nm / other.nm).powi(2)
+    }
+}
+
+/// Per-op energies in picojoules at a given node.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    pub node: ProcessNode,
+    /// 13-bit add (scaled from 0.03 pJ @8b/45nm ≈ linear in width).
+    pub add13_pj: f64,
+    /// 16-bit add.
+    pub add16_pj: f64,
+    /// Barrel shift, 13-bit.
+    pub shift13_pj: f64,
+    /// 13×13 multiply (≈ quadratic in width from 0.2 pJ @8b).
+    pub mult13_pj: f64,
+    /// 16×16 multiply.
+    pub mult16_pj: f64,
+    /// 32-bit float multiply-add (CPU/GPU comparisons).
+    pub fp32_fma_pj: f64,
+    /// Local (distributed, near-compute) SRAM read per 16-bit word.
+    pub sram_local_pj: f64,
+    /// Off-chip DRAM access per 16-bit word — the "memory wall" cost the
+    /// NvN design avoids.
+    pub dram_pj: f64,
+    /// Register write per bit.
+    pub reg_bit_pj: f64,
+}
+
+impl EnergyModel {
+    pub fn at(node: ProcessNode) -> Self {
+        let s = node.energy_scale();
+        // 45 nm baselines (Horowitz): add8 0.03, add32 0.1, mult8 0.2,
+        // mult32 3.1, 8K-SRAM read 10 (per 64b → 2.5/16b), DRAM 1.3–2.6 nJ
+        // per 64b → ~325 pJ/16b.
+        let add8 = 0.03;
+        let mult8 = 0.2;
+        EnergyModel {
+            node,
+            add13_pj: s * add8 * 13.0 / 8.0,
+            add16_pj: s * add8 * 16.0 / 8.0,
+            shift13_pj: s * 0.01 * 13.0 / 8.0,
+            mult13_pj: s * mult8 * (13.0f64 / 8.0).powi(2),
+            mult16_pj: s * mult8 * (16.0f64 / 8.0).powi(2),
+            fp32_fma_pj: s * (3.1 + 0.9),
+            sram_local_pj: s * 2.5,
+            dram_pj: s * 325.0,
+            reg_bit_pj: s * 0.01,
+        }
+    }
+}
+
+/// Operation counts of one unit of work (e.g. one MLP inference or one
+/// MD step) — filled by the device simulators.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCounts {
+    pub shifts: u64,
+    pub adds: u64,
+    pub mults: u64,
+    pub sram_reads: u64,
+    pub reg_writes_bits: u64,
+    pub dram_accesses: u64,
+}
+
+impl OpCounts {
+    pub fn energy_pj(&self, e: &EnergyModel) -> f64 {
+        self.shifts as f64 * e.shift13_pj
+            + self.adds as f64 * e.add13_pj
+            + self.mults as f64 * e.mult13_pj
+            + self.sram_reads as f64 * e.sram_local_pj
+            + self.reg_writes_bits as f64 * e.reg_bit_pj
+            + self.dram_accesses as f64 * e.dram_pj
+    }
+    pub fn merge(&mut self, o: &OpCounts) {
+        self.shifts += o.shifts;
+        self.adds += o.adds;
+        self.mults += o.mults;
+        self.sram_reads += o.sram_reads;
+        self.reg_writes_bits += o.reg_writes_bits;
+        self.dram_accesses += o.dram_accesses;
+    }
+    pub fn scale(&self, n: u64) -> OpCounts {
+        OpCounts {
+            shifts: self.shifts * n,
+            adds: self.adds * n,
+            mults: self.mults * n,
+            sram_reads: self.sram_reads * n,
+            reg_writes_bits: self.reg_writes_bits * n,
+            dram_accesses: self.dram_accesses * n,
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Calibrated device power constants (paper measurements).
+// ------------------------------------------------------------------
+
+/// Measured power of one MLP chip (paper §V-C): 8.7 mW. The dynamic part
+/// predicted by the op model at 25 MHz is tens of µW for the water MLP;
+/// the remainder is static (leakage, clock tree, I/O pads) and is carried
+/// as this calibrated constant.
+pub const CHIP_POWER_W: f64 = 8.7e-3;
+
+/// Measured total system power (paper §V-C): 1.9 W (FPGA + 2 chips).
+pub const SYSTEM_POWER_W: f64 = 1.9;
+
+/// FPGA share of the system power (system minus two chips).
+pub fn fpga_power_w() -> f64 {
+    SYSTEM_POWER_W - 2.0 * CHIP_POWER_W
+}
+
+/// Published device powers used for the rows of Table III that cannot be
+/// measured on this testbed (values as reported in the paper).
+pub mod published {
+    /// DFT on CPU (paper row 1).
+    pub const DFT_CPU_W: f64 = 230.0;
+    /// vN-MLMD on CPU (paper row 2, Xeon E5-2696 v2).
+    pub const VN_MLMD_CPU_W: f64 = 45.0;
+    /// DeePMD on CPU (paper row 3).
+    pub const DEEPMD_CPU_W: f64 = 152.0;
+    /// DeePMD on CPU + V100 GPU (paper row 4).
+    pub const DEEPMD_GPU_W: f64 = 250.0;
+    /// Paper-reported speeds (s/step/atom) for external baselines that
+    /// involve hardware we do not have.
+    pub const DEEPMD_GPU_S: f64 = 2.6e-6;
+    pub const DFT_CPU_S: f64 = 1.9;
+}
+
+/// FPGA vs ASIC energy/area overhead at the same node (Kuon & Rose,
+/// TCAD 2007: FPGAs cost ~12–40× area and ~9–12× dynamic power). Used
+/// when modelling what the FPGA modules would cost as ASIC and in the
+/// §VI discussion.
+pub const FPGA_VS_ASIC_ENERGY: f64 = 10.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_scaling_monotone() {
+        let e180 = ProcessNode::N180.energy_scale();
+        let e45 = ProcessNode::N45.energy_scale();
+        let e14 = ProcessNode::N14.energy_scale();
+        assert!((e45 - 1.0).abs() < 1e-12);
+        assert!(e180 > 10.0 && e180 < 20.0, "180nm scale {e180}"); // 4×4 = 16
+        assert!(e14 < 0.3, "14nm scale {e14}");
+    }
+
+    #[test]
+    fn density_projection_matches_paper_section_vi() {
+        // §VI: 14 nm has ~2 orders of magnitude higher integration than
+        // 180 nm.
+        let d = ProcessNode::N180.density_vs(ProcessNode::N14);
+        assert!((50.0..500.0).contains(&d), "density ratio {d}");
+    }
+
+    #[test]
+    fn energy_table_sane_at_180nm() {
+        let e = EnergyModel::at(ProcessNode::N180);
+        // multiply ≫ add ≫ shift; DRAM ≫ everything (the memory wall).
+        assert!(e.mult13_pj > 5.0 * e.add13_pj);
+        assert!(e.add13_pj > e.shift13_pj);
+        assert!(e.dram_pj > 50.0 * e.mult13_pj);
+        // a 13-bit add at 180 nm is still well under a nanojoule
+        assert!(e.add13_pj < 10.0);
+    }
+
+    #[test]
+    fn op_counts_energy_accumulates() {
+        let e = EnergyModel::at(ProcessNode::N180);
+        let a = OpCounts { shifts: 27, adds: 40, ..Default::default() };
+        let b = OpCounts { mults: 3, sram_reads: 16, ..Default::default() };
+        let mut c = a;
+        c.merge(&b);
+        let total = c.energy_pj(&e);
+        assert!((total - (a.energy_pj(&e) + b.energy_pj(&e))).abs() < 1e-12);
+        assert!(total > 0.0);
+        assert_eq!(a.scale(2).adds, 80);
+    }
+
+    #[test]
+    fn chip_dynamic_well_below_measured_power() {
+        // The water MLP's dynamic op energy at 25 MHz must come out far
+        // below 8.7 mW — the model attributes the rest to static power,
+        // matching the calibration note.
+        let e = EnergyModel::at(ProcessNode::N180);
+        // rough water-MLP per-inference ops (see asic::tests for exact);
+        // no per-inference SRAM traffic — weights are statically wired
+        // (the NvN architecture).
+        let per_inf = OpCounts { shifts: 72, adds: 60, mults: 6, reg_writes_bits: 200, ..Default::default() };
+        let inf_per_s = 25.0e6 / 15.0;
+        let dyn_w = per_inf.energy_pj(&e) * 1e-12 * inf_per_s;
+        assert!(dyn_w < 0.1 * CHIP_POWER_W, "dynamic {dyn_w} W");
+    }
+
+    #[test]
+    fn system_power_budget() {
+        assert!(fpga_power_w() > 1.8 && fpga_power_w() < 1.9);
+    }
+}

@@ -1,0 +1,443 @@
+//! Gate-level transistor-count model — the reproduction's stand-in for
+//! the paper's Synopsys Design Compiler reports (Fig. 3b: tanh 50 418 T
+//! vs φ 4 098 T; Fig. 5: SQNN/FQNN ratios).
+//!
+//! Circuits are described as netlists of standard static-CMOS primitives
+//! with textbook transistor counts; composite blocks (adders, barrel
+//! shifters, array multipliers/squarers, CORDIC stages) are assembled
+//! from them exactly as the RTL of §III–IV describes. The model is *not*
+//! fitted to the paper's numbers — the two anchors are reproduced from
+//! the architecture (unrolled 14-stage hyperbolic CORDIC + array divider
+//! for tanh; conditional-negate + unsigned squarer + subtractor for φ)
+//! and the tests assert agreement within a stated band, with the exact
+//! measured values reported by `cargo bench --bench fig3_transistors`.
+
+use std::collections::BTreeMap;
+
+/// Static-CMOS primitive gates and their transistor counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Prim {
+    Not,
+    Nand2,
+    Nor2,
+    And2,
+    Or2,
+    Xor2,
+    Mux2,
+    FullAdder,
+    HalfAdder,
+    Dff,
+    SramBit,
+    RomBit,
+}
+
+impl Prim {
+    pub fn transistors(self) -> u64 {
+        match self {
+            Prim::Not => 2,
+            Prim::Nand2 | Prim::Nor2 => 4,
+            Prim::And2 | Prim::Or2 => 6,
+            Prim::Xor2 => 8,
+            Prim::Mux2 => 6,       // transmission-gate mux + inverter
+            Prim::FullAdder => 28, // standard static mirror adder
+            Prim::HalfAdder => 14, // XOR + AND2
+            Prim::Dff => 24,       // TG master–slave
+            Prim::SramBit => 6,
+            Prim::RomBit => 1,
+        }
+    }
+}
+
+/// A named bag of primitives.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub name: String,
+    counts: BTreeMap<Prim, u64>,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Netlist { name: name.to_string(), counts: BTreeMap::new() }
+    }
+    pub fn add(&mut self, p: Prim, n: u64) -> &mut Self {
+        *self.counts.entry(p).or_insert(0) += n;
+        self
+    }
+    pub fn merge(&mut self, other: &Netlist) -> &mut Self {
+        for (p, n) in &other.counts {
+            *self.counts.entry(*p).or_insert(0) += n;
+        }
+        self
+    }
+    /// Merge `other` scaled by a multiplicity.
+    pub fn merge_n(&mut self, other: &Netlist, times: u64) -> &mut Self {
+        for (p, n) in &other.counts {
+            *self.counts.entry(*p).or_insert(0) += n * times;
+        }
+        self
+    }
+    pub fn transistors(&self) -> u64 {
+        self.counts.iter().map(|(p, n)| p.transistors() * n).sum()
+    }
+    pub fn count(&self, p: Prim) -> u64 {
+        self.counts.get(&p).copied().unwrap_or(0)
+    }
+    pub fn breakdown(&self) -> Vec<(Prim, u64, u64)> {
+        self.counts
+            .iter()
+            .map(|(p, n)| (*p, *n, p.transistors() * *n))
+            .collect()
+    }
+}
+
+// ------------------------------------------------------------------
+// Composite arithmetic blocks.
+// ------------------------------------------------------------------
+pub mod blocks {
+    use super::{Netlist, Prim};
+
+    /// n-bit ripple-carry adder.
+    pub fn adder(bits: u64) -> Netlist {
+        let mut n = Netlist::new("adder");
+        n.add(Prim::FullAdder, bits);
+        n
+    }
+
+    /// n-bit adder/subtractor (adder + XOR row for operand inversion).
+    pub fn add_sub(bits: u64) -> Netlist {
+        let mut n = adder(bits);
+        n.name = "add_sub".into();
+        n.add(Prim::Xor2, bits);
+        n
+    }
+
+    /// Two's-complement negate: XOR row + increment (half-adder chain).
+    pub fn negate(bits: u64) -> Netlist {
+        let mut n = Netlist::new("negate");
+        n.add(Prim::Xor2, bits).add(Prim::HalfAdder, bits);
+        n
+    }
+
+    /// Conditional negate (the sign/symbol selector of Fig. 7): negate +
+    /// output mux.
+    pub fn sign_select(bits: u64) -> Netlist {
+        let mut n = negate(bits);
+        n.name = "sign_select".into();
+        n.add(Prim::Mux2, bits);
+        n
+    }
+
+    /// Barrel shifter: `stages` mux levels across the datapath width.
+    pub fn barrel_shifter(bits: u64, stages: u64) -> Netlist {
+        let mut n = Netlist::new("barrel_shifter");
+        n.add(Prim::Mux2, bits * stages);
+        n
+    }
+
+    /// Unsigned n×m array multiplier: n·m AND partial products +
+    /// (n−1)·m full-adder reduction rows.
+    pub fn array_multiplier(n_bits: u64, m_bits: u64) -> Netlist {
+        let mut n = Netlist::new("array_multiplier");
+        n.add(Prim::And2, n_bits * m_bits);
+        n.add(Prim::FullAdder, (n_bits.saturating_sub(1)) * m_bits);
+        n
+    }
+
+    /// Signed (Baugh–Wooley) n×m multiplier: array + sign-correction row.
+    pub fn signed_multiplier(n_bits: u64, m_bits: u64) -> Netlist {
+        let mut n = array_multiplier(n_bits, m_bits);
+        n.name = "signed_multiplier".into();
+        n.add(Prim::Not, n_bits + m_bits);
+        n.add(Prim::FullAdder, m_bits);
+        n
+    }
+
+    /// Unsigned squarer: folding the partial-product array over its
+    /// diagonal symmetry removes ≈ half the array (classic optimization).
+    pub fn squarer(bits: u64) -> Netlist {
+        let mut n = Netlist::new("squarer");
+        n.add(Prim::And2, bits * (bits + 1) / 2);
+        n.add(Prim::FullAdder, bits.saturating_sub(1) * bits / 2);
+        n
+    }
+
+    /// Magnitude comparator against a constant: ~4T/bit of gating.
+    pub fn comparator_const(bits: u64) -> Netlist {
+        let mut n = Netlist::new("comparator_const");
+        n.add(Prim::And2, bits / 2).add(Prim::Or2, bits / 2).add(Prim::Not, bits % 2);
+        n
+    }
+
+    /// n-bit register.
+    pub fn register(bits: u64) -> Netlist {
+        let mut n = Netlist::new("register");
+        n.add(Prim::Dff, bits);
+        n
+    }
+
+    /// Non-restoring array divider (n-bit quotient): n rows of
+    /// (add/sub + quotient mux).
+    pub fn array_divider(bits: u64) -> Netlist {
+        let mut n = Netlist::new("array_divider");
+        for _ in 0..bits {
+            n.merge(&add_sub(bits));
+            n.add(Prim::Mux2, bits);
+        }
+        n
+    }
+
+    /// Distributed weight storage (the NvN "memory near compute"): SRAM
+    /// bits co-located with the MACs.
+    pub fn weight_sram(bits: u64) -> Netlist {
+        let mut n = Netlist::new("weight_sram");
+        n.add(Prim::SramBit, bits);
+        n
+    }
+}
+
+// ------------------------------------------------------------------
+// Paper circuits.
+// ------------------------------------------------------------------
+
+/// Datapath width of the system (1 + 2 + 10, §IV-C).
+pub const Q13_BITS: u64 = 13;
+/// FQNN baseline width (Fig. 5).
+pub const FQNN_BITS: u64 = 16;
+/// CORDIC tanh implementation width/iterations (16-bit fixed point,
+/// 14 hyperbolic iterations — the standard choice for ~1e-4 accuracy,
+/// cf. `nn::activation::tanh_cordic` tests).
+pub const CORDIC_BITS: u64 = 16;
+pub const CORDIC_ITERS: u64 = 14;
+/// SU shift-exponent field width (two's complement; exponents in
+/// [−16, 15], see `quant::EXP_MIN/MAX`) ⇒ 5-stage barrel shifters.
+pub const SU_SHIFT_STAGES: u64 = 5;
+pub const SU_EXP_BITS: u64 = 5;
+
+/// The φ(x) activation unit of Fig. 7: two range selectors
+/// (comparator + saturation mux), conditional negate producing |x|, an
+/// unsigned squarer computing x·|x| = sign·|x|² (11 significant bits in
+/// (−2,2) with 10 fraction bits), a hardwired >>2 (free), and a
+/// subtractor.
+pub fn phi_unit(bits: u64) -> Netlist {
+    let mag_bits = bits - 2; // |x| < 2 ⇒ drop sign and top integer bit
+    let mut n = Netlist::new("phi_unit");
+    n.merge(&blocks::comparator_const(bits)); // x ≥ 2
+    n.merge(&blocks::comparator_const(bits)); // x ≤ −2
+    n.add(Prim::Mux2, 2 * bits); // two saturation selectors
+    n.merge(&blocks::negate(bits)); // |x|
+    n.merge(&blocks::squarer(mag_bits)); // |x|²
+    n.merge(&blocks::sign_select(bits)); // sign·|x|² (x·|x|)
+    // >>2 is wiring (0 T)
+    n.merge(&blocks::add_sub(bits)); // x − (x·|x|)>>2
+    n
+}
+
+/// The CORDIC tanh unit the paper synthesized for comparison (Fig. 3b):
+/// an unrolled pipeline of `iters` hyperbolic rotation stages (3
+/// add/subs + 3 pipeline registers per stage; shifts hardwired in an
+/// unrolled design; atanh constants folded into the z-path adders as ROM
+/// bits), plus the final y/x division (tanh = sinh/cosh) on an array
+/// divider, plus range-reduction compare/select.
+pub fn tanh_cordic_unit(bits: u64, iters: u64) -> Netlist {
+    let mut n = Netlist::new("tanh_cordic_unit");
+    for _ in 0..iters {
+        n.merge(&blocks::add_sub(bits)); // x-path
+        n.merge(&blocks::add_sub(bits)); // y-path
+        n.merge(&blocks::add_sub(bits)); // z-path
+        n.merge(&blocks::register(bits)); // pipeline regs ×3
+        n.merge(&blocks::register(bits));
+        n.merge(&blocks::register(bits));
+        n.add(Prim::RomBit, bits); // atanh constant
+    }
+    n.merge(&blocks::array_divider(bits)); // y/x
+    n.merge(&blocks::comparator_const(bits)); // range check
+    n.add(Prim::Mux2, bits);
+    n
+}
+
+/// One shift unit (SU, Fig. 7): K barrel shifters, a (K−1)-adder
+/// reduction, and the symbol selector; plus the distributed storage of
+/// the quantized weight (1 sign bit + K exponent fields).
+pub fn shift_unit(bits: u64, k: u64) -> Netlist {
+    let mut n = Netlist::new("shift_unit");
+    for _ in 0..k {
+        n.merge(&blocks::barrel_shifter(bits, SU_SHIFT_STAGES));
+    }
+    for _ in 0..k.saturating_sub(1) {
+        n.merge(&blocks::adder(bits));
+    }
+    n.merge(&blocks::sign_select(bits));
+    n.merge(&blocks::weight_sram(1 + k * SU_EXP_BITS));
+    n
+}
+
+/// FQNN's per-weight datapath: a signed multiplier + weight storage.
+pub fn mult_unit(bits: u64) -> Netlist {
+    let mut n = Netlist::new("mult_unit");
+    n.merge(&blocks::signed_multiplier(bits, bits));
+    n.merge(&blocks::weight_sram(bits));
+    n
+}
+
+/// A matrix unit (MU, Fig. 7): `fan_in` per-weight datapaths, the
+/// adder-tree reduction, the bias add (+ bias storage), and the output
+/// register.
+fn matrix_unit(per_weight: &Netlist, bits: u64, fan_in: u64) -> Netlist {
+    let mut n = Netlist::new("matrix_unit");
+    n.merge_n(per_weight, fan_in);
+    for _ in 0..fan_in.saturating_sub(1) {
+        n.merge(&blocks::adder(bits)); // reduction tree
+    }
+    n.merge(&blocks::adder(bits)); // bias
+    n.merge(&blocks::weight_sram(bits)); // bias storage
+    n.merge(&blocks::register(bits)); // output register
+    n
+}
+
+/// Which per-weight datapath an MLP synthesis uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightDatapath {
+    /// Shift–add with K terms (SQNN).
+    Shift { k: u64 },
+    /// Fixed-point multiplier (FQNN).
+    Multiplier,
+}
+
+/// Synthesize a full MLP (Fig. 7 replicated per layer): for every layer,
+/// `out_dim` MUs + `out_dim` activation units (the output layer is
+/// linear, no AU). `arch` = [in, h1, …, out].
+pub fn mlp_netlist(arch: &[usize], bits: u64, dp: WeightDatapath) -> Netlist {
+    assert!(arch.len() >= 2);
+    let per_weight = match dp {
+        WeightDatapath::Shift { k } => shift_unit(bits, k),
+        WeightDatapath::Multiplier => mult_unit(bits),
+    };
+    let phi = phi_unit(bits);
+    let mut n = Netlist::new("mlp");
+    for (li, pair) in arch.windows(2).enumerate() {
+        let (fan_in, out_dim) = (pair[0] as u64, pair[1] as u64);
+        let mu = matrix_unit(&per_weight, bits, fan_in);
+        n.merge_n(&mu, out_dim);
+        let is_output = li == arch.len() - 2;
+        if !is_output {
+            n.merge_n(&phi, out_dim);
+        }
+    }
+    // input registers
+    n.merge(&blocks::register(bits * arch[0] as u64));
+    n
+}
+
+/// Paper anchors (Fig. 3b).
+pub const PAPER_TANH_T: u64 = 50_418;
+pub const PAPER_PHI_T: u64 = 4_098;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_counts_are_textbook() {
+        assert_eq!(Prim::FullAdder.transistors(), 28);
+        assert_eq!(blocks::adder(13).transistors(), 13 * 28);
+        assert_eq!(blocks::register(16).transistors(), 16 * 24);
+        let m = blocks::array_multiplier(8, 8);
+        assert_eq!(m.transistors(), 64 * 6 + 7 * 8 * 28);
+    }
+
+    #[test]
+    fn phi_anchor_within_band() {
+        let t = phi_unit(Q13_BITS).transistors();
+        let ratio = t as f64 / PAPER_PHI_T as f64;
+        assert!(
+            (0.65..=1.45).contains(&ratio),
+            "φ unit = {t} T vs paper {PAPER_PHI_T} (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn tanh_anchor_within_band() {
+        let t = tanh_cordic_unit(CORDIC_BITS, CORDIC_ITERS).transistors();
+        let ratio = t as f64 / PAPER_TANH_T as f64;
+        assert!(
+            (0.65..=1.45).contains(&ratio),
+            "tanh unit = {t} T vs paper {PAPER_TANH_T} (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn phi_is_an_order_of_magnitude_cheaper_than_tanh() {
+        // Paper: φ costs 8% of tanh. Assert the qualitative claim broadly.
+        let phi = phi_unit(Q13_BITS).transistors() as f64;
+        let tanh = tanh_cordic_unit(CORDIC_BITS, CORDIC_ITERS).transistors() as f64;
+        let frac = phi / tanh;
+        assert!(frac < 0.15, "φ/tanh = {frac:.3}");
+    }
+
+    #[test]
+    fn su_cheaper_than_multiplier_at_k3() {
+        let su = shift_unit(Q13_BITS, 3).transistors();
+        let mu = mult_unit(FQNN_BITS).transistors();
+        let ratio = su as f64 / mu as f64;
+        assert!(ratio < 0.55, "SU/mult = {ratio:.2}");
+        assert!(ratio > 0.10, "SU/mult = {ratio:.2} suspiciously low");
+    }
+
+    #[test]
+    fn sqnn_saves_50_to_70_percent_at_k3_on_larger_nets() {
+        // Fig. 5 headline: at K=3, SQNN saves ~50–70% vs FQNN, more for
+        // complex systems.
+        for arch in [&[32usize, 16, 16, 3][..], &[56, 48, 48, 3], &[64, 64, 64, 3]] {
+            let s = mlp_netlist(arch, Q13_BITS, WeightDatapath::Shift { k: 3 }).transistors();
+            let f = mlp_netlist(arch, FQNN_BITS, WeightDatapath::Multiplier).transistors();
+            let ratio = s as f64 / f as f64;
+            assert!(
+                (0.25..=0.55).contains(&ratio),
+                "arch {arch:?}: ratio {ratio:.2} ({s} vs {f})"
+            );
+        }
+    }
+
+    #[test]
+    fn ratio_decreases_with_complexity_and_increases_with_k() {
+        let archs: Vec<Vec<usize>> = vec![
+            vec![3, 3, 3, 2],
+            vec![32, 16, 16, 3],
+            vec![40, 24, 24, 3],
+            vec![48, 32, 32, 3],
+            vec![56, 48, 48, 3],
+            vec![64, 64, 64, 3],
+        ];
+        let mut prev = f64::INFINITY;
+        for arch in &archs {
+            let s = mlp_netlist(arch, Q13_BITS, WeightDatapath::Shift { k: 3 }).transistors();
+            let f = mlp_netlist(arch, FQNN_BITS, WeightDatapath::Multiplier).transistors();
+            let ratio = s as f64 / f as f64;
+            assert!(ratio < prev + 0.02, "ratio should fall with complexity");
+            prev = ratio;
+        }
+        // K sweep on one arch: ratio grows with K
+        let f = mlp_netlist(&[48, 32, 32, 3], FQNN_BITS, WeightDatapath::Multiplier).transistors();
+        let mut last = 0.0;
+        for k in 1..=5 {
+            let s = mlp_netlist(&[48, 32, 32, 3], Q13_BITS, WeightDatapath::Shift { k }).transistors();
+            let r = s as f64 / f as f64;
+            assert!(r > last, "k={k}");
+            last = r;
+        }
+    }
+
+    #[test]
+    fn netlist_merge_bookkeeping() {
+        let mut a = Netlist::new("a");
+        a.add(Prim::FullAdder, 2);
+        let mut b = Netlist::new("b");
+        b.add(Prim::FullAdder, 3).add(Prim::Not, 1);
+        a.merge_n(&b, 2);
+        assert_eq!(a.count(Prim::FullAdder), 8);
+        assert_eq!(a.count(Prim::Not), 2);
+        assert_eq!(a.transistors(), 8 * 28 + 2 * 2);
+        let bd = a.breakdown();
+        assert_eq!(bd.len(), 2);
+    }
+}

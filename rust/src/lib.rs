@@ -1,0 +1,68 @@
+//! # NvN-MLMD
+//!
+//! Reproduction of *"A Heterogeneous Parallel Non-von Neumann Architecture
+//! System for Accurate and Efficient Machine Learning Molecular Dynamics"*
+//! (IEEE TCSI 2023, DOI 10.1109/TCSI.2023.3255199).
+//!
+//! The crate is the Layer-3 (run-time) half of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1/L2** live in `python/compile/` and run only at build time: the
+//!   Pallas shift-quantized MLP kernel, the JAX MLMD compute graph, the
+//!   quantization-aware training pipeline, and the AOT lowering to HLO text.
+//! * **L3** (this crate) owns everything on the request path: the
+//!   heterogeneous coordinator that mirrors the paper's CPU + FPGA + 2×ASIC
+//!   topology, bit/cycle-accurate device simulators, the MD engine, the
+//!   physics oracles used as the DFT surrogate, the analysis stack, and the
+//!   PJRT runtime that executes the AOT artifacts as the von-Neumann
+//!   baseline.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! (E1–E10 map to the paper's Figs. 3–10 and Tables I–III).
+
+pub mod util;
+pub mod linalg;
+pub mod fixedpoint;
+pub mod quant;
+pub mod nn;
+pub mod hw;
+pub mod asic;
+pub mod fpga;
+pub mod md;
+pub mod potentials;
+pub mod features;
+pub mod datasets;
+pub mod analysis;
+pub mod dft;
+pub mod coordinator;
+pub mod runtime;
+pub mod benchkit;
+pub mod testkit;
+pub mod exp;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Canonical location of build artifacts (AOT HLO, trained models,
+/// generated datasets) relative to the repository root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve a path under the artifacts directory, honouring the
+/// `NVNMD_ARTIFACTS` environment variable so tests and benches work from
+/// any working directory.
+pub fn artifact_path(rel: &str) -> std::path::PathBuf {
+    let base = std::env::var("NVNMD_ARTIFACTS")
+        .unwrap_or_else(|_| ARTIFACTS_DIR.to_string());
+    let p = std::path::Path::new(&base).join(rel);
+    if p.exists() {
+        return p;
+    }
+    // Fall back to the repo root (benches may run from target/..).
+    for up in ["..", "../..", "../../.."] {
+        let q = std::path::Path::new(up).join(&base).join(rel);
+        if q.exists() {
+            return q;
+        }
+    }
+    p
+}

@@ -1,0 +1,166 @@
+//! Cyclic Jacobi eigensolver for real symmetric matrices.
+//!
+//! Used for normal-mode analysis (mass-weighted Hessians) and the toy SCF
+//! engine's Hamiltonian diagonalizations. Quadratic convergence; for our
+//! sizes (n ≤ a few hundred) this is plenty and avoids any LAPACK
+//! dependency.
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix. Returns `(eigenvalues,
+/// eigenvectors)` with eigenvalues ascending and eigenvectors as matrix
+/// columns (`vecs[(i, k)]` = component i of eigenvector k), satisfying
+/// `A·v_k = λ_k·v_k`.
+pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    // Enforce exact symmetry (tiny asymmetries from FD Hessians).
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+        s
+    };
+
+    let scale = m.fro_norm().max(1e-300);
+    let tol = (1e-14 * scale).powi(2);
+    let max_sweeps = 100;
+    for _sweep in 0..max_sweeps {
+        if off(&m) <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                // stable tangent of rotation angle
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // Apply rotation G(p,q,θ): m ← Gᵀ m G.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract and sort ascending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let evals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| evals[i].partial_cmp(&evals[j]).unwrap());
+    let sorted_vals: Vec<f64> = order.iter().map(|&i| evals[i]).collect();
+    let mut sorted_vecs = Mat::zeros(n, n);
+    for (newk, &oldk) in order.iter().enumerate() {
+        for i in 0..n {
+            sorted_vecs[(i, newk)] = v[(i, oldk)];
+        }
+    }
+    (sorted_vals, sorted_vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random_symmetric(n: usize, rng: &mut Pcg) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn diagonal_is_fixed_point() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -1.0;
+        a[(2, 2)] = 0.5;
+        let (vals, _) = eigh(&a);
+        assert!((vals[0] + 1.0).abs() < 1e-12);
+        assert!((vals[1] - 0.5).abs() < 1e-12);
+        assert!((vals[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 1, 3.
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (vals, vecs) = eigh(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        // eigenvector of λ=3 is (1,1)/√2 up to sign
+        let v = (vecs[(0, 1)], vecs[(1, 1)]);
+        assert!((v.0.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+        assert!((v.0 - v.1).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        let mut rng = Pcg::new(1234);
+        for &n in &[1usize, 2, 5, 20, 60] {
+            let a = random_symmetric(n, &mut rng);
+            let (vals, vecs) = eigh(&a);
+            // A·V = V·diag(λ)
+            let mut lam = Mat::zeros(n, n);
+            for i in 0..n {
+                lam[(i, i)] = vals[i];
+            }
+            let lhs = a.matmul(&vecs);
+            let rhs = vecs.matmul(&lam);
+            assert!(lhs.max_abs_diff(&rhs) < 1e-9 * (1.0 + a.fro_norm()), "n={n}");
+            // orthonormality
+            let vtv = vecs.transpose().matmul(&vecs);
+            assert!(vtv.max_abs_diff(&Mat::eye(n)) < 1e-10, "n={n}");
+            // ascending order
+            for w in vals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_and_frobenius_preserved() {
+        let mut rng = Pcg::new(99);
+        let a = random_symmetric(15, &mut rng);
+        let (vals, _) = eigh(&a);
+        let tr: f64 = (0..15).map(|i| a[(i, i)]).sum();
+        assert!((vals.iter().sum::<f64>() - tr).abs() < 1e-9);
+        let fro2: f64 = a.data.iter().map(|x| x * x).sum();
+        assert!((vals.iter().map(|x| x * x).sum::<f64>() - fro2).abs() < 1e-8);
+    }
+}

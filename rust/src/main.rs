@@ -1,0 +1,127 @@
+//! `nvnmd` — leader entrypoint and CLI of the NvN-MLMD reproduction.
+//!
+//! Subcommands map 1:1 onto the experiment index of DESIGN.md (E1–E10)
+//! plus the build-time data generator and an interactive MD runner.
+//! Argument parsing is hand-rolled (clap is unavailable offline).
+
+use anyhow::{bail, Result};
+
+use nvnmd::exp;
+
+const USAGE: &str = "\
+nvnmd — heterogeneous parallel non-von-Neumann MLMD (TCSI 2023 reproduction)
+
+USAGE: nvnmd <COMMAND> [OPTIONS]
+
+Build-time:
+  gen-data [--out DIR] [--quick]    generate the six datasets + quant vectors
+                                    (consumed by python/compile/train.py)
+
+Experiments (paper artifact → command):
+  fig3a        tanh vs φ curves (CSV)
+  fig3b        transistor counts: CORDIC-tanh vs φ unit
+  table1       force RMSE, tanh-MLP vs φ-MLP, six datasets
+  fig4         CNN vs QNN accuracy for K = 1..5, six datasets
+  fig5         SQNN/FQNN transistor ratio for K = 1..5, six datasets
+  fig9         MLP-chip force scatter vs DFT surrogate (RMSE)
+  table2       bond length / angle / vibration freqs, four methods
+  fig10        vibrational DOS spectra (CSV per mode/method)
+  table3       computational time & energy, five methods
+  scaling      §VI process-node projection (A1×A2)
+  all          every experiment in sequence
+
+Runtime:
+  run [--steps N] [--mode nvn|vn|chip-vs-oracle] [--dt FS] [--strict13]
+               drive the water system and print measured properties
+  info         artifact inventory and environment check
+
+Common options:
+  --quick      reduced step counts / sweep sizes (CI smoke)
+  --out DIR    output directory (default: artifacts or artifacts/report)
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny option scanner: `flag("--quick")`, `opt("--out")`.
+struct Opts<'a> {
+    rest: &'a [String],
+}
+
+impl<'a> Opts<'a> {
+    fn flag(&self, name: &str) -> bool {
+        self.rest.iter().any(|a| a == name)
+    }
+    fn opt(&self, name: &str) -> Option<&str> {
+        self.rest
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.rest.get(i + 1))
+            .map(|s| s.as_str())
+    }
+    fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for {name}: {v:?}")),
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let o = Opts { rest: &args[1..] };
+    let quick = o.flag("--quick");
+    match cmd.as_str() {
+        "gen-data" => {
+            let out = o.opt("--out").unwrap_or("artifacts/datasets").to_string();
+            exp::gen_data::run(&out, quick)
+        }
+        "fig3a" => exp::fig3::run_curves().map(print_report),
+        "fig3b" => exp::fig3::run_transistors().map(print_report),
+        "table1" => exp::table1::run().map(print_report),
+        "fig4" => exp::fig4::run().map(print_report),
+        "fig5" => exp::fig5::run().map(print_report),
+        "fig9" => exp::fig9::run().map(print_report),
+        "table2" => exp::table2::run(exp::table2::Config::with_quick(quick)).map(print_report),
+        "fig10" => exp::fig10::run(quick).map(print_report),
+        "table3" => exp::table3::run(quick).map(print_report),
+        "scaling" => exp::scaling::run().map(print_report),
+        "all" => {
+            for (name, f) in exp::all_experiments(quick) {
+                println!("\n########## {name} ##########");
+                print_report(f()?);
+            }
+            Ok(())
+        }
+        "run" => {
+            let steps = o.opt_parse("--steps", if quick { 5_000usize } else { 50_000 })?;
+            let dt = o.opt_parse("--dt", 0.25f64)?;
+            let mode = o.opt("--mode").unwrap_or("nvn").to_string();
+            let strict13 = o.flag("--strict13");
+            exp::run_md::run(&mode, steps, dt, strict13).map(print_report)
+        }
+        "info" => exp::info::run().map(print_report),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `nvnmd help`)"),
+    }
+}
+
+fn print_report(r: exp::Report) {
+    println!("{}", r.render());
+    if let Some(path) = &r.saved_to {
+        println!("[saved: {}]", path.display());
+    }
+}

@@ -1,0 +1,231 @@
+//! Molecular-dynamics engine: force-field abstraction, integrators
+//! (velocity Verlet for reference runs; the paper's semi-implicit Euler,
+//! Eqs. (2)–(3), as used by the FPGA integration module), thermostats,
+//! and trajectory sampling.
+
+pub mod integrator;
+pub mod thermostat;
+
+pub use integrator::{Integrator, euler_step, verlet_step};
+pub use thermostat::{berendsen_rescale, initialize_velocities, instantaneous_temperature};
+
+use crate::util::Vec3;
+
+/// A conservative force field: fills `forces` and returns the potential
+/// energy (eV). `forces.len()` must equal `pos.len()`.
+pub trait ForceField {
+    fn compute(&self, pos: &[Vec3], forces: &mut [Vec3]) -> f64;
+
+    /// Optional human-readable name for reports.
+    fn name(&self) -> &'static str {
+        "forcefield"
+    }
+}
+
+impl<T: ForceField + ?Sized> ForceField for &T {
+    fn compute(&self, pos: &[Vec3], forces: &mut [Vec3]) -> f64 {
+        (**self).compute(pos, forces)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// Mutable state of an MD system.
+#[derive(Debug, Clone)]
+pub struct System {
+    pub pos: Vec<Vec3>,
+    pub vel: Vec<Vec3>,
+    pub masses: Vec<f64>,
+}
+
+impl System {
+    pub fn new(pos: Vec<Vec3>, masses: Vec<f64>) -> Self {
+        let n = pos.len();
+        assert_eq!(masses.len(), n);
+        System { pos, vel: vec![Vec3::ZERO; n], masses }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pos.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.pos.is_empty()
+    }
+
+    /// Kinetic energy in eV: ½ Σ m v² / ACC_CONV (because v is Å/fs and
+    /// m·v² is amu·Å²/fs² = (1/ACC_CONV) eV).
+    pub fn kinetic_energy(&self) -> f64 {
+        let s: f64 = self
+            .vel
+            .iter()
+            .zip(&self.masses)
+            .map(|(v, m)| 0.5 * m * v.norm_sq())
+            .sum();
+        s / crate::util::units::ACC_CONV
+    }
+
+    /// Total linear momentum (amu·Å/fs).
+    pub fn momentum(&self) -> Vec3 {
+        self.vel
+            .iter()
+            .zip(&self.masses)
+            .fold(Vec3::ZERO, |acc, (v, m)| acc + *v * *m)
+    }
+
+    /// Remove center-of-mass velocity.
+    pub fn zero_momentum(&mut self) {
+        let total_m: f64 = self.masses.iter().sum();
+        let p = self.momentum();
+        let v_cm = p / total_m;
+        for v in &mut self.vel {
+            *v -= v_cm;
+        }
+    }
+
+    /// Shift positions so the center of mass sits at the origin.
+    pub fn center(&mut self) {
+        let total_m: f64 = self.masses.iter().sum();
+        let com = self
+            .pos
+            .iter()
+            .zip(&self.masses)
+            .fold(Vec3::ZERO, |acc, (r, m)| acc + *r * *m)
+            / total_m;
+        for r in &mut self.pos {
+            *r -= com;
+        }
+    }
+}
+
+/// An MD driver owning a system, a force field, and scratch buffers.
+pub struct Engine<'a, F: ForceField + ?Sized> {
+    pub sys: System,
+    pub ff: &'a F,
+    pub dt: f64,
+    forces: Vec<Vec3>,
+    pub potential_energy: f64,
+    pub steps_done: u64,
+}
+
+impl<'a, F: ForceField + ?Sized> Engine<'a, F> {
+    pub fn new(sys: System, ff: &'a F, dt: f64) -> Self {
+        let n = sys.len();
+        let mut e = Engine {
+            sys,
+            ff,
+            dt,
+            forces: vec![Vec3::ZERO; n],
+            potential_energy: 0.0,
+            steps_done: 0,
+        };
+        e.potential_energy = e.ff.compute(&e.sys.pos, &mut e.forces);
+        e
+    }
+
+    pub fn forces(&self) -> &[Vec3] {
+        &self.forces
+    }
+
+    /// One velocity-Verlet step (reference/high-accuracy path).
+    pub fn step_verlet(&mut self) {
+        self.potential_energy =
+            verlet_step(&mut self.sys, self.ff, self.dt, &mut self.forces);
+        self.steps_done += 1;
+    }
+
+    /// One semi-implicit-Euler step, the paper's Eqs. (2)–(3):
+    /// v(t) = v(t−dt) + F(t)/m·dt, then r(t+dt) = r(t) + v(t)·dt.
+    pub fn step_euler(&mut self) {
+        self.potential_energy =
+            euler_step(&mut self.sys, self.ff, self.dt, &mut self.forces);
+        self.steps_done += 1;
+    }
+
+    /// Total energy (eV).
+    pub fn total_energy(&self) -> f64 {
+        self.potential_energy + self.sys.kinetic_energy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units;
+
+    struct Harmonic3d {
+        k: f64,
+    }
+    impl ForceField for Harmonic3d {
+        fn compute(&self, pos: &[Vec3], forces: &mut [Vec3]) -> f64 {
+            let mut e = 0.0;
+            for (p, f) in pos.iter().zip(forces.iter_mut()) {
+                *f = *p * (-self.k);
+                e += 0.5 * self.k * p.norm_sq();
+            }
+            e
+        }
+    }
+
+    #[test]
+    fn verlet_conserves_energy_harmonic() {
+        let ff = Harmonic3d { k: 10.0 };
+        let sys = System::new(vec![Vec3::new(0.3, 0.0, 0.0)], vec![1.0]);
+        let period = 2.0 * std::f64::consts::PI / (10.0f64 * units::ACC_CONV).sqrt();
+        let dt = period / 100.0;
+        let mut e = Engine::new(sys, &ff, dt);
+        let e0 = e.total_energy();
+        for _ in 0..10_000 {
+            e.step_verlet();
+        }
+        let drift = (e.total_energy() - e0).abs() / e0;
+        assert!(drift < 1e-4, "drift={drift}");
+    }
+
+    #[test]
+    fn euler_tracks_verlet_for_small_dt() {
+        let ff = Harmonic3d { k: 10.0 };
+        let mut sys = System::new(vec![Vec3::new(0.2, 0.1, 0.0)], vec![1.0]);
+        sys.vel[0] = Vec3::new(0.0, 0.01, 0.0);
+        let dt = 0.01;
+        let mut a = Engine::new(sys.clone(), &ff, dt);
+        let mut b = Engine::new(sys, &ff, dt);
+        for _ in 0..200 {
+            a.step_verlet();
+            b.step_euler();
+        }
+        let d = (a.sys.pos[0] - b.sys.pos[0]).norm();
+        assert!(d < 5e-3, "divergence {d}");
+    }
+
+    #[test]
+    fn euler_oscillator_stays_bounded() {
+        // Semi-implicit Euler is symplectic: energy oscillates but stays
+        // bounded over long runs.
+        let ff = Harmonic3d { k: 30.0 };
+        let sys = System::new(vec![Vec3::new(0.3, 0.0, 0.0)], vec![1.0]);
+        let mut e = Engine::new(sys, &ff, 0.05);
+        let e0 = e.total_energy();
+        let mut max_e: f64 = 0.0;
+        for _ in 0..50_000 {
+            e.step_euler();
+            max_e = max_e.max(e.total_energy());
+        }
+        assert!(max_e < 1.5 * e0, "max={max_e} e0={e0}");
+    }
+
+    #[test]
+    fn momentum_tools() {
+        let mut sys = System::new(
+            vec![Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0)],
+            vec![2.0, 1.0],
+        );
+        sys.vel = vec![Vec3::new(1.0, 0.0, 0.0), Vec3::new(-1.0, 1.0, 0.0)];
+        assert_eq!(sys.momentum(), Vec3::new(1.0, 1.0, 0.0));
+        sys.zero_momentum();
+        assert!(sys.momentum().norm() < 1e-12);
+        sys.center();
+        let com = sys.pos[0] * 2.0 + sys.pos[1];
+        assert!(com.norm() < 1e-12);
+    }
+}

@@ -1,0 +1,100 @@
+//! Temperature control and velocity initialization for sampling runs
+//! (training-data generation uses a thermostatted trajectory; property
+//! measurements run NVE like the paper).
+
+use super::System;
+use crate::util::rng::Pcg;
+use crate::util::units::{ACC_CONV, KB};
+
+/// Instantaneous temperature from kinetic energy, using `dof` degrees of
+/// freedom (3N − constraints). T = 2·KE / (dof·k_B).
+pub fn instantaneous_temperature(sys: &System, dof: usize) -> f64 {
+    2.0 * sys.kinetic_energy() / (dof as f64 * KB)
+}
+
+/// Draw Maxwell–Boltzmann velocities at temperature `t_k`, remove the
+/// center-of-mass drift, and rescale to hit `t_k` exactly.
+pub fn initialize_velocities(sys: &mut System, t_k: f64, dof: usize, rng: &mut Pcg) {
+    for (v, &m) in sys.vel.iter_mut().zip(&sys.masses) {
+        // σ_v = sqrt(kB·T/m) in Å/fs (converted via ACC_CONV).
+        let sigma = (KB * t_k * ACC_CONV / m).sqrt();
+        v.x = rng.normal() * sigma;
+        v.y = rng.normal() * sigma;
+        v.z = rng.normal() * sigma;
+    }
+    sys.zero_momentum();
+    let t_now = instantaneous_temperature(sys, dof);
+    if t_now > 0.0 {
+        let s = (t_k / t_now).sqrt();
+        for v in &mut sys.vel {
+            *v = *v * s;
+        }
+    }
+}
+
+/// Berendsen weak-coupling rescale toward `t_target` with coupling ratio
+/// dt/τ. Call once per step during equilibration.
+pub fn berendsen_rescale(sys: &mut System, t_target: f64, dof: usize, dt_over_tau: f64) {
+    let t_now = instantaneous_temperature(sys, dof);
+    if t_now <= 0.0 {
+        return;
+    }
+    let lambda = (1.0 + dt_over_tau * (t_target / t_now - 1.0)).max(0.0).sqrt();
+    for v in &mut sys.vel {
+        *v = *v * lambda;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Vec3;
+
+    fn water_like() -> System {
+        System::new(
+            vec![Vec3::ZERO, Vec3::new(0.97, 0.0, 0.0), Vec3::new(-0.24, 0.94, 0.0)],
+            vec![15.999, 1.008, 1.008],
+        )
+    }
+
+    #[test]
+    fn init_hits_target_temperature() {
+        let mut sys = water_like();
+        let mut rng = Pcg::new(8);
+        initialize_velocities(&mut sys, 300.0, 6, &mut rng);
+        let t = instantaneous_temperature(&sys, 6);
+        assert!((t - 300.0).abs() < 1e-9, "t={t}");
+        assert!(sys.momentum().norm() < 1e-12);
+    }
+
+    #[test]
+    fn berendsen_moves_toward_target() {
+        let mut sys = water_like();
+        let mut rng = Pcg::new(9);
+        initialize_velocities(&mut sys, 600.0, 6, &mut rng);
+        for _ in 0..200 {
+            berendsen_rescale(&mut sys, 300.0, 6, 0.05);
+        }
+        let t = instantaneous_temperature(&sys, 6);
+        assert!((t - 300.0).abs() < 5.0, "t={t}");
+    }
+
+    #[test]
+    fn hydrogen_speeds_physical() {
+        // Maxwell–Boltzmann at 300 K: hydrogen RMS speed ≈ 0.0272 Å/fs.
+        // Use a large all-H system so the COM-removal correction is O(1/N).
+        let n = 64;
+        let mut sys = System::new(vec![Vec3::ZERO; n], vec![1.008; n]);
+        let dof = 3 * n - 3;
+        let mut rng = Pcg::new(10);
+        let mut ms = 0.0;
+        let trials = 400;
+        for _ in 0..trials {
+            initialize_velocities(&mut sys, 300.0, dof, &mut rng);
+            ms += sys.vel.iter().map(|v| v.norm_sq()).sum::<f64>() / n as f64;
+        }
+        let h_rms = (ms / trials as f64).sqrt();
+        let expect = (3.0 * KB * 300.0 * ACC_CONV / 1.008).sqrt();
+        assert!((h_rms - expect).abs() < 0.02 * expect, "h_rms={h_rms} expect={expect}");
+    }
+}

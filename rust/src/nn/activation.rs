@@ -1,0 +1,225 @@
+//! Activation functions: tanh(x) and the paper's hardware-friendly
+//! φ(x) (Eq. 4):
+//!
+//! ```text
+//!        ⎧  1              x ≥ 2
+//! φ(x) = ⎨  x − x·|x|/4    −2 < x < 2
+//!        ⎩ −1              x ≤ −2
+//! ```
+//!
+//! φ is C¹ (the quadratic meets the clamps with zero slope at ±2), needs
+//! one multiply and one shift-by-2, and tracks tanh closely enough that
+//! swapping it in costs no measurable accuracy (paper Table I; our E3).
+
+use crate::fixedpoint::Q13;
+
+/// Which nonlinearity an MLP uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Tanh,
+    Phi,
+}
+
+impl Activation {
+    pub fn apply(self, x: f64) -> f64 {
+        match self {
+            Activation::Tanh => x.tanh(),
+            Activation::Phi => phi(x),
+        }
+    }
+    /// Derivative (for reference-training gradients in tests).
+    pub fn grad(self, x: f64) -> f64 {
+        match self {
+            Activation::Tanh => {
+                let t = x.tanh();
+                1.0 - t * t
+            }
+            Activation::Phi => phi_grad(x),
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Tanh => "tanh",
+            Activation::Phi => "phi",
+        }
+    }
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "tanh" => Ok(Activation::Tanh),
+            "phi" => Ok(Activation::Phi),
+            other => anyhow::bail!("unknown activation {other:?}"),
+        }
+    }
+}
+
+/// The paper's φ(x), float version (Eq. 4).
+pub fn phi(x: f64) -> f64 {
+    if x >= 2.0 {
+        1.0
+    } else if x <= -2.0 {
+        -1.0
+    } else {
+        x - x * x.abs() / 4.0
+    }
+}
+
+/// dφ/dx = 1 − |x|/2 inside (−2, 2), 0 outside.
+pub fn phi_grad(x: f64) -> f64 {
+    if x.abs() >= 2.0 {
+        0.0
+    } else {
+        1.0 - x.abs() / 2.0
+    }
+}
+
+/// Bit-accurate AU (activation unit) datapath of Fig. 7: two range
+/// comparators/selectors, one multiplier, one shift-right-by-2, one
+/// subtractor — all in Q(1,2,10).
+pub fn phi_q13(x: Q13) -> Q13 {
+    let two = Q13::from_f64(2.0);
+    let one = Q13::ONE;
+    if x >= two {
+        one
+    } else if x <= two.neg() {
+        one.neg()
+    } else {
+        // x − (x·|x|)>>2
+        let sq = x.mul(x.abs());
+        x.sub(sq.shift(-2))
+    }
+}
+
+/// Fixed-point CORDIC hyperbolic tanh, the circuit the paper compares φ
+/// against (Fig. 3b). Iteratively rotates (x, y) with the hyperbolic
+/// CORDIC recurrence and returns y/x via a final division — modelled here
+/// at the arithmetic level to (a) validate that a 13-bit CORDIC matches
+/// tanh and (b) anchor the transistor model's iteration count.
+///
+/// Valid for |z| ≲ 1.12 (the native hyperbolic CORDIC convergence range);
+/// the driver extends range with the identity
+/// tanh(z) = (tanh(z−a) + t) / (1 + t·tanh(z−a)) only in the float
+/// reference — the hardware comparison uses the native range, as the
+/// paper's transistor count (50 418) corresponds to the plain iterative
+/// core.
+pub fn tanh_cordic(z: f64, iters: u32, frac_bits: u32) -> f64 {
+    // Work in integer fixed point with `frac_bits` fraction bits.
+    let one = 1i64 << frac_bits;
+    let to_fix = |v: f64| (v * one as f64).round() as i64;
+    let from_fix = |v: i64| v as f64 / one as f64;
+
+    let mut x = to_fix(1.0);
+    let mut y = 0i64;
+    let mut z_acc = to_fix(z.clamp(-1.1, 1.1));
+
+    // Hyperbolic CORDIC repeats iterations 4, 13, 40… for convergence.
+    let mut i = 1u32;
+    let mut next_repeat = 4u32;
+    let mut done = 0u32;
+    while done < iters {
+        let atanh_i = to_fix(((2f64).powi(-(i as i32))).atanh());
+        let d = if z_acc >= 0 { 1 } else { -1 };
+        let x_new = x + d * (y >> i);
+        let y_new = y + d * (x >> i);
+        z_acc -= d * atanh_i;
+        x = x_new;
+        y = y_new;
+        done += 1;
+        if i == next_repeat && done < iters {
+            // repeat this i once
+            next_repeat = next_repeat * 3 + 1;
+        } else {
+            i += 1;
+        }
+    }
+    // tanh = y/x
+    from_fix(((y as i128 * one as i128) / (x as i128).max(1)) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn phi_matches_paper_definition() {
+        assert_eq!(phi(2.0), 1.0);
+        assert_eq!(phi(5.0), 1.0);
+        assert_eq!(phi(-2.0), -1.0);
+        assert_eq!(phi(-5.0), -1.0);
+        assert_eq!(phi(0.0), 0.0);
+        assert!((phi(1.0) - 0.75).abs() < 1e-15); // 1 − 1/4
+        assert!((phi(-1.0) + 0.75).abs() < 1e-15); // odd
+    }
+
+    #[test]
+    fn phi_is_continuous_and_monotone() {
+        let mut prev = phi(-3.0);
+        let mut x = -3.0;
+        while x < 3.0 {
+            let y = phi(x);
+            assert!(y >= prev - 1e-12, "monotone at x={x}");
+            assert!((y - prev).abs() < 2e-3, "continuous at x={x}");
+            prev = y;
+            x += 1e-3;
+        }
+    }
+
+    #[test]
+    fn phi_close_to_tanh() {
+        // Fig. 3(a): the two curves are close; max deviation on [−4, 4]
+        // is modest (≈0.12) and tiny near the origin.
+        let mut max_dev: f64 = 0.0;
+        let mut x = -4.0;
+        while x <= 4.0 {
+            max_dev = max_dev.max((phi(x) - x.tanh()).abs());
+            x += 0.01;
+        }
+        assert!(max_dev < 0.13, "max deviation {max_dev}");
+        assert!((phi(0.25) - (0.25f64).tanh()).abs() < 0.02);
+    }
+
+    #[test]
+    fn phi_grad_is_derivative() {
+        let mut x = -2.5;
+        while x < 2.5 {
+            let h = 1e-6;
+            let num = (phi(x + h) - phi(x - h)) / (2.0 * h);
+            assert!((num - phi_grad(x)).abs() < 1e-5, "x={x}");
+            x += 0.0173;
+        }
+    }
+
+    #[test]
+    fn phi_q13_matches_float_within_2_lsb() {
+        let mut rng = Pcg::new(3);
+        for _ in 0..20_000 {
+            let x = rng.range(-4.0, 4.0);
+            let q = Q13::from_f64(x);
+            let got = phi_q13(q).to_f64();
+            let want = phi(q.to_f64());
+            assert!(
+                (got - want).abs() <= 2.0 * crate::fixedpoint::q13::LSB,
+                "x={x} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn phi_q13_saturates_exactly() {
+        assert_eq!(phi_q13(Q13::from_f64(3.0)), Q13::ONE);
+        assert_eq!(phi_q13(Q13::from_f64(-3.0)), Q13::ONE.neg());
+        assert_eq!(phi_q13(Q13::from_f64(2.0)), Q13::ONE);
+    }
+
+    #[test]
+    fn cordic_tanh_converges() {
+        for &z in &[-1.0, -0.5, -0.1, 0.0, 0.3, 0.8, 1.05] {
+            let approx = tanh_cordic(z, 14, 16);
+            assert!((approx - z.tanh()).abs() < 3e-3, "z={z} approx={approx}");
+        }
+        // more iterations → better
+        let coarse = (tanh_cordic(0.7, 8, 16) - (0.7f64).tanh()).abs();
+        let fine = (tanh_cordic(0.7, 15, 16) - (0.7f64).tanh()).abs();
+        assert!(fine <= coarse + 1e-9);
+    }
+}

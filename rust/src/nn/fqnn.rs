@@ -1,0 +1,175 @@
+//! FQNN — the fixed-point *multiplier* baseline of Fig. 5: the CNN with
+//! weights, activations, biases and layer inputs quantized to a fixed-
+//! point format (16-bit in the paper) and evaluated with a conventional
+//! MAC datapath (wide accumulator, truncate, saturate).
+
+use crate::fixedpoint::{Fix, FxFormat};
+use super::{Activation, Mlp};
+use crate::nn::activation::phi;
+
+/// A fixed-point-quantized view of an [`Mlp`], multiplier datapath.
+#[derive(Debug, Clone)]
+pub struct Fqnn {
+    pub fmt: FxFormat,
+    pub activation: Activation,
+    pub output_activation: bool,
+    /// Per layer: (out_dim, in_dim, w_raw row-major, b_raw).
+    layers: Vec<(usize, usize, Vec<i64>, Vec<i64>)>,
+}
+
+impl Fqnn {
+    /// Quantize a float model into `fmt`.
+    pub fn from_mlp(m: &Mlp, fmt: FxFormat) -> Self {
+        let layers = m
+            .layers
+            .iter()
+            .map(|l| {
+                let w = l.w.iter().map(|&x| fmt.encode(x)).collect();
+                let b = l.b.iter().map(|&x| fmt.encode(x)).collect();
+                (l.out_dim, l.in_dim, w, b)
+            })
+            .collect();
+        Fqnn {
+            fmt,
+            activation: m.activation,
+            output_activation: m.output_activation,
+            layers,
+        }
+    }
+
+    /// Forward pass: inputs are quantized on entry; each dot product uses
+    /// a wide accumulator then one truncate+saturate; activations are
+    /// computed in the datapath format.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let fmt = self.fmt;
+        let mut cur: Vec<i64> = x.iter().map(|&v| fmt.encode(v)).collect();
+        let last = self.layers.len() - 1;
+        for (li, (out_dim, in_dim, w, b)) in self.layers.iter().enumerate() {
+            debug_assert_eq!(cur.len(), *in_dim);
+            let mut next = Vec::with_capacity(*out_dim);
+            for j in 0..*out_dim {
+                let row = &w[j * in_dim..(j + 1) * in_dim];
+                let mut acc: i128 = 0;
+                for (wv, xv) in row.iter().zip(&cur) {
+                    acc += (*wv as i128) * (*xv as i128);
+                }
+                let mut v = fmt.saturate((acc >> fmt.frac_bits) as i64);
+                v = fmt.saturate(v + b[j]);
+                if li < last || self.output_activation {
+                    v = self.activate_raw(v);
+                }
+                next.push(v);
+            }
+            cur = next;
+        }
+        cur.into_iter().map(|r| fmt.decode(r)).collect()
+    }
+
+    /// Activation evaluated in the datapath format. φ uses the AU circuit
+    /// ops (mul, >>2, sub); tanh models the CORDIC output by quantizing
+    /// the float tanh to the format (the CORDIC's intrinsic error is below
+    /// 1 LSB at these widths, see `activation::tanh_cordic` tests).
+    fn activate_raw(&self, raw: i64) -> i64 {
+        let fmt = self.fmt;
+        match self.activation {
+            Activation::Phi => {
+                let x = Fix { raw, fmt };
+                let two = Fix::from_f64(2.0, fmt);
+                if x.raw >= two.raw {
+                    Fix::from_f64(1.0, fmt).raw
+                } else if x.raw <= -two.raw {
+                    Fix::from_f64(-1.0, fmt).raw
+                } else {
+                    let ax = if x.raw < 0 { x.neg() } else { x };
+                    x.sub(x.mul(ax).shift(-2)).raw
+                }
+            }
+            Activation::Tanh => fmt.encode(fmt.decode(raw).tanh()),
+        }
+    }
+
+    /// RMSE of the fixed-point forward pass against targets.
+    pub fn rmse(&self, xs: &[Vec<f64>], ys: &[Vec<f64>]) -> f64 {
+        crate::analysis::rmse_vecs(&xs.iter().map(|x| self.forward(x)).collect::<Vec<_>>(), ys)
+    }
+}
+
+/// Float model evaluated with φ — convenience used in tests comparing
+/// float vs fixed datapaths.
+pub fn phi_float_forward(m: &Mlp, x: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(m.activation, Activation::Phi);
+    let _ = phi(0.0);
+    m.forward(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn small_model(act: Activation) -> Mlp {
+        let mut rng = Pcg::new(42);
+        let mut m = Mlp::init_random("t", &[4, 8, 8, 2], act, &mut rng);
+        // keep pre-activations within format range
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.5;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn q16_close_to_float() {
+        let m = small_model(Activation::Phi);
+        let q = Fqnn::from_mlp(&m, FxFormat::Q16);
+        let mut rng = Pcg::new(1);
+        let mut max_err: f64 = 0.0;
+        for _ in 0..500 {
+            let x: Vec<f64> = (0..4).map(|_| rng.range(-1.0, 1.0)).collect();
+            let yf = m.forward(&x);
+            let yq = q.forward(&x);
+            for (a, b) in yf.iter().zip(&yq) {
+                max_err = max_err.max((a - b).abs());
+            }
+        }
+        // 10-bit fraction ⇒ errors of order a few LSB through 3 layers
+        assert!(max_err < 0.02, "max_err={max_err}");
+    }
+
+    #[test]
+    fn wider_format_is_more_accurate() {
+        let m = small_model(Activation::Phi);
+        let mut rng = Pcg::new(2);
+        let xs: Vec<Vec<f64>> = (0..300)
+            .map(|_| (0..4).map(|_| rng.range(-1.0, 1.0)).collect())
+            .collect();
+        let ys: Vec<Vec<f64>> = xs.iter().map(|x| m.forward(x)).collect();
+        let coarse = Fqnn::from_mlp(&m, FxFormat::new(10, 7)).rmse(&xs, &ys);
+        let fine = Fqnn::from_mlp(&m, FxFormat::new(20, 14)).rmse(&xs, &ys);
+        assert!(fine < coarse, "fine={fine} coarse={coarse}");
+        assert!(fine < 1e-3);
+    }
+
+    #[test]
+    fn tanh_variant_works() {
+        let m = small_model(Activation::Tanh);
+        let q = Fqnn::from_mlp(&m, FxFormat::Q16);
+        let y = q.forward(&[0.1, -0.2, 0.3, 0.0]);
+        let yf = m.forward(&[0.1, -0.2, 0.3, 0.0]);
+        for (a, b) in y.iter().zip(&yf) {
+            assert!((a - b).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn saturation_does_not_wrap() {
+        // Huge inputs must clamp, not overflow.
+        let m = small_model(Activation::Phi);
+        let q = Fqnn::from_mlp(&m, FxFormat::Q1_2_10);
+        let y = q.forward(&[100.0, -100.0, 100.0, -100.0]);
+        for v in y {
+            assert!(v.abs() <= FxFormat::Q1_2_10.max_value() + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,387 @@
+//! Float MLP — the "continuous NN" (CNN) reference model, plus JSON
+//! (de)serialization of the interchange format produced by
+//! `python/compile/train.py`.
+//!
+//! Model JSON schema (shared with the Python trainer):
+//!
+//! ```json
+//! {
+//!   "name": "water_cnn_phi",
+//!   "arch": [3, 3, 3, 2],
+//!   "activation": "phi",
+//!   "output_activation": false,
+//!   "layers": [{"w": [[...out×in...]], "b": [...]}, ...],
+//!   "quant_k": 3,            // present on QNN exports
+//!   "metrics": {...}          // training metadata (free-form)
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+use super::Activation;
+
+/// One dense layer: `w` is row-major `(out × in)`, `b` has length `out`.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+impl Dense {
+    pub fn forward(&self, x: &[f64], out: &mut Vec<f64>) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        out.clear();
+        for j in 0..self.out_dim {
+            let row = &self.w[j * self.in_dim..(j + 1) * self.in_dim];
+            let mut acc = self.b[j];
+            for (wv, xv) in row.iter().zip(x) {
+                acc += wv * xv;
+            }
+            out.push(acc);
+        }
+    }
+}
+
+/// A float multilayer perceptron (Eq. 1).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub name: String,
+    pub layers: Vec<Dense>,
+    pub activation: Activation,
+    /// Whether φ/tanh is applied to the output layer too. The paper's
+    /// Eq. (1) ranges l = 1..L+1; we default to a linear output for the
+    /// regression head (documented choice, see DESIGN.md §Numerics).
+    pub output_activation: bool,
+    /// K of the quantization this model was trained for (0 = CNN).
+    pub quant_k: usize,
+    /// Physical force per unit of network output (eV/Å). The trainer
+    /// scales labels by 1/output_scale so the Q(1,2,10) output range
+    /// [−4, 4) covers the force distribution; the hardware applies the
+    /// inverse as a free power-of-two shift at force reconstruction.
+    pub output_scale: f64,
+    /// Feature conditioning (the FPGA's constant-subtract + pow2 gain
+    /// stage): network inputs are `(raw − center) · scale`. Empty center
+    /// = no conditioning.
+    pub feature_center: Vec<f64>,
+    /// Per-feature power-of-two gains (len = in_dim, or len 1 to
+    /// broadcast; empty = 1.0).
+    pub feature_scale: Vec<f64>,
+}
+
+impl Mlp {
+    /// Layer widths including input and output: `[in, h1, …, out]`.
+    pub fn arch(&self) -> Vec<usize> {
+        let mut a = vec![self.layers[0].in_dim];
+        a.extend(self.layers.iter().map(|l| l.out_dim));
+        a
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Gain of feature dimension `i` (broadcasting a scalar gain).
+    pub fn gain(&self, i: usize) -> f64 {
+        match self.feature_scale.len() {
+            0 => 1.0,
+            1 => self.feature_scale[0],
+            _ => self.feature_scale[i],
+        }
+    }
+
+    /// Apply the feature-conditioning stage to raw features.
+    pub fn condition(&self, x: &[f64]) -> Vec<f64> {
+        if self.feature_center.is_empty() {
+            return x.to_vec();
+        }
+        debug_assert_eq!(x.len(), self.feature_center.len());
+        x.iter()
+            .zip(&self.feature_center)
+            .enumerate()
+            .map(|(i, (v, c))| (v - c) * self.gain(i))
+            .collect()
+    }
+
+    /// Forward pass for one *raw* (physical) input vector: feature
+    /// conditioning is applied on entry.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let mut cur = self.condition(x);
+        let mut next = Vec::new();
+        let last = self.layers.len() - 1;
+        for (i, layer) in self.layers.iter().enumerate() {
+            layer.forward(&cur, &mut next);
+            if i < last || self.output_activation {
+                for v in next.iter_mut() {
+                    *v = self.activation.apply(*v);
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Forward pass for a batch of rows; returns row-major outputs.
+    pub fn forward_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        xs.iter().map(|x| self.forward(x)).collect()
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+
+    /// Construct from explicit layer data.
+    pub fn from_layers(
+        name: &str,
+        layers: Vec<Dense>,
+        activation: Activation,
+        output_activation: bool,
+    ) -> Result<Self> {
+        if layers.is_empty() {
+            bail!("MLP needs at least one layer");
+        }
+        for w in layers.windows(2) {
+            if w[0].out_dim != w[1].in_dim {
+                bail!("layer dim mismatch: {} -> {}", w[0].out_dim, w[1].in_dim);
+            }
+        }
+        for l in &layers {
+            if l.w.len() != l.out_dim * l.in_dim || l.b.len() != l.out_dim {
+                bail!("layer shape mismatch");
+            }
+        }
+        Ok(Mlp {
+            name: name.to_string(),
+            layers,
+            activation,
+            output_activation,
+            quant_k: 0,
+            output_scale: 1.0,
+            feature_center: Vec::new(),
+            feature_scale: Vec::new(),
+        })
+    }
+
+    /// Random small-weight initialization (for tests and in-crate
+    /// reference training).
+    pub fn init_random(
+        name: &str,
+        arch: &[usize],
+        activation: Activation,
+        rng: &mut crate::util::rng::Pcg,
+    ) -> Self {
+        let mut layers = Vec::new();
+        for pair in arch.windows(2) {
+            let (nin, nout) = (pair[0], pair[1]);
+            let scale = (1.0 / nin as f64).sqrt();
+            let w = (0..nin * nout).map(|_| rng.normal() * scale).collect();
+            let b = vec![0.0; nout];
+            layers.push(Dense { out_dim: nout, in_dim: nin, w, b });
+        }
+        Mlp {
+            name: name.to_string(),
+            layers,
+            activation,
+            output_activation: false,
+            quant_k: 0,
+            output_scale: 1.0,
+            feature_center: Vec::new(),
+            feature_scale: Vec::new(),
+        }
+    }
+
+    // ---- JSON interchange ----
+
+    pub fn to_json(&self) -> Value {
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let rows: Vec<Vec<f64>> = (0..l.out_dim)
+                    .map(|j| l.w[j * l.in_dim..(j + 1) * l.in_dim].to_vec())
+                    .collect();
+                json::obj(vec![("w", json::mat_f64(&rows)), ("b", json::arr_f64(&l.b))])
+            })
+            .collect();
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            (
+                "arch",
+                json::arr_i32(&self.arch().iter().map(|&x| x as i32).collect::<Vec<_>>()),
+            ),
+            ("activation", json::s(self.activation.name())),
+            ("output_activation", Value::Bool(self.output_activation)),
+            ("quant_k", Value::Num(self.quant_k as f64)),
+            ("output_scale", Value::Num(self.output_scale)),
+            ("feature_center", json::arr_f64(&self.feature_center)),
+            ("feature_scale", json::arr_f64(&self.feature_scale)),
+            ("layers", Value::Arr(layers)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let name = v.get("name")?.as_str()?.to_string();
+        let activation = Activation::from_name(v.get("activation")?.as_str()?)?;
+        let output_activation = match v.opt("output_activation") {
+            Some(b) => b.as_bool()?,
+            None => false,
+        };
+        let quant_k = match v.opt("quant_k") {
+            Some(k) => k.as_usize()?,
+            None => 0,
+        };
+        let output_scale = match v.opt("output_scale") {
+            Some(s) => s.as_f64()?,
+            None => 1.0,
+        };
+        let feature_center = match v.opt("feature_center") {
+            Some(c) => c.as_f64_vec()?,
+            None => Vec::new(),
+        };
+        let feature_scale = match v.opt("feature_scale") {
+            Some(Value::Num(n)) => vec![*n],
+            Some(arr) => arr.as_f64_vec()?,
+            None => Vec::new(),
+        };
+        let mut layers = Vec::new();
+        for lv in v.get("layers")?.as_arr()? {
+            let rows = lv.get("w")?.as_f64_mat()?;
+            let b = lv.get("b")?.as_f64_vec()?;
+            let out_dim = rows.len();
+            let in_dim = rows.first().map_or(0, |r| r.len());
+            let mut w = Vec::with_capacity(out_dim * in_dim);
+            for r in &rows {
+                if r.len() != in_dim {
+                    bail!("ragged weight matrix in {name}");
+                }
+                w.extend_from_slice(r);
+            }
+            if b.len() != out_dim {
+                bail!("bias length mismatch in {name}");
+            }
+            layers.push(Dense { out_dim, in_dim, w, b });
+        }
+        let mut m = Mlp::from_layers(&name, layers, activation, output_activation)
+            .with_context(|| format!("loading model {name}"))?;
+        m.quant_k = quant_k;
+        m.output_scale = output_scale;
+        if !feature_center.is_empty() && feature_center.len() != m.in_dim() {
+            bail!("feature_center length {} != input dim {}", feature_center.len(), m.in_dim());
+        }
+        if feature_scale.len() > 1 && feature_scale.len() != m.in_dim() {
+            bail!("feature_scale length {} != input dim {}", feature_scale.len(), m.in_dim());
+        }
+        m.feature_center = feature_center;
+        m.feature_scale = feature_scale;
+        Ok(m)
+    }
+
+    /// Forward pass scaled to physical units (output × output_scale).
+    pub fn forward_physical(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = self.forward(x);
+        if self.output_scale != 1.0 {
+            for v in y.iter_mut() {
+                *v *= self.output_scale;
+            }
+        }
+        y
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&json::read_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        json::write_file(path, &self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn toy() -> Mlp {
+        // 2 → 2 → 1, known weights.
+        Mlp::from_layers(
+            "toy",
+            vec![
+                Dense {
+                    out_dim: 2,
+                    in_dim: 2,
+                    w: vec![1.0, -1.0, 0.5, 0.5],
+                    b: vec![0.0, 0.1],
+                },
+                Dense { out_dim: 1, in_dim: 2, w: vec![2.0, -2.0], b: vec![0.25] },
+            ],
+            Activation::Phi,
+            false,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn forward_by_hand() {
+        let m = toy();
+        let y = m.forward(&[1.0, 0.5]);
+        // layer1 pre: [0.5, 0.85] → φ: [0.4375, 0.669375]
+        // layer2: 2·0.4375 − 2·0.669375 + 0.25 = −0.21375
+        assert!((y[0] - (-0.21375)).abs() < 1e-12, "{y:?}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = toy();
+        let v = m.to_json();
+        let back = Mlp::from_json(&v).unwrap();
+        assert_eq!(back.arch(), m.arch());
+        let x = [0.3, -0.7];
+        assert_eq!(back.forward(&x), m.forward(&x));
+    }
+
+    #[test]
+    fn arch_and_params() {
+        let m = toy();
+        assert_eq!(m.arch(), vec![2, 2, 1]);
+        assert_eq!(m.num_params(), 4 + 2 + 2 + 1);
+    }
+
+    #[test]
+    fn rejects_mismatched_layers() {
+        let bad = Mlp::from_layers(
+            "bad",
+            vec![
+                Dense { out_dim: 2, in_dim: 2, w: vec![0.0; 4], b: vec![0.0; 2] },
+                Dense { out_dim: 1, in_dim: 3, w: vec![0.0; 3], b: vec![0.0; 1] },
+            ],
+            Activation::Tanh,
+            false,
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn random_init_bounded_outputs() {
+        let mut rng = Pcg::new(1);
+        let m = Mlp::init_random("r", &[8, 16, 16, 3], Activation::Tanh, &mut rng);
+        let x: Vec<f64> = (0..8).map(|_| rng.range(-1.0, 1.0)).collect();
+        let y = m.forward(&x);
+        assert_eq!(y.len(), 3);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn output_activation_flag() {
+        let mut m = toy();
+        let lin = m.forward(&[1.0, 0.5])[0];
+        m.output_activation = true;
+        let act = m.forward(&[1.0, 0.5])[0];
+        assert!((act - crate::nn::activation::phi(lin)).abs() < 1e-12);
+    }
+}

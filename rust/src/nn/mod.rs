@@ -1,0 +1,22 @@
+//! Neural-network models: the float reference (CNN), the 16-bit
+//! fixed-point multiplier baseline (FQNN), and the paper's shift-based
+//! quantized network (SQNN).
+//!
+//! Terminology follows §III of the paper:
+//!
+//! * **CNN** — "continuous NN": float32/float64 MLP, the accuracy
+//!   baseline (not a convolutional network).
+//! * **FQNN** — CNN quantized to 16-bit fixed point, multiplier datapath;
+//!   the hardware baseline of Fig. 5.
+//! * **SQNN** — weights quantized as sums of ≤K powers of two, shift–add
+//!   datapath; the network the ASIC implements.
+
+pub mod activation;
+pub mod mlp;
+pub mod fqnn;
+pub mod sqnn;
+
+pub use activation::Activation;
+pub use mlp::Mlp;
+pub use fqnn::Fqnn;
+pub use sqnn::Sqnn;

@@ -1,0 +1,412 @@
+//! SQNN — the paper's multiplication-less quantized network: weights as
+//! sums of ≤K powers of two, evaluated by a shift–accumulate datapath in
+//! Q(1,2,10). This is the bit-accurate software model of the ASIC MLP
+//! chip (Fig. 7); `asic::MlpChip` wraps it with the cycle/energy model.
+
+use anyhow::Result;
+
+use crate::fixedpoint::{Q13, q13};
+use crate::nn::activation::phi_q13;
+use crate::quant::{quantize_matrix, ShiftWeight};
+use super::{Activation, Mlp};
+
+/// One SQNN layer: quantized weights (row-major out×in) and Q13 biases.
+#[derive(Debug, Clone)]
+pub struct SqnnLayer {
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub w: Vec<ShiftWeight>,
+    pub b: Vec<Q13>,
+}
+
+/// Hot-path layer layout: the shift parameters flattened into dense
+/// arrays (no per-weight heap indirection). §Perf: this packing takes
+/// the water-MLP forward from ~156 ns to well under 100 ns.
+#[derive(Debug, Clone)]
+struct PackedLayer {
+    out_dim: usize,
+    in_dim: usize,
+    /// Per weight (row-major out×in): −1/0/+1.
+    sign: Vec<i8>,
+    /// Per weight: number of active terms.
+    n_terms: Vec<u8>,
+    /// All active exponents, flattened in weight order.
+    exps: Vec<i8>,
+    /// Q13 bias raws.
+    bias: Vec<i32>,
+    activation: bool,
+}
+
+/// Maximum layer width of the packed fast path (stack scratch size).
+pub const MAX_WIDTH: usize = 128;
+
+/// The shift-based quantized MLP.
+#[derive(Debug, Clone)]
+pub struct Sqnn {
+    pub name: String,
+    pub layers: Vec<SqnnLayer>,
+    pub activation: Activation,
+    pub output_activation: bool,
+    /// K used for quantization.
+    pub k: usize,
+    /// Feature conditioning constants (the FPGA stage; see `nn::Mlp`).
+    pub feature_center: Vec<f64>,
+    pub feature_scale: Vec<f64>,
+    /// Flattened hot-path layout (kept in sync with `layers`).
+    packed: Vec<PackedLayer>,
+}
+
+impl Sqnn {
+    /// Quantize a trained float model with K shift terms per weight.
+    /// (When the float model came from QAT its weights are already exact
+    /// sums of ≤K powers of two and this is lossless.)
+    pub fn from_mlp(m: &Mlp, k: usize) -> Self {
+        let layers: Vec<SqnnLayer> = m
+            .layers
+            .iter()
+            .map(|l| SqnnLayer {
+                out_dim: l.out_dim,
+                in_dim: l.in_dim,
+                w: quantize_matrix(&l.w, k),
+                b: l.b.iter().map(|&x| Q13::from_f64(x)).collect(),
+            })
+            .collect();
+        let mut s = Sqnn {
+            name: m.name.clone(),
+            layers,
+            activation: m.activation,
+            output_activation: m.output_activation,
+            k,
+            feature_center: m.feature_center.clone(),
+            feature_scale: m.feature_scale.clone(),
+            packed: Vec::new(),
+        };
+        s.pack();
+        s
+    }
+
+    /// Build the flattened hot-path layout from `layers`.
+    fn pack(&mut self) {
+        let n_layers = self.layers.len();
+        let output_activation = self.output_activation;
+        self.packed = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| {
+                assert!(
+                    l.in_dim <= MAX_WIDTH && l.out_dim <= MAX_WIDTH,
+                    "layer wider than the packed fast path ({MAX_WIDTH})"
+                );
+                let mut sign = Vec::with_capacity(l.w.len());
+                let mut n_terms = Vec::with_capacity(l.w.len());
+                let mut exps = Vec::new();
+                for w in &l.w {
+                    sign.push(w.sign);
+                    n_terms.push(w.terms() as u8);
+                    exps.extend(w.exps.iter().map(|&e| e as i8));
+                }
+                PackedLayer {
+                    out_dim: l.out_dim,
+                    in_dim: l.in_dim,
+                    sign,
+                    n_terms,
+                    exps,
+                    bias: l.b.iter().map(|b| b.0).collect(),
+                    activation: li + 1 < n_layers || output_activation,
+                }
+            })
+            .collect();
+    }
+
+    pub fn arch(&self) -> Vec<usize> {
+        let mut a = vec![self.layers[0].in_dim];
+        a.extend(self.layers.iter().map(|l| l.out_dim));
+        a
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Bit-accurate forward pass on Q13 inputs.
+    ///
+    /// Per output neuron: shift–accumulate all inputs in a wide
+    /// accumulator (the MU adder tree keeps full width), add bias,
+    /// truncate+saturate to Q13, then the AU (φ) — except a linear output
+    /// layer unless `output_activation`. Runs on the packed flat layout
+    /// with stack scratch (no allocation on the hot path).
+    pub fn forward_q13(&self, x: &[Q13]) -> Vec<Q13> {
+        let mut out = vec![Q13::ZERO; self.out_dim()];
+        self.forward_q13_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free forward: writes the outputs into `out` (must be
+    /// exactly `out_dim()` long). Same bit-exact datapath as
+    /// [`Self::forward_q13`].
+    pub fn forward_q13_into(&self, x: &[Q13], out: &mut [Q13]) {
+        let mut buf_a = [0i32; MAX_WIDTH];
+        let mut buf_b = [0i32; MAX_WIDTH];
+        debug_assert_eq!(x.len(), self.in_dim());
+        debug_assert_eq!(out.len(), self.out_dim());
+        for (slot, v) in buf_a.iter_mut().zip(x) {
+            *slot = v.0;
+        }
+        let mut cur_is_a = true;
+        let mut out_dim = x.len();
+        for layer in &self.packed {
+            let (cur, next) = if cur_is_a {
+                (&buf_a[..], &mut buf_b[..])
+            } else {
+                (&buf_b[..], &mut buf_a[..])
+            };
+            let mut term_idx = 0usize;
+            let mut w_idx = 0usize;
+            for j in 0..layer.out_dim {
+                let mut acc: i64 = layer.bias[j] as i64;
+                for xi in cur.iter().take(layer.in_dim) {
+                    let sign = layer.sign[w_idx];
+                    let nt = layer.n_terms[w_idx] as usize;
+                    w_idx += 1;
+                    if sign == 0 {
+                        debug_assert_eq!(nt, 0);
+                        continue;
+                    }
+                    let xv = *xi as i64;
+                    let mut wsum: i64 = 0;
+                    for &e in &layer.exps[term_idx..term_idx + nt] {
+                        wsum += if e >= 0 { xv << e } else { xv >> (-e) };
+                    }
+                    term_idx += nt;
+                    acc += if sign < 0 { -wsum } else { wsum };
+                }
+                let mut v = Q13(acc.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32);
+                if layer.activation {
+                    v = match self.activation {
+                        Activation::Phi => phi_q13(v),
+                        // The chip's AU is φ; a tanh SQNN (used only in
+                        // software ablations) quantizes float tanh.
+                        Activation::Tanh => Q13::from_f64(v.to_f64().tanh()),
+                    };
+                }
+                next[j] = v.0;
+            }
+            out_dim = layer.out_dim;
+            cur_is_a = !cur_is_a;
+        }
+        let res = if cur_is_a { &buf_a[..out_dim] } else { &buf_b[..out_dim] };
+        for (slot, &r) in out.iter_mut().zip(res) {
+            *slot = Q13(r);
+        }
+    }
+
+    /// Reference (unpacked) forward — used by tests to pin the packed
+    /// fast path to the straightforward datapath semantics.
+    pub fn forward_q13_reference(&self, x: &[Q13]) -> Vec<Q13> {
+        let mut cur: Vec<Q13> = x.to_vec();
+        let last = self.layers.len() - 1;
+        for (li, layer) in self.layers.iter().enumerate() {
+            debug_assert_eq!(cur.len(), layer.in_dim);
+            let mut next = Vec::with_capacity(layer.out_dim);
+            for j in 0..layer.out_dim {
+                let row = &layer.w[j * layer.in_dim..(j + 1) * layer.in_dim];
+                let mut acc: i64 = 0;
+                for (wq, xv) in row.iter().zip(&cur) {
+                    acc += wq.apply_raw(xv.0 as i64);
+                }
+                acc += layer.b[j].0 as i64;
+                let mut v = Q13(acc.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32);
+                if li < last || self.output_activation {
+                    v = match self.activation {
+                        Activation::Phi => phi_q13(v),
+                        Activation::Tanh => Q13::from_f64(v.to_f64().tanh()),
+                    };
+                }
+                next.push(v);
+            }
+            cur = next;
+        }
+        cur
+    }
+
+    /// Float-in/float-out convenience wrapper on *raw* features: applies
+    /// the feature conditioning (modelling the FPGA stage in float, its
+    /// own fixed-point error being negligible post-gain), then quantizes
+    /// to Q13 for the chip datapath.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let gain = |i: usize| -> f64 {
+            match self.feature_scale.len() {
+                0 => 1.0,
+                1 => self.feature_scale[0],
+                _ => self.feature_scale[i],
+            }
+        };
+        let cond: Vec<f64> = if self.feature_center.is_empty() {
+            x.to_vec()
+        } else {
+            x.iter()
+                .zip(&self.feature_center)
+                .enumerate()
+                .map(|(i, (v, c))| (v - c) * gain(i))
+                .collect()
+        };
+        let q: Vec<Q13> = cond.iter().map(|&v| Q13::from_f64(v)).collect();
+        self.forward_q13(&q).into_iter().map(|v| v.to_f64()).collect()
+    }
+
+    /// Total number of active shift terms (hardware SUs actually used).
+    pub fn total_shift_terms(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.iter().map(|w| w.terms()).sum::<usize>())
+            .sum()
+    }
+
+    /// The dequantized float weights (what the L2 JAX kernel multiplies
+    /// by) — used to cross-check the Python/Rust pipelines.
+    pub fn dequantized_mlp(&self) -> Result<Mlp> {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| crate::nn::mlp::Dense {
+                out_dim: l.out_dim,
+                in_dim: l.in_dim,
+                w: l.w.iter().map(|w| w.value()).collect(),
+                b: l.b.iter().map(|b| b.to_f64()).collect(),
+            })
+            .collect();
+        let mut m = Mlp::from_layers(&self.name, layers, self.activation, self.output_activation)?;
+        m.feature_center = self.feature_center.clone();
+        m.feature_scale = self.feature_scale.clone();
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn trained_like_model() -> Mlp {
+        let mut rng = Pcg::new(9);
+        let mut m = Mlp::init_random("sq", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.8;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn matches_dequantized_float_within_datapath_error() {
+        let m = trained_like_model();
+        let s = Sqnn::from_mlp(&m, 3);
+        let deq = s.dequantized_mlp().unwrap();
+        let mut rng = Pcg::new(4);
+        for _ in 0..2_000 {
+            let x: Vec<f64> = (0..3).map(|_| rng.range(-1.0, 1.0)).collect();
+            let qs = s.forward(&x);
+            // the float reference must itself see the quantized input
+            let xq: Vec<f64> = x.iter().map(|&v| Q13::from_f64(v).to_f64()).collect();
+            let fd = deq.forward(&xq);
+            for (a, b) in qs.iter().zip(&fd) {
+                // datapath truncation: a few LSB through 3 layers
+                assert!((a - b).abs() < 8.0 * q13::LSB, "x={x:?} q={a} f={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn higher_k_shrinks_weight_error_monotonically() {
+        // The guaranteed Fig.-4 ingredient is in *weight space*: each
+        // extra shift term can only reduce |w − w_q| (Eq. 7 is a greedy
+        // residual expansion). Output-space convergence additionally needs
+        // the paper's post-quantization retraining, which is exercised by
+        // the E4 pipeline (python QAT + fig4 bench), not here.
+        let m = trained_like_model();
+        let mut prev = f64::INFINITY;
+        for k in 1..=5 {
+            let s = Sqnn::from_mlp(&m, k);
+            let deq = s.dequantized_mlp().unwrap();
+            let mut err = 0.0;
+            for (l0, l1) in m.layers.iter().zip(&deq.layers) {
+                for (a, b) in l0.w.iter().zip(&l1.w) {
+                    err += (a - b).abs();
+                }
+            }
+            assert!(err <= prev + 1e-12, "k={k}: weight error grew ({err} > {prev})");
+            assert!(err.is_finite());
+            prev = err;
+        }
+        // And K=3 is substantially better than K=1 on aggregate.
+        let e1 = {
+            let deq = Sqnn::from_mlp(&m, 1).dequantized_mlp().unwrap();
+            m.layers
+                .iter()
+                .zip(&deq.layers)
+                .flat_map(|(a, b)| a.w.iter().zip(&b.w))
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f64>()
+        };
+        assert!(e1 > 1.3 * prev, "K=1 err {e1} vs K=5 err {prev}");
+    }
+
+    #[test]
+    fn shift_terms_bounded_by_k_times_weights() {
+        let m = trained_like_model();
+        for k in 1..=5 {
+            let s = Sqnn::from_mlp(&m, k);
+            let nweights: usize = m.layers.iter().map(|l| l.w.len()).sum();
+            assert!(s.total_shift_terms() <= k * nweights);
+            assert!(s.total_shift_terms() > 0);
+        }
+    }
+
+    #[test]
+    fn packed_fast_path_is_bit_identical_to_reference() {
+        // §Perf invariant: the packed flat layout must reproduce the
+        // straightforward datapath bit for bit, including extremes.
+        let mut rng = Pcg::new(123);
+        for arch in [&[3usize, 3, 3, 2][..], &[8, 16, 16, 3], &[64, 64, 64, 3]] {
+            let mut m = Mlp::init_random("p", arch, Activation::Phi, &mut rng);
+            for l in &mut m.layers {
+                for w in &mut l.w {
+                    *w *= 0.6;
+                }
+            }
+            for k in [1usize, 3, 5] {
+                let s = Sqnn::from_mlp(&m, k);
+                for _ in 0..200 {
+                    let x: Vec<Q13> = (0..arch[0])
+                        .map(|_| Q13::from_f64(rng.range(-4.0, 4.0)))
+                        .collect();
+                    assert_eq!(s.forward_q13(&x), s.forward_q13_reference(&x));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_behaviour_on_extreme_inputs() {
+        let m = trained_like_model();
+        let s = Sqnn::from_mlp(&m, 3);
+        let y = s.forward(&[1000.0, -1000.0, 1000.0]);
+        for v in y {
+            assert!(v.abs() <= 4.0);
+        }
+    }
+
+    #[test]
+    fn arch_preserved() {
+        let m = trained_like_model();
+        let s = Sqnn::from_mlp(&m, 3);
+        assert_eq!(s.arch(), vec![3, 3, 3, 2]);
+        assert_eq!(s.in_dim(), 3);
+        assert_eq!(s.out_dim(), 2);
+    }
+}

@@ -1,0 +1,20 @@
+//! Physics oracles (the "DFT" of this reproduction).
+//!
+//! The paper trains on SIESTA DFT data; offline we substitute calibrated
+//! analytic oracles (see DESIGN.md §Substitutions):
+//!
+//! * [`water::WaterPes`] — anharmonic intramolecular water PES whose
+//!   equilibrium geometry and harmonic frequencies are *calibrated in
+//!   code* to the paper's DFT column of Table II.
+//! * [`ff::MoleculeFF`] — per-molecule bonded force fields over real
+//!   topologies for the MD17-like datasets (ethanol, toluene,
+//!   naphthalene, aspirin).
+//! * [`silicon::StillingerWeber`] — bulk silicon.
+
+pub mod water;
+pub mod ff;
+pub mod silicon;
+
+pub use water::WaterPes;
+pub use ff::MoleculeFF;
+pub use silicon::StillingerWeber;

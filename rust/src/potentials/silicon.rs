@@ -1,0 +1,305 @@
+//! Stillinger–Weber silicon (bulk, periodic) — the paper's sixth and most
+//! complex dataset. Full two-body + three-body SW with analytic forces,
+//! validated against finite differences.
+//!
+//! Parameters: F. H. Stillinger & T. A. Weber, PRB 31, 5262 (1985).
+
+use crate::md::ForceField;
+use crate::util::Vec3;
+
+/// SW parameters for Si.
+#[derive(Debug, Clone, Copy)]
+pub struct SwParams {
+    pub epsilon: f64, // eV
+    pub sigma: f64,   // Å
+    pub a: f64,       // cutoff multiplier (r_c = a·σ)
+    pub big_a: f64,
+    pub big_b: f64,
+    pub p: i32,
+    pub q: i32,
+    pub lambda: f64,
+    pub gamma: f64,
+}
+
+impl Default for SwParams {
+    fn default() -> Self {
+        SwParams {
+            epsilon: 2.1683,
+            sigma: 2.0951,
+            a: 1.80,
+            big_a: 7.049556277,
+            big_b: 0.6022245584,
+            p: 4,
+            q: 0,
+            lambda: 21.0,
+            gamma: 1.20,
+        }
+    }
+}
+
+/// Periodic SW silicon in a cubic box.
+#[derive(Debug, Clone)]
+pub struct StillingerWeber {
+    pub params: SwParams,
+    /// Cubic box side (Å).
+    pub box_l: f64,
+}
+
+/// Conventional diamond-cubic lattice constant of Si (Å).
+pub const SI_A0: f64 = 5.431;
+
+impl StillingerWeber {
+    /// Diamond-cubic supercell of `nc³` conventional cells (8 atoms per
+    /// cell). Returns (potential, positions).
+    pub fn diamond_supercell(nc: usize) -> (StillingerWeber, Vec<Vec3>) {
+        let basis = [
+            [0.0, 0.0, 0.0],
+            [0.0, 0.5, 0.5],
+            [0.5, 0.0, 0.5],
+            [0.5, 0.5, 0.0],
+            [0.25, 0.25, 0.25],
+            [0.25, 0.75, 0.75],
+            [0.75, 0.25, 0.75],
+            [0.75, 0.75, 0.25],
+        ];
+        let mut pos = Vec::with_capacity(8 * nc * nc * nc);
+        for ix in 0..nc {
+            for iy in 0..nc {
+                for iz in 0..nc {
+                    for b in &basis {
+                        pos.push(Vec3::new(
+                            (ix as f64 + b[0]) * SI_A0,
+                            (iy as f64 + b[1]) * SI_A0,
+                            (iz as f64 + b[2]) * SI_A0,
+                        ));
+                    }
+                }
+            }
+        }
+        (
+            StillingerWeber { params: SwParams::default(), box_l: nc as f64 * SI_A0 },
+            pos,
+        )
+    }
+
+    fn cutoff(&self) -> f64 {
+        self.params.a * self.params.sigma
+    }
+
+    /// Minimum-image displacement j→i.
+    fn disp(&self, ri: Vec3, rj: Vec3) -> Vec3 {
+        (ri - rj).min_image(self.box_l)
+    }
+
+    /// Two-body term value and dφ/dr.
+    fn pair(&self, r: f64) -> (f64, f64) {
+        let p = &self.params;
+        let rc = self.cutoff();
+        if r >= rc {
+            return (0.0, 0.0);
+        }
+        let sr = p.sigma / r;
+        let srp = sr.powi(p.p);
+        let srq = if p.q == 0 { 1.0 } else { sr.powi(p.q) };
+        let expo = (p.sigma / (r - rc)).exp();
+        let v = p.epsilon * p.big_a * (p.big_b * srp - srq) * expo;
+        // dv/dr = εA·[d(B·srp − srq)/dr]·expo + εA(B·srp−srq)·expo·(−σ/(r−rc)²)
+        let d_poly = p.epsilon
+            * p.big_a
+            * (-(p.p as f64) * p.big_b * srp / r + (p.q as f64) * srq / r)
+            * expo;
+        let d_exp = v * (-p.sigma / ((r - rc) * (r - rc)));
+        (v, d_poly + d_exp)
+    }
+
+    /// Three-body radial factor g(r) = exp(γσ/(r − r_c)) and g'(r).
+    fn gfun(&self, r: f64) -> (f64, f64) {
+        let p = &self.params;
+        let rc = self.cutoff();
+        if r >= rc {
+            return (0.0, 0.0);
+        }
+        let g = (p.gamma * p.sigma / (r - rc)).exp();
+        let dg = g * (-p.gamma * p.sigma / ((r - rc) * (r - rc)));
+        (g, dg)
+    }
+
+    /// Neighbor list within cutoff (O(N²); cells are small here).
+    fn neighbors(&self, pos: &[Vec3]) -> Vec<Vec<(usize, Vec3, f64)>> {
+        let rc = self.cutoff();
+        let n = pos.len();
+        let mut out = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let d = self.disp(pos[j], pos[i]); // i→j
+                let r = d.norm();
+                if r < rc {
+                    out[i].push((j, d, r));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl ForceField for StillingerWeber {
+    fn compute(&self, pos: &[Vec3], forces: &mut [Vec3]) -> f64 {
+        let p = self.params;
+        for f in forces.iter_mut() {
+            *f = Vec3::ZERO;
+        }
+        let nb = self.neighbors(pos);
+        let mut energy = 0.0;
+
+        // Two-body.
+        for i in 0..pos.len() {
+            for &(j, d, r) in &nb[i] {
+                if j < i {
+                    continue; // count each pair once
+                }
+                let (v, dv) = self.pair(r);
+                energy += v;
+                let u = d / r; // i→j unit
+                // F_i = +dv·u (force pulls i toward j when dv<0 ... sign:
+                // V(r), F_i = −∂V/∂r_i = −dv·(∂r/∂r_i) = +dv·u)
+                forces[i] += u * dv;
+                forces[j] -= u * dv;
+            }
+        }
+
+        // Three-body: Σ_i Σ_{j<k ∈ nb(i)} h(r_ij, r_ik, θ_jik).
+        for i in 0..pos.len() {
+            let nbi = &nb[i];
+            for x in 0..nbi.len() {
+                let (j, dij, rij) = nbi[x];
+                let (gj, dgj) = self.gfun(rij);
+                if gj == 0.0 {
+                    continue;
+                }
+                let uij = dij / rij;
+                for y in x + 1..nbi.len() {
+                    let (k, dik, rik) = nbi[y];
+                    let (gk, dgk) = self.gfun(rik);
+                    if gk == 0.0 {
+                        continue;
+                    }
+                    let uik = dik / rik;
+                    let cos_t = uij.dot(uik);
+                    let c = cos_t + 1.0 / 3.0;
+                    let pref = p.epsilon * p.lambda;
+                    let h = pref * gj * gk * c * c;
+                    energy += h;
+
+                    // ∂h/∂cosθ
+                    let dh_dcos = pref * gj * gk * 2.0 * c;
+                    // ∂cosθ/∂r_j = (u_ik − cosθ·u_ij)/r_ij (r_j enters via d_ij)
+                    let dcos_drj = (uik - uij * cos_t) / rij;
+                    let dcos_drk = (uij - uik * cos_t) / rik;
+                    // ∂h/∂r_ij radial part
+                    let dh_drij = pref * dgj * gk * c * c;
+                    let dh_drik = pref * gj * dgk * c * c;
+
+                    // gradient wrt atom j position: ∂r_ij/∂r_j = u_ij
+                    let grad_j = uij * dh_drij + dcos_drj * dh_dcos;
+                    let grad_k = uik * dh_drik + dcos_drk * dh_dcos;
+                    forces[j] -= grad_j;
+                    forces[k] -= grad_k;
+                    forces[i] += grad_j + grad_k; // Newton's third law
+                }
+            }
+        }
+        energy
+    }
+
+    fn name(&self) -> &'static str {
+        "stillinger-weber-si"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_lattice_cohesive_energy() {
+        // SW was fitted so the diamond lattice at a₀ gives E/atom ≈ −4.336 eV.
+        let (sw, pos) = StillingerWeber::diamond_supercell(2);
+        let mut f = vec![Vec3::ZERO; pos.len()];
+        let e = sw.compute(&pos, &mut f);
+        let e_per_atom = e / pos.len() as f64;
+        assert!(
+            (e_per_atom + 4.336).abs() < 0.02,
+            "E/atom = {e_per_atom} (expect ≈ −4.336)"
+        );
+    }
+
+    #[test]
+    fn perfect_lattice_has_zero_forces() {
+        let (sw, pos) = StillingerWeber::diamond_supercell(2);
+        let mut f = vec![Vec3::ZERO; pos.len()];
+        sw.compute(&pos, &mut f);
+        for (i, fi) in f.iter().enumerate() {
+            assert!(fi.norm() < 1e-8, "atom {i}: {fi:?}");
+        }
+    }
+
+    #[test]
+    fn forces_match_fd() {
+        let (sw, mut pos) = StillingerWeber::diamond_supercell(1);
+        // displace a few atoms
+        pos[0] += Vec3::new(0.12, -0.08, 0.05);
+        pos[3] += Vec3::new(-0.06, 0.1, 0.02);
+        pos[5] += Vec3::new(0.03, 0.04, -0.09);
+        let n = pos.len();
+        let mut f = vec![Vec3::ZERO; n];
+        sw.compute(&pos, &mut f);
+        let h = 1e-6;
+        let mut scratch = vec![Vec3::ZERO; n];
+        for i in [0usize, 3, 5, 7] {
+            for a in 0..3 {
+                let orig = pos[i];
+                let mut arr = orig.to_array();
+                arr[a] += h;
+                pos[i] = Vec3::from_array(arr);
+                let ep = sw.compute(&pos, &mut scratch);
+                arr[a] -= 2.0 * h;
+                pos[i] = Vec3::from_array(arr);
+                let em = sw.compute(&pos, &mut scratch);
+                pos[i] = orig;
+                let fnum = -(ep - em) / (2.0 * h);
+                let fana = f[i].to_array()[a];
+                assert!(
+                    (fnum - fana).abs() < 1e-4 * (1.0 + fana.abs()),
+                    "atom {i} axis {a}: fd {fnum} vs analytic {fana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forces_sum_to_zero() {
+        let (sw, mut pos) = StillingerWeber::diamond_supercell(2);
+        for (i, p) in pos.iter_mut().enumerate() {
+            let s = 0.05 * (((i * 31) % 11) as f64 - 5.0) / 5.0;
+            *p += Vec3::new(s, -0.4 * s, 0.8 * s);
+        }
+        let mut f = vec![Vec3::ZERO; pos.len()];
+        sw.compute(&pos, &mut f);
+        let net = f.iter().fold(Vec3::ZERO, |s, x| s + *x);
+        assert!(net.norm() < 1e-8, "net {net:?}");
+    }
+
+    #[test]
+    fn energy_rises_under_compression() {
+        let (sw, pos) = StillingerWeber::diamond_supercell(1);
+        let mut scratch = vec![Vec3::ZERO; pos.len()];
+        let e0 = sw.compute(&pos, &mut scratch);
+        let squeezed: Vec<Vec3> = pos.iter().map(|p| *p * 0.97).collect();
+        let sw2 = StillingerWeber { box_l: sw.box_l * 0.97, ..sw.clone() };
+        let e1 = sw2.compute(&squeezed, &mut scratch);
+        assert!(e1 > e0, "e1={e1} e0={e0}");
+    }
+}

@@ -1,0 +1,337 @@
+//! The water-molecule PES — this reproduction's stand-in for the paper's
+//! SIESTA DFT oracle.
+//!
+//! Functional form (anharmonic, intramolecular):
+//!
+//! ```text
+//! V = Σᵢ D·(1 − e^{−a(rᵢ−r₀)})²          Morse O–H stretches
+//!   + ½·k_θ·(θ − θ₀)²                     harmonic bend
+//!   + k_rr·(r₁−r₀)(r₂−r₀)                 stretch–stretch coupling
+//! ```
+//!
+//! The equilibrium geometry is (r₀, θ₀) by construction; the three force
+//! constants (k_r = 2Da², k_θ, k_rr) are **calibrated at first use** by a
+//! Newton iteration on the analytic-Hessian normal modes so the harmonic
+//! wavenumbers match the paper's DFT column of Table II:
+//! bend 1603, symmetric stretch 4007, asymmetric stretch 4241 cm⁻¹.
+//! (Gas-phase DFT of a single molecule — hence stretches above the
+//! liquid-phase values.) Calibration is deterministic, takes ~1 ms, and
+//! is verified by tests against the targets.
+
+use std::sync::OnceLock;
+
+use crate::md::ForceField;
+use crate::util::units::{mass, ACC_CONV, C_CM_PER_FS};
+use crate::util::Vec3;
+
+/// Paper Table II, DFT row — the calibration targets.
+pub const TARGET_R0: f64 = 0.969; // Å
+pub const TARGET_THETA0_DEG: f64 = 104.88;
+pub const TARGET_NU_BEND: f64 = 1603.0; // cm⁻¹
+pub const TARGET_NU_SYM: f64 = 4007.0;
+pub const TARGET_NU_ASYM: f64 = 4241.0;
+
+/// Morse well depth (eV). Fixed (typical O–H bond energy); the width `a`
+/// carries the stretch force constant.
+pub const MORSE_D: f64 = 5.0;
+
+/// Calibrated parameter set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WaterParams {
+    pub r0: f64,
+    pub theta0: f64, // radians
+    pub d: f64,      // Morse depth, eV
+    pub a: f64,      // Morse width, 1/Å
+    pub k_theta: f64, // eV/rad²
+    pub k_rr: f64,   // eV/Å²
+}
+
+/// The PES. Atom order is **[O, H1, H2]**.
+#[derive(Debug, Clone, Copy)]
+pub struct WaterPes {
+    pub p: WaterParams,
+}
+
+impl WaterPes {
+    /// The calibrated oracle (cached process-wide).
+    pub fn dft_surrogate() -> &'static WaterPes {
+        static CAL: OnceLock<WaterPes> = OnceLock::new();
+        CAL.get_or_init(|| WaterPes { p: calibrate() })
+    }
+
+    pub fn with_params(p: WaterParams) -> Self {
+        WaterPes { p }
+    }
+
+    /// Equilibrium geometry [O, H1, H2], centered with H's symmetric
+    /// about the y-axis in the xy-plane (molecule frame).
+    pub fn equilibrium(&self) -> Vec<Vec3> {
+        equilibrium_geometry(self.p.r0, self.p.theta0)
+    }
+
+    /// Masses [O, H, H].
+    pub fn masses() -> Vec<f64> {
+        vec![mass::O, mass::H, mass::H]
+    }
+
+    /// Internal coordinates (r1, r2, θ) of a configuration.
+    pub fn internal(pos: &[Vec3]) -> (f64, f64, f64) {
+        let u = pos[1] - pos[0];
+        let v = pos[2] - pos[0];
+        (u.norm(), v.norm(), u.angle_between(v))
+    }
+}
+
+/// Build the equilibrium geometry for given r0/θ0 (O at origin before
+/// mass-centering; the caller may re-center).
+pub fn equilibrium_geometry(r0: f64, theta0: f64) -> Vec<Vec3> {
+    let half = theta0 / 2.0;
+    vec![
+        Vec3::ZERO,
+        Vec3::new(r0 * half.sin(), r0 * half.cos(), 0.0),
+        Vec3::new(-r0 * half.sin(), r0 * half.cos(), 0.0),
+    ]
+}
+
+impl ForceField for WaterPes {
+    fn compute(&self, pos: &[Vec3], forces: &mut [Vec3]) -> f64 {
+        debug_assert_eq!(pos.len(), 3);
+        let p = &self.p;
+        let (o, h1, h2) = (pos[0], pos[1], pos[2]);
+        let u = h1 - o;
+        let v = h2 - o;
+        let r1 = u.norm();
+        let r2 = v.norm();
+        let uh = u / r1;
+        let vh = v / r2;
+        let dr1 = r1 - p.r0;
+        let dr2 = r2 - p.r0;
+
+        // Morse stretches.
+        let e1 = (-p.a * dr1).exp();
+        let e2 = (-p.a * dr2).exp();
+        let v_morse = p.d * ((1.0 - e1) * (1.0 - e1) + (1.0 - e2) * (1.0 - e2));
+        // dV/dr for Morse.
+        let dv_dr1_m = 2.0 * p.d * p.a * (1.0 - e1) * e1;
+        let dv_dr2_m = 2.0 * p.d * p.a * (1.0 - e2) * e2;
+
+        // Bend.
+        let cos_t = uh.dot(vh).clamp(-1.0, 1.0);
+        let theta = cos_t.acos();
+        let dth = theta - p.theta0;
+        let v_bend = 0.5 * p.k_theta * dth * dth;
+        let dv_dtheta = p.k_theta * dth;
+
+        // Stretch–stretch coupling.
+        let v_rr = p.k_rr * dr1 * dr2;
+        let dv_dr1 = dv_dr1_m + p.k_rr * dr2;
+        let dv_dr2 = dv_dr2_m + p.k_rr * dr1;
+
+        // Gradients of internal coordinates.
+        // ∂θ/∂(H1) = (cosθ·û − v̂) / (r1·sinθ), ∂θ/∂(H2) symmetric.
+        let sin_t = theta.sin().max(1e-9);
+        let dth_dh1 = (uh * cos_t - vh) / (r1 * sin_t);
+        let dth_dh2 = (vh * cos_t - uh) / (r2 * sin_t);
+
+        let f_h1 = -(uh * dv_dr1 + dth_dh1 * dv_dtheta);
+        let f_h2 = -(vh * dv_dr2 + dth_dh2 * dv_dtheta);
+        forces[1] = f_h1;
+        forces[2] = f_h2;
+        forces[0] = -(f_h1 + f_h2); // translation invariance
+
+        v_morse + v_bend + v_rr
+    }
+
+    fn name(&self) -> &'static str {
+        "water-pes (DFT surrogate)"
+    }
+}
+
+/// Harmonic wavenumbers (bend, sym, asym) for a parameter set, from the
+/// mass-weighted finite-difference Hessian.
+pub fn harmonic_wavenumbers(p: WaterParams) -> [f64; 3] {
+    let pes = WaterPes { p };
+    let pos = pes.equilibrium();
+    let masses = WaterPes::masses();
+    let modes = crate::analysis::normal_modes::vibrational_modes(&pes, &pos, &masses, 3);
+    [modes[0], modes[1], modes[2]] // ascending: bend, sym, asym
+}
+
+/// Newton calibration of (k_r, k_θ, k_rr) against the Table II DFT
+/// wavenumbers. k_r enters through the Morse width a = sqrt(k_r/(2D)).
+fn calibrate() -> WaterParams {
+    let theta0 = TARGET_THETA0_DEG.to_radians();
+    // Initial guesses from diatomic/G-matrix estimates.
+    let mu_oh = mass::O * mass::H / (mass::O + mass::H);
+    let nu_avg = 0.5 * (TARGET_NU_SYM + TARGET_NU_ASYM);
+    let omega = 2.0 * std::f64::consts::PI * C_CM_PER_FS * nu_avg; // rad/fs
+    let k_r0 = mu_oh * omega * omega / ACC_CONV; // eV/Å²
+    let mut x = [k_r0, 4.8, 0.0]; // (k_r, k_θ, k_rr)
+
+    let targets = [TARGET_NU_BEND, TARGET_NU_SYM, TARGET_NU_ASYM];
+    let params_of = |x: &[f64; 3]| WaterParams {
+        r0: TARGET_R0,
+        theta0,
+        d: MORSE_D,
+        a: (x[0] / (2.0 * MORSE_D)).sqrt(),
+        k_theta: x[1],
+        k_rr: x[2],
+    };
+    let residual = |x: &[f64; 3]| -> [f64; 3] {
+        let nu = harmonic_wavenumbers(params_of(x));
+        [nu[0] - targets[0], nu[1] - targets[1], nu[2] - targets[2]]
+    };
+
+    for _iter in 0..20 {
+        let f = residual(&x);
+        let err = f.iter().map(|v| v.abs()).fold(0.0, f64::max);
+        if err < 1e-6 {
+            break;
+        }
+        // FD Jacobian.
+        let mut jac = crate::linalg::Mat::zeros(3, 3);
+        for j in 0..3 {
+            let h = (x[j].abs() * 1e-4).max(1e-5);
+            let mut xp = x;
+            xp[j] += h;
+            let fp = residual(&xp);
+            for i in 0..3 {
+                jac[(i, j)] = (fp[i] - f[i]) / h;
+            }
+        }
+        let dx = crate::linalg::solve(&jac, &[-f[0], -f[1], -f[2]]);
+        for j in 0..3 {
+            x[j] += dx[j];
+        }
+        // keep physical
+        x[0] = x[0].max(1.0);
+        x[1] = x[1].max(0.1);
+    }
+    params_of(&x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::{Engine, System};
+
+    #[test]
+    fn calibrated_frequencies_match_paper_dft() {
+        let pes = WaterPes::dft_surrogate();
+        let nu = harmonic_wavenumbers(pes.p);
+        assert!((nu[0] - TARGET_NU_BEND).abs() < 1.0, "bend={}", nu[0]);
+        assert!((nu[1] - TARGET_NU_SYM).abs() < 1.0, "sym={}", nu[1]);
+        assert!((nu[2] - TARGET_NU_ASYM).abs() < 1.0, "asym={}", nu[2]);
+    }
+
+    #[test]
+    fn equilibrium_geometry_matches_targets() {
+        let pes = WaterPes::dft_surrogate();
+        let pos = pes.equilibrium();
+        let (r1, r2, th) = WaterPes::internal(&pos);
+        assert!((r1 - TARGET_R0).abs() < 1e-12);
+        assert!((r2 - TARGET_R0).abs() < 1e-12);
+        assert!((th.to_degrees() - TARGET_THETA0_DEG).abs() < 1e-9);
+        // forces vanish at equilibrium
+        let mut f = vec![Vec3::ZERO; 3];
+        pes.compute(&pos, &mut f);
+        for fi in &f {
+            assert!(fi.norm() < 1e-9, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn forces_are_gradient_of_energy() {
+        let pes = WaterPes::dft_surrogate();
+        let mut pos = pes.equilibrium();
+        pos[1] += Vec3::new(0.03, -0.02, 0.04);
+        pos[2] += Vec3::new(-0.01, 0.05, -0.02);
+        pos[0] += Vec3::new(0.02, 0.01, -0.01);
+        let mut f = vec![Vec3::ZERO; 3];
+        pes.compute(&pos, &mut f);
+        let h = 1e-6;
+        for i in 0..3 {
+            for a in 0..3 {
+                let mut pp = pos.clone();
+                let mut arr = pp[i].to_array();
+                arr[a] += h;
+                pp[i] = Vec3::from_array(arr);
+                let mut scratch = vec![Vec3::ZERO; 3];
+                let ep = pes.compute(&pp, &mut scratch);
+                arr[a] -= 2.0 * h;
+                pp[i] = Vec3::from_array(arr);
+                let em = pes.compute(&pp, &mut scratch);
+                let f_num = -(ep - em) / (2.0 * h);
+                let f_ana = f[i].to_array()[a];
+                assert!(
+                    (f_num - f_ana).abs() < 1e-5,
+                    "atom {i} axis {a}: num {f_num} ana {f_ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forces_sum_to_zero_and_torque_free() {
+        let pes = WaterPes::dft_surrogate();
+        let mut pos = pes.equilibrium();
+        pos[1] += Vec3::new(0.05, 0.02, -0.03);
+        let mut f = vec![Vec3::ZERO; 3];
+        pes.compute(&pos, &mut f);
+        let net = f[0] + f[1] + f[2];
+        assert!(net.norm() < 1e-10, "net force {net:?}");
+        let torque = pos[0].cross(f[0]) + pos[1].cross(f[1]) + pos[2].cross(f[2]);
+        assert!(torque.norm() < 1e-9, "net torque {torque:?}");
+    }
+
+    #[test]
+    fn energy_rises_away_from_equilibrium() {
+        let pes = WaterPes::dft_surrogate();
+        let pos0 = pes.equilibrium();
+        let mut scratch = vec![Vec3::ZERO; 3];
+        let e0 = pes.compute(&pos0, &mut scratch);
+        for (i, delta) in [
+            (1usize, Vec3::new(0.1, 0.0, 0.0)),
+            (2, Vec3::new(0.0, 0.1, 0.0)),
+            (1, Vec3::new(0.0, 0.0, 0.1)),
+        ] {
+            let mut p = pos0.clone();
+            p[i] += delta;
+            let e = pes.compute(&p, &mut scratch);
+            assert!(e > e0 + 1e-6, "displacement {i} {delta:?}");
+        }
+    }
+
+    #[test]
+    fn nve_md_conserves_energy() {
+        let pes = WaterPes::dft_surrogate();
+        let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
+        // kick an H slightly
+        sys.vel[1] = Vec3::new(0.01, -0.005, 0.003);
+        sys.zero_momentum();
+        let mut eng = Engine::new(sys, pes, 0.1);
+        let e0 = eng.total_energy();
+        for _ in 0..20_000 {
+            eng.step_verlet();
+        }
+        let drift = (eng.total_energy() - e0).abs();
+        assert!(drift < 2e-4, "energy drift {drift} eV over 2 ps");
+    }
+
+    #[test]
+    fn anharmonicity_present() {
+        // Morse: stretching +0.2 Å costs less than 0.5·k·dr² of the
+        // harmonic expansion would suggest at large dr (softening).
+        let pes = WaterPes::dft_surrogate();
+        let k_r = 2.0 * pes.p.d * pes.p.a * pes.p.a;
+        let pos0 = pes.equilibrium();
+        let mut scratch = vec![Vec3::ZERO; 3];
+        let e0 = pes.compute(&pos0, &mut scratch);
+        let mut p = pos0.clone();
+        let dir = (p[1] - p[0]).normalized();
+        p[1] += dir * 0.3;
+        let e = pes.compute(&p, &mut scratch);
+        let harmonic = 0.5 * k_r * 0.3 * 0.3;
+        assert!(e - e0 < harmonic * 0.95, "e−e0={} harmonic={harmonic}", e - e0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Power-of-two weight quantization — the paper's multiplication-less NN
+//! core (§III-C, Eqs. (5)–(11)).
+//!
+//! A float weight `w` is represented as `w_q = s · Σ_{k=1..K} 2^{n_k}`
+//! (Eq. 9): a sign plus at most `K` integer powers of two, chosen by the
+//! greedy residual recursion of Eq. (7) over the basis function
+//! `Q(w) = 2^⌈log₂(|w|/1.5)⌉` (Eq. 8). Multiplication by such a weight is
+//! then a base-2 **shift–sum** (Eq. 10) using the shift function `P(x,n)`
+//! (Eq. 11) — no multiplier in the datapath.
+//!
+//! Each greedy step lands within ±33% of its residual (the 1.5 divisor
+//! centers the ceiling), so after `m` *active* terms the error is at most
+//! `|w|·3⁻ᵐ` — when a step overshoots, Eq. (7)'s `max(·, 0)` clips the
+//! residual and the recursion stops early with that step's error. A
+//! property test asserts `|w − w_q| ≤ |w|·3^{−terms}` and monotone
+//! non-increasing error in K.
+
+use crate::fixedpoint::shift_raw;
+
+/// Hardware range of stored shift exponents. The SU barrel shifter width
+/// in `hw::synth` is derived from this (5-bit two's-complement exponent
+/// field → shifts in [−16, 15]).
+pub const EXP_MIN: i32 = -16;
+pub const EXP_MAX: i32 = 15;
+
+/// A weight quantized as a sign and up to K powers of two (Eq. 9).
+///
+/// `exps` holds the active exponents `n_k`, largest first; terms whose
+/// greedy residual reached exactly zero are absent (the corresponding SU
+/// is disabled in hardware, its output gated to 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShiftWeight {
+    /// −1, 0, +1 (Eq. 6); 0 only for w = 0.
+    pub sign: i8,
+    /// Active exponents, at most K of them.
+    pub exps: Vec<i32>,
+}
+
+impl ShiftWeight {
+    pub fn zero() -> Self {
+        ShiftWeight { sign: 0, exps: Vec::new() }
+    }
+
+    /// Reconstructed float value `s·Σ 2^{n_k}`.
+    pub fn value(&self) -> f64 {
+        let mag: f64 = self.exps.iter().map(|&n| (2f64).powi(n)).sum();
+        self.sign as f64 * mag
+    }
+
+    /// Apply to a raw fixed-point input: `w_q · x` as shift-accumulate
+    /// (Eq. 10). Shifts truncate like the RTL (`P` of Eq. 11); the sum is
+    /// in a wide accumulator, sign applied last (the MU's symbol
+    /// selector).
+    pub fn apply_raw(&self, x_raw: i64) -> i64 {
+        if self.sign == 0 {
+            return 0;
+        }
+        let mut acc: i64 = 0;
+        for &n in &self.exps {
+            acc += shift_raw(x_raw, n);
+        }
+        if self.sign < 0 {
+            -acc
+        } else {
+            acc
+        }
+    }
+
+    /// Number of hardware shift terms in use.
+    pub fn terms(&self) -> usize {
+        self.exps.len()
+    }
+}
+
+/// The basis function Q(w) of Eq. (8): the power of two with exponent
+/// ⌈log₂(|w|/1.5)⌉, returned as that exponent. `w` must be > 0.
+pub fn basis_exponent(w: f64) -> i32 {
+    debug_assert!(w > 0.0);
+    let y = w / 1.5;
+    let mut n = y.log2().ceil() as i32;
+    // Guard against f64 log rounding at exact powers of two.
+    while (2f64).powi(n - 1) >= y {
+        n -= 1;
+    }
+    while (2f64).powi(n) < y {
+        n += 1;
+    }
+    n
+}
+
+/// Quantize a float weight with at most `k` power-of-two terms
+/// (Eqs. 5–8). Exponents are clamped to the hardware range
+/// [`EXP_MIN`, `EXP_MAX`]; residuals below 2^EXP_MIN are dropped.
+pub fn quantize_weight(w: f64, k: usize) -> ShiftWeight {
+    if w == 0.0 || !w.is_finite() {
+        return ShiftWeight::zero();
+    }
+    let sign: i8 = if w > 0.0 { 1 } else { -1 };
+    let mut residual = w.abs();
+    let mut exps = Vec::with_capacity(k);
+    for _ in 0..k {
+        if residual <= (2f64).powi(EXP_MIN - 1) {
+            break; // below hardware resolution
+        }
+        let n = basis_exponent(residual).clamp(EXP_MIN, EXP_MAX);
+        exps.push(n);
+        let q = (2f64).powi(n);
+        residual = (residual - q).max(0.0); // Eq. 7's max(·, 0)
+        if residual == 0.0 {
+            break;
+        }
+    }
+    ShiftWeight { sign, exps }
+}
+
+/// Quantize a full weight matrix (row-major `rows × cols`).
+pub fn quantize_matrix(w: &[f64], k: usize) -> Vec<ShiftWeight> {
+    w.iter().map(|&x| quantize_weight(x, k)).collect()
+}
+
+/// Dequantized float view of a quantized matrix (for QAT equivalence and
+/// the L2 kernel, which reconstructs `w_q` rather than shifting).
+pub fn dequantize(ws: &[ShiftWeight]) -> Vec<f64> {
+    ws.iter().map(|w| w.value()).collect()
+}
+
+/// Worst-case relative quantization error bound after `m` *active*
+/// terms: 3⁻ᵐ. (Overshoot at step m clips the residual to zero with an
+/// error ≤ residual/3 ≤ |w|·3⁻ᵐ; undershoot continues with residual
+/// ≤ |w|·3⁻ᵐ.)
+pub fn error_bound(m: usize) -> f64 {
+    (3f64).powi(-(m as i32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn basis_exponent_examples() {
+        // Eq. 8: Q(1.0) = 2^⌈log2(1/1.5)⌉ = 2^0 = 1.
+        assert_eq!(basis_exponent(1.0), 0);
+        // Q(1.5) = 2^⌈log2(1)⌉ = 1 → exponent 0.
+        assert_eq!(basis_exponent(1.5), 0);
+        // Q(1.6): log2(1.0667) ≈ 0.093 → ceil 1 → exponent 1 (value 2).
+        assert_eq!(basis_exponent(1.6), 1);
+        // Q(0.75): log2(0.5) = −1 exactly → exponent −1 (value 0.5).
+        assert_eq!(basis_exponent(0.75), -1);
+        // exact powers of two: Q(2^m) = 2^m (since 2^m/1.5 → ceil lands on m)
+        for m in -10..10 {
+            let w = (2f64).powi(m);
+            assert_eq!(basis_exponent(w), m, "w=2^{m}");
+        }
+    }
+
+    #[test]
+    fn basis_within_33_percent() {
+        // Q(w) ∈ [w/1.5, 2w/1.5): the residual |w − Q(w)| ≤ w/3.
+        let mut rng = Pcg::new(5);
+        for _ in 0..10_000 {
+            let w = rng.range(1e-4, 4.0);
+            let q = (2f64).powi(basis_exponent(w));
+            assert!(q >= w / 1.5 - 1e-12 && q < 2.0 * w / 1.5 + 1e-12, "w={w} q={q}");
+            assert!((w - q).abs() <= w / 3.0 + 1e-12, "w={w} q={q}");
+        }
+    }
+
+    #[test]
+    fn error_shrinks_geometrically_with_k() {
+        let mut rng = Pcg::new(17);
+        for _ in 0..2_000 {
+            let w = rng.range(-2.0, 2.0);
+            if w.abs() < 1e-3 {
+                continue;
+            }
+            let mut prev = f64::INFINITY;
+            for k in 1..=5 {
+                let q = quantize_weight(w, k);
+                let err = (q.value() - w).abs();
+                assert!(
+                    err <= w.abs() * error_bound(q.terms()) + 1e-12,
+                    "w={w} k={k} terms={} err={err}",
+                    q.terms()
+                );
+                assert!(err <= prev + 1e-15, "error must be monotone in K");
+                prev = err;
+            }
+        }
+    }
+
+    #[test]
+    fn sign_function_eq6() {
+        assert_eq!(quantize_weight(0.7, 3).sign, 1);
+        assert_eq!(quantize_weight(-0.7, 3).sign, -1);
+        assert_eq!(quantize_weight(0.0, 3).sign, 0);
+        assert_eq!(quantize_weight(0.0, 3).value(), 0.0);
+    }
+
+    #[test]
+    fn apply_raw_equals_value_times_input_when_no_truncation() {
+        // With non-negative exponents, shifts are exact.
+        let w = ShiftWeight { sign: -1, exps: vec![2, 0] }; // −5
+        assert_eq!(w.value(), -5.0);
+        assert_eq!(w.apply_raw(7), -35);
+    }
+
+    #[test]
+    fn apply_raw_truncation_matches_p_function() {
+        // exponent −2 on raw 7 → 7>>2 = 1 (truncated), then sign.
+        let w = ShiftWeight { sign: 1, exps: vec![-2] };
+        assert_eq!(w.apply_raw(7), 1);
+        let wn = ShiftWeight { sign: -1, exps: vec![-2] };
+        assert_eq!(wn.apply_raw(7), -1);
+        // negative input: arithmetic shift −7>>2 = −2.
+        assert_eq!(w.apply_raw(-7), -2);
+    }
+
+    #[test]
+    fn shift_apply_close_to_float_product() {
+        let mut rng = Pcg::new(31);
+        let frac = 10u32;
+        for _ in 0..5_000 {
+            let wv = rng.range(-2.0, 2.0);
+            let xv = rng.range(-3.9, 3.9);
+            let q = quantize_weight(wv, 3);
+            let x_raw = (xv * (1 << frac) as f64).round() as i64;
+            let got = q.apply_raw(x_raw) as f64 / (1 << frac) as f64;
+            let ideal = q.value() * (x_raw as f64 / (1 << frac) as f64);
+            // truncation loses at most 1 LSB per active term
+            let tol = q.terms() as f64 / (1 << frac) as f64 + 1e-12;
+            assert!((got - ideal).abs() <= tol, "w={wv} x={xv} got={got} ideal={ideal}");
+        }
+    }
+
+    #[test]
+    fn at_most_k_terms_and_descending() {
+        let mut rng = Pcg::new(77);
+        for _ in 0..2_000 {
+            let w = rng.range(-4.0, 4.0);
+            for k in 1..=5 {
+                let q = quantize_weight(w, k);
+                assert!(q.terms() <= k);
+                for pair in q.exps.windows(2) {
+                    assert!(pair[0] >= pair[1], "exponents should be non-increasing: {:?}", q.exps);
+                }
+                for &e in &q.exps {
+                    assert!((EXP_MIN..=EXP_MAX).contains(&e));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_weights_flush_to_zero() {
+        let q = quantize_weight(1e-9, 3);
+        assert_eq!(q.value(), 0.0);
+        assert_eq!(q.apply_raw(1000), 0);
+    }
+
+    #[test]
+    fn matrix_quantize_roundtrip() {
+        let w = vec![0.5, -1.25, 0.0, 0.3];
+        let q = quantize_matrix(&w, 3);
+        let d = dequantize(&q);
+        for ((orig, deq), qw) in w.iter().zip(&d).zip(&q) {
+            assert!((orig - deq).abs() <= orig.abs() * error_bound(qw.terms()) + 1e-12);
+        }
+        assert_eq!(d[2], 0.0);
+        // 0.5 and −1.25 are exact sums of ≤3 powers of two
+        assert_eq!(d[0], 0.5);
+        assert_eq!(d[1], -1.25);
+    }
+}

@@ -1,0 +1,215 @@
+//! PJRT runtime — loads the HLO-text artifacts produced at build time by
+//! `python/compile/aot.py` (the L2 JAX graph, with the L1 Pallas kernel
+//! lowered inline) and executes them on the request path. This is the
+//! only place Python output touches the runtime, and it is data (HLO
+//! text), never code.
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::vn::HForceModel;
+
+/// A PJRT CPU session.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled computation. Convention (enforced by `aot.py`): inputs are
+/// f32 arrays, output is a tuple of f32 arrays (`return_tuple=True`).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// A host-side f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: &[usize]) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "tensor shape {:?} != data len {}", dims, data.len());
+        Ok(Tensor { data, dims: dims.to_vec() })
+    }
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { data: vec![v], dims: vec![] }
+    }
+    pub fn vec1(v: &[f32]) -> Tensor {
+        Tensor { data: v.to_vec(), dims: vec![v.len()] }
+    }
+    pub fn mat(rows: &[Vec<f32>]) -> Tensor {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Tensor { data, dims: vec![r, c] }
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs; returns the tuple elements as f32
+    /// tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(&t.data);
+                if t.dims.is_empty() {
+                    // scalar: reshape to rank-0
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                    Ok(lit.reshape(&dims)?)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let elems = out.to_tuple().context("decomposing result tuple")?;
+        elems
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().context("result shape")?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                // convert (jax may emit f32 already; convert is cheap/noop)
+                let lit = lit.convert(xla::PrimitiveType::F32)?;
+                let data = lit.to_vec::<f32>().context("result to_vec")?;
+                Tensor::new(data, &dims)
+            })
+            .collect()
+    }
+}
+
+/// Water force model backed by an AOT-compiled MLP graph: the measured
+/// vN-MLMD path of Table III. The artifact contract (see `aot.py`):
+/// input `f32[2,3]` (feature rows for both hydrogens), output tuple of
+/// one `f32[2,2]` (local-frame coefficients).
+pub struct HloForceModel {
+    pub exe: Executable,
+    pub calls: u64,
+}
+
+impl HloForceModel {
+    pub fn load(rt: &Runtime, path: &Path) -> Result<Self> {
+        Ok(HloForceModel { exe: rt.load_hlo_text(path)?, calls: 0 })
+    }
+}
+
+impl HForceModel for HloForceModel {
+    fn eval(&mut self, feats: &[[f64; 3]; 2]) -> Result<[[f64; 2]; 2]> {
+        let flat: Vec<f32> = feats.iter().flatten().map(|&x| x as f32).collect();
+        let out = self.exe.run(&[Tensor::new(flat, &[2, 3])?])?;
+        anyhow::ensure!(out.len() == 1 && out[0].dims == vec![2, 2], "bad output shape");
+        let d = &out[0].data;
+        self.calls += 1;
+        Ok([[d[0] as f64, d[1] as f64], [d[2] as f64, d[3] as f64]])
+    }
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.exe.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a computation in-process with XlaBuilder (no python needed):
+    /// f(x, w) = tuple(x·w + 1) over f32[2,3]·f32[3,2].
+    fn make_matmul_exe(rt: &Runtime) -> Executable {
+        let b = xla::XlaBuilder::new("test_matmul");
+        let x = b
+            .parameter(0, xla::ElementType::F32, &[2, 3], "x")
+            .unwrap();
+        let w = b
+            .parameter(1, xla::ElementType::F32, &[3, 2], "w")
+            .unwrap();
+        let y = x.matmul(&w).unwrap();
+        let one = b.c0(1.0f32).unwrap();
+        let y = (y + one).unwrap();
+        let comp = b.build(&b.tuple(&[y]).unwrap()).unwrap();
+        let exe = rt.client.compile(&comp).unwrap();
+        Executable { exe, name: "test_matmul".into() }
+    }
+
+    #[test]
+    fn pjrt_cpu_roundtrip() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+        let exe = make_matmul_exe(&rt);
+        let x = Tensor::mat(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let w = Tensor::mat(&[vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]]);
+        let out = exe.run(&[x, w]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![2, 2]);
+        assert_eq!(out[0].data, vec![5.0, 6.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![1.0; 5], &[2, 3]).is_err());
+        assert!(Tensor::new(vec![1.0; 6], &[2, 3]).is_ok());
+        assert_eq!(Tensor::scalar(2.0).dims.len(), 0);
+    }
+
+    #[test]
+    fn hlo_text_artifact_roundtrip_if_present() {
+        // Full AOT path (python → HLO text → PJRT) — exercised when the
+        // artifacts exist; `make artifacts` builds them.
+        let path = crate::artifact_path("water_mlp.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {} not built", path.display());
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut model = HloForceModel::load(&rt, &path).unwrap();
+        let out = model
+            .eval(&[[1.03, 0.65, 1.03], [1.02, 0.66, 1.04]])
+            .unwrap();
+        for row in out {
+            for v in row {
+                assert!(v.is_finite());
+            }
+        }
+        assert_eq!(model.calls, 1);
+    }
+}

@@ -1,0 +1,172 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Provides seeded generators, a `forall` runner with failure-case
+//! shrinking for numeric inputs, and helpers used by the coordinator and
+//! kernel-equivalence invariants. Deliberately small: generators are
+//! closures over [`Pcg`], shrinking bisects floats toward zero and
+//! vectors toward shorter lengths.
+
+use crate::util::rng::Pcg;
+
+/// Configuration for a property run.
+#[derive(Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x5eed, max_shrink_steps: 200 }
+    }
+}
+
+/// Outcome of a property check on one case.
+pub type Check = Result<(), String>;
+
+/// Run `prop` on `cases` generated inputs; on failure, shrink with
+/// `shrink` (which yields candidate simplifications) and panic with the
+/// minimal failing case.
+pub fn forall<T, G, P, S>(cfg: &Config, mut gen: G, mut shrink: S, mut prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg) -> T,
+    P: FnMut(&T) -> Check,
+    S: FnMut(&T) -> Vec<T>,
+{
+    let mut rng = Pcg::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut best = (input.clone(), msg.clone());
+            let mut steps = 0;
+            'outer: loop {
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+                for cand in shrink(&best.0) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.seed, best.0, best.1
+            );
+        }
+    }
+}
+
+/// Convenience: property over a `Vec<f64>` with length in [min_len,
+/// max_len] and elements in [lo, hi]. Shrinks by halving elements and
+/// dropping halves of the vector.
+pub fn forall_f64_vec<P>(cfg: &Config, min_len: usize, max_len: usize, lo: f64, hi: f64, prop: P)
+where
+    P: FnMut(&Vec<f64>) -> Check,
+{
+    let gen = move |rng: &mut Pcg| {
+        let n = min_len + rng.below((max_len - min_len + 1) as u32) as usize;
+        (0..n).map(|_| rng.range(lo, hi)).collect::<Vec<f64>>()
+    };
+    let shrink = move |v: &Vec<f64>| {
+        let mut out = Vec::new();
+        if v.len() > min_len {
+            out.push(v[..v.len() / 2.max(min_len)].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+        }
+        // halve magnitudes
+        if v.iter().any(|x| x.abs() > 1e-12) {
+            out.push(v.iter().map(|x| x / 2.0).collect());
+        }
+        // zero one element at a time (first few)
+        for i in 0..v.len().min(4) {
+            if v[i] != 0.0 {
+                let mut w = v.clone();
+                w[i] = 0.0;
+                out.push(w);
+            }
+        }
+        out.retain(|w: &Vec<f64>| w.len() >= min_len);
+        out
+    };
+    forall(cfg, gen, shrink, prop);
+}
+
+/// Assert two floats are close (absolute + relative tolerance), as a
+/// `Check` for use inside properties.
+pub fn close(a: f64, b: f64, atol: f64, rtol: f64) -> Check {
+    let tol = atol + rtol * b.abs().max(a.abs());
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+/// Assert slices are element-wise close.
+pub fn all_close(a: &[f64], b: &[f64], atol: f64, rtol: f64) -> Check {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        close(*x, *y, atol, rtol).map_err(|e| format!("at {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall_f64_vec(&Config { cases: 50, ..Default::default() }, 1, 8, -1.0, 1.0, |v| {
+            count += 1;
+            if v.iter().all(|x| x.abs() <= 1.0) {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // Property: sum < 3. Failing cases get shrunk; the panic message
+        // should contain a small counterexample.
+        let result = std::panic::catch_unwind(|| {
+            forall_f64_vec(&Config { cases: 200, seed: 1, ..Default::default() }, 1, 10, 0.0, 1.0, |v| {
+                if v.iter().sum::<f64>() < 3.0 {
+                    Ok(())
+                } else {
+                    Err(format!("sum = {}", v.iter().sum::<f64>()))
+                }
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("property failed"), "{msg}");
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0).is_ok());
+        assert!(close(1.0, 1.1, 1e-9, 0.0).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 0.0, 0.0).is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Radix-2 FFT and spectral helpers (rustfft is unavailable offline).
+//!
+//! Used by the analysis stack to turn velocity/mode autocorrelation
+//! functions into vibrational densities of states (paper Fig. 10).
+
+use std::f64::consts::PI;
+
+/// Complex number (no external num-complex to keep the dependency set to
+/// the vendored closure).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cplx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cplx {
+    pub const ZERO: Cplx = Cplx { re: 0.0, im: 0.0 };
+    pub fn new(re: f64, im: f64) -> Self {
+        Cplx { re, im }
+    }
+    pub fn conj(self) -> Self {
+        Cplx::new(self.re, -self.im)
+    }
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+    pub fn abs(self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+    fn mul(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+    fn add(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re + o.re, self.im + o.im)
+    }
+    fn sub(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// In-place iterative radix-2 Cooley–Tukey FFT. `data.len()` must be a
+/// power of two. `inverse` applies the conjugate transform *without* the
+/// 1/N normalization (caller normalizes).
+pub fn fft(data: &mut [Cplx], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if j > i {
+            data.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = Cplx::new(ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = Cplx::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = data[i + k + len / 2].mul(w);
+                data[i + k] = u.add(v);
+                data[i + k + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Next power of two ≥ n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Hann window coefficients of length n.
+pub fn hann(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| 0.5 * (1.0 - (2.0 * PI * i as f64 / (n.max(2) - 1) as f64).cos()))
+        .collect()
+}
+
+/// One-sided power spectrum of a real signal, zero-padded to a power of
+/// two (≥ `min_len` if given). Returns (bin frequencies in cycles per
+/// sample, power). Applies a Hann window when `window` is true.
+pub fn power_spectrum(signal: &[f64], window: bool, min_len: Option<usize>) -> (Vec<f64>, Vec<f64>) {
+    let n = signal.len();
+    assert!(n > 1, "need at least 2 samples");
+    let padded = next_pow2(n.max(min_len.unwrap_or(0)));
+    let w = if window { hann(n) } else { vec![1.0; n] };
+    let mut buf: Vec<Cplx> = (0..padded)
+        .map(|i| {
+            if i < n {
+                Cplx::new(signal[i] * w[i], 0.0)
+            } else {
+                Cplx::ZERO
+            }
+        })
+        .collect();
+    fft(&mut buf, false);
+    let half = padded / 2;
+    let freqs = (0..half).map(|k| k as f64 / padded as f64).collect();
+    let power = buf[..half].iter().map(|c| c.norm_sq() / n as f64).collect();
+    (freqs, power)
+}
+
+/// Normalized autocorrelation of a real signal up to `max_lag` (inclusive
+/// upper bound `max_lag-1`), computed directly (O(N·L) — our signals are
+/// short enough, and the direct form avoids circular-correlation edge
+/// effects).
+pub fn autocorrelation(signal: &[f64], max_lag: usize) -> Vec<f64> {
+    let n = signal.len();
+    let max_lag = max_lag.min(n);
+    let mean = signal.iter().sum::<f64>() / n as f64;
+    let xs: Vec<f64> = signal.iter().map(|x| x - mean).collect();
+    let mut acf = Vec::with_capacity(max_lag);
+    let denom: f64 = xs.iter().map(|x| x * x).sum::<f64>().max(1e-300);
+    for lag in 0..max_lag {
+        let mut s = 0.0;
+        for i in 0..n - lag {
+            s += xs[i] * xs[i + lag];
+        }
+        acf.push(s / denom);
+    }
+    acf
+}
+
+/// Find the index of the maximum value; returns (index, value).
+pub fn argmax(xs: &[f64]) -> (usize, f64) {
+    let mut best = (0usize, f64::NEG_INFINITY);
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best.1 {
+            best = (i, x);
+        }
+    }
+    best
+}
+
+/// Refine a spectral peak location with a parabolic fit through the
+/// three bins around `i` (standard quadratic interpolation). Returns the
+/// sub-bin peak position.
+pub fn parabolic_peak(power: &[f64], i: usize) -> f64 {
+    if i == 0 || i + 1 >= power.len() {
+        return i as f64;
+    }
+    let (a, b, c) = (power[i - 1], power[i], power[i + 1]);
+    let denom = a - 2.0 * b + c;
+    if denom.abs() < 1e-300 {
+        return i as f64;
+    }
+    i as f64 + 0.5 * (a - c) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_matches_dft_small() {
+        let n = 16;
+        let mut rngish = 1u64;
+        let mut next = || {
+            rngish = rngish.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((rngish >> 33) as f64 / (1u64 << 31) as f64) - 0.5
+        };
+        let signal: Vec<Cplx> = (0..n).map(|_| Cplx::new(next(), next())).collect();
+        let mut fast = signal.clone();
+        fft(&mut fast, false);
+        // Naive DFT reference.
+        for k in 0..n {
+            let mut acc = Cplx::ZERO;
+            for (t, s) in signal.iter().enumerate() {
+                let ang = -2.0 * PI * (k * t) as f64 / n as f64;
+                acc = acc.add(s.mul(Cplx::new(ang.cos(), ang.sin())));
+            }
+            assert!((acc.re - fast[k].re).abs() < 1e-9);
+            assert!((acc.im - fast[k].im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_inverse_roundtrip() {
+        let n = 128;
+        let orig: Vec<Cplx> = (0..n).map(|i| Cplx::new((i as f64).sin(), 0.25 * i as f64)).collect();
+        let mut buf = orig.clone();
+        fft(&mut buf, false);
+        fft(&mut buf, true);
+        for (a, b) in orig.iter().zip(&buf) {
+            assert!((a.re - b.re / n as f64).abs() < 1e-9);
+            assert!((a.im - b.im / n as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn spectrum_finds_tone() {
+        // 90.5 cycles over 4096 samples, detect to sub-bin accuracy.
+        let n = 4096;
+        let f0 = 90.5 / n as f64;
+        let signal: Vec<f64> = (0..n).map(|i| (2.0 * PI * f0 * i as f64).sin()).collect();
+        let (freqs, power) = power_spectrum(&signal, true, Some(4 * n));
+        let (i, _) = argmax(&power);
+        let peak = parabolic_peak(&power, i);
+        let df = freqs[1] - freqs[0];
+        let f_est = peak * df;
+        assert!((f_est - f0).abs() < 0.05 * f0, "f_est={f_est} f0={f0}");
+    }
+
+    #[test]
+    fn autocorrelation_of_cosine_oscillates() {
+        let n = 2000;
+        let period = 50.0;
+        let signal: Vec<f64> = (0..n).map(|i| (2.0 * PI * i as f64 / period).cos()).collect();
+        let acf = autocorrelation(&signal, 200);
+        assert!((acf[0] - 1.0).abs() < 1e-12);
+        assert!((acf[50] - 1.0).abs() < 0.05, "acf[period]={}", acf[50]);
+        assert!(acf[25] < -0.9, "acf[period/2]={}", acf[25]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fft_rejects_non_pow2() {
+        let mut v = vec![Cplx::ZERO; 12];
+        fft(&mut v, false);
+    }
+
+    #[test]
+    fn hann_endpoints_zero() {
+        let w = hann(64);
+        assert!(w[0].abs() < 1e-12 && w[63].abs() < 1e-12);
+        assert!((w[32] - 1.0).abs() < 1e-2);
+    }
+}

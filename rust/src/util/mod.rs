@@ -1,0 +1,15 @@
+//! General-purpose substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (serde, rand,
+//! rustfft, …) are unavailable. The equivalents needed by the rest of the
+//! system are implemented here as small, tested modules.
+
+pub mod json;
+pub mod rng;
+pub mod fft;
+pub mod units;
+pub mod vec3;
+pub mod table;
+
+pub use vec3::Vec3;

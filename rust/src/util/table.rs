@@ -1,0 +1,95 @@
+//! Plain-text table rendering for CLI/bench reports that mirror the
+//! paper's tables.
+
+/// Render rows as an aligned ASCII table with a header rule.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.chars().count()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push(' ');
+            line.push_str(c);
+            for _ in c.chars().count()..*w {
+                line.push(' ');
+            }
+            line.push_str(" |");
+        }
+        line.push('\n');
+        line
+    };
+    let hdr: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    let mut rule = String::from("|");
+    for w in &widths {
+        for _ in 0..w + 2 {
+            rule.push('-');
+        }
+        rule.push('|');
+    }
+    rule.push('\n');
+    out.push_str(&rule);
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// Format a float in scientific notation like the paper ("1.6×10⁻⁶" → "1.6e-6").
+pub fn sci(x: f64, digits: usize) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    format!("{:.*e}", digits, x)
+}
+
+/// Format with fixed decimals.
+pub fn fix(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+/// Percent with given decimals.
+pub fn pct(x: f64, digits: usize) -> String {
+    format!("{:.*}%", digits, 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            &["Method", "S (s/step/atom)"],
+            &[
+                vec!["DFT".into(), "1.9".into()],
+                vec!["NvN-MLMD".into(), "1.6e-6".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{t}");
+        assert!(t.contains("NvN-MLMD"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        render(&["a", "b"], &[vec!["1".into()]]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(sci(1.6e-6, 1), "1.6e-6");
+        assert_eq!(fix(104.876, 2), "104.88");
+        assert_eq!(pct(0.0106, 2), "1.06%");
+    }
+}

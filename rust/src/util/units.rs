@@ -1,0 +1,77 @@
+//! Unit system and physical constants.
+//!
+//! Internal MD units: length Å, time fs, energy eV, mass amu. In this
+//! system accelerations need one conversion factor because
+//! 1 eV/(Å·amu) = [`ACC_CONV`] Å/fs².
+
+/// Boltzmann constant, eV/K.
+pub const KB: f64 = 8.617333262e-5;
+
+/// 1 eV/(Å·amu) expressed in Å/fs² — the force→acceleration conversion.
+/// (1.602176634e-19 J / (1e-10 m · 1.66053906660e-27 kg) = 9.648533e13
+/// m/s² = 9.648533e-3 Å/fs².)
+pub const ACC_CONV: f64 = 9.648533212331e-3;
+
+/// Speed of light in cm/fs (for wavenumber conversion).
+pub const C_CM_PER_FS: f64 = 2.99792458e-5;
+
+/// Convert an angular-frequency-squared eigenvalue λ (in eV/(Å²·amu),
+/// i.e. mass-weighted Hessian units) to a wavenumber in cm⁻¹.
+/// ω [rad/fs] = sqrt(λ·ACC_CONV); ν̃ = ω/(2πc).
+pub fn hessian_eig_to_wavenumber(lambda: f64) -> f64 {
+    if lambda <= 0.0 {
+        return 0.0;
+    }
+    let omega = (lambda * ACC_CONV).sqrt(); // rad/fs
+    omega / (2.0 * std::f64::consts::PI * C_CM_PER_FS)
+}
+
+/// Convert a cyclic frequency in 1/fs to a wavenumber in cm⁻¹.
+pub fn freq_fs_to_wavenumber(f: f64) -> f64 {
+    f / C_CM_PER_FS
+}
+
+/// Convert a wavenumber in cm⁻¹ to a cyclic frequency in 1/fs.
+pub fn wavenumber_to_freq_fs(nu: f64) -> f64 {
+    nu * C_CM_PER_FS
+}
+
+/// Atomic masses in amu.
+pub mod mass {
+    pub const H: f64 = 1.00794;
+    pub const C: f64 = 12.011;
+    pub const O: f64 = 15.9994;
+    pub const SI: f64 = 28.0855;
+}
+
+/// eV per hartree, bohr per Å (used by the toy SCF engine).
+pub const HARTREE_EV: f64 = 27.211386245988;
+pub const BOHR_A: f64 = 0.529177210903;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oh_stretch_wavenumber_sanity() {
+        // Diatomic OH with k = 50 eV/Å²: ν̃ = sqrt(k/μ)·conv ≈ 3700–3800 cm⁻¹.
+        let mu = mass::O * mass::H / (mass::O + mass::H);
+        let k = 50.0;
+        let nu = hessian_eig_to_wavenumber(k / mu);
+        assert!((3600.0..3900.0).contains(&nu), "nu={nu}");
+    }
+
+    #[test]
+    fn wavenumber_roundtrip() {
+        let nu = 1603.0;
+        let f = wavenumber_to_freq_fs(nu);
+        assert!((freq_fs_to_wavenumber(f) - nu).abs() < 1e-9);
+        // 1603 cm⁻¹ → period ≈ 20.8 fs.
+        assert!(((1.0 / f) - 20.8).abs() < 0.1, "period={}", 1.0 / f);
+    }
+
+    #[test]
+    fn kt_room_temperature() {
+        assert!((KB * 300.0 - 0.02585).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,136 @@
+//! 3-vector used throughout the MD stack.
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+
+    pub fn new(x: f64, y: f64, z: f64) -> Self {
+        Vec3 { x, y, z }
+    }
+    pub fn dot(self, o: Vec3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        Vec3::new(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+    pub fn norm_sq(self) -> f64 {
+        self.dot(self)
+    }
+    pub fn norm(self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+    pub fn normalized(self) -> Vec3 {
+        let n = self.norm();
+        debug_assert!(n > 0.0, "normalizing zero vector");
+        self / n
+    }
+    /// Angle between two vectors in radians.
+    pub fn angle_between(self, o: Vec3) -> f64 {
+        let c = (self.dot(o) / (self.norm() * o.norm())).clamp(-1.0, 1.0);
+        c.acos()
+    }
+    pub fn to_array(self) -> [f64; 3] {
+        [self.x, self.y, self.z]
+    }
+    pub fn from_array(a: [f64; 3]) -> Self {
+        Vec3::new(a[0], a[1], a[2])
+    }
+    /// Component-wise minimum-image wrap into a cubic box of side `l`.
+    pub fn min_image(self, l: f64) -> Vec3 {
+        let wrap = |v: f64| v - l * (v / l).round();
+        Vec3::new(wrap(self.x), wrap(self.y), wrap(self.z))
+    }
+}
+
+impl Add for Vec3 {
+    type Output = Vec3;
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+impl Sub for Vec3 {
+    type Output = Vec3;
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+impl Neg for Vec3 {
+    type Output = Vec3;
+    fn neg(self) -> Vec3 {
+        Vec3::new(-self.x, -self.y, -self.z)
+    }
+}
+impl Mul<f64> for Vec3 {
+    type Output = Vec3;
+    fn mul(self, s: f64) -> Vec3 {
+        Vec3::new(self.x * s, self.y * s, self.z * s)
+    }
+}
+impl Mul<Vec3> for f64 {
+    type Output = Vec3;
+    fn mul(self, v: Vec3) -> Vec3 {
+        v * self
+    }
+}
+impl Div<f64> for Vec3 {
+    type Output = Vec3;
+    fn div(self, s: f64) -> Vec3 {
+        Vec3::new(self.x / s, self.y / s, self.z / s)
+    }
+}
+impl AddAssign for Vec3 {
+    fn add_assign(&mut self, o: Vec3) {
+        *self = *self + o;
+    }
+}
+impl SubAssign for Vec3 {
+    fn sub_assign(&mut self, o: Vec3) {
+        *self = *self - o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_algebra() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(-1.0, 0.5, 2.0);
+        assert_eq!(a + b, Vec3::new(0.0, 2.5, 5.0));
+        assert_eq!(a - b, Vec3::new(2.0, 1.5, 1.0));
+        assert_eq!(a * 2.0, Vec3::new(2.0, 4.0, 6.0));
+        assert!((a.dot(b) - 6.0).abs() < 1e-12);
+        assert_eq!(a.cross(b), Vec3::new(2.5, -5.0, 2.5));
+        assert!((a.cross(b).dot(a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn angles() {
+        let x = Vec3::new(1.0, 0.0, 0.0);
+        let y = Vec3::new(0.0, 2.0, 0.0);
+        assert!((x.angle_between(y) - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+        assert!((x.angle_between(x * 3.0)).abs() < 1e-7);
+        assert!((x.angle_between(-x) - std::f64::consts::PI).abs() < 1e-7);
+    }
+
+    #[test]
+    fn min_image_wraps() {
+        let v = Vec3::new(5.4, -5.4, 0.1).min_image(10.0);
+        assert!((v.x - (-4.6)).abs() < 1e-12);
+        assert!((v.y - 4.6).abs() < 1e-12);
+        assert!((v.z - 0.1).abs() < 1e-12);
+    }
+}
