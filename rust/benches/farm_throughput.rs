@@ -1,0 +1,92 @@
+//! Farm serving-path throughput: molecule-steps/second of the batched,
+//! sharded [`WaterFarm`] — the measured counterpart of the §VI A₂
+//! (intra-ASIC parallelization) projection. Emits host throughput for
+//! inline vs threaded shard backends and the modelled lane-model
+//! throughput sweep into the benchkit JSON, so `BENCH_*.json` tracks a
+//! throughput trajectory PR over PR.
+
+use nvnmd::benchkit::Bench;
+use nvnmd::coordinator::farm::{random_water_systems, FarmConfig, WaterFarm};
+use nvnmd::coordinator::ParallelMode;
+use nvnmd::exp::water_model_or_fallback as model;
+use nvnmd::hw::timing::CLOCK_HZ;
+use nvnmd::util::json::{self, Value};
+
+fn main() {
+    let mut b = Bench::new("farm_throughput");
+    let quick = nvnmd::benchkit::quick_mode();
+    let m = model();
+    let n_mols = 64usize;
+    let ticks = if quick { 200 } else { 2_000 };
+    let systems = random_water_systems(n_mols, 300.0, 2024);
+
+    let mut rows: Vec<Value> = Vec::new();
+    let cases = [
+        ("inline_1shard", ParallelMode::Inline, 1usize),
+        ("inline_4shard", ParallelMode::Inline, 4),
+        ("threaded_2shard", ParallelMode::Threaded, 2),
+        ("threaded_8shard", ParallelMode::Threaded, 8),
+    ];
+    for (label, mode, shards) in cases {
+        let mut farm = WaterFarm::new(
+            &m,
+            &systems,
+            &FarmConfig { shards, mode, ..FarmConfig::default() },
+        )
+        .expect("farm construction");
+        b.measure_once(&format!("farm_{n_mols}mol_{label}_x{ticks}"), || {
+            farm.run(ticks).expect("farm run");
+        });
+        let ledger = farm.finish().expect("farm finish");
+        // Same definition as exp::scaling's host_steps_per_s (the
+        // ledger's accumulated per-tick wall), so the two reports agree.
+        let steps_per_sec = ledger.host_steps_per_second();
+        b.note(
+            &format!("{label}_molecule_steps_per_sec"),
+            format!("{steps_per_sec:.0}"),
+        );
+        rows.push(json::obj(vec![
+            ("label", json::s(label)),
+            ("n_molecules", json::num(n_mols as f64)),
+            ("shards", json::num(shards as f64)),
+            ("ticks", json::num(ticks as f64)),
+            ("molecule_steps_per_sec", json::num(steps_per_sec)),
+            (
+                "modelled_steps_per_sec",
+                json::num(ledger.modelled_steps_per_second(CLOCK_HZ)),
+            ),
+        ]));
+    }
+
+    // Modelled lane-model sweep (the A₂ story in numbers): same farm,
+    // chip lane count rising with transistor density — throughput on the
+    // modelled hardware, independent of host speed.
+    let mut lane_rows: Vec<Value> = Vec::new();
+    for lanes in [1usize, 4, 16, 64] {
+        let mut farm = WaterFarm::new(
+            &m,
+            &systems,
+            &FarmConfig { shards: 4, lanes, ..FarmConfig::default() },
+        )
+        .expect("farm construction");
+        farm.run(if quick { 20 } else { 100 }).expect("farm run");
+        let ledger = farm.finish().expect("farm finish");
+        let modelled = ledger.modelled_steps_per_second(CLOCK_HZ);
+        b.note(
+            &format!("modelled_steps_per_sec_lanes{lanes}"),
+            format!("{modelled:.0}"),
+        );
+        lane_rows.push(json::obj(vec![
+            ("lanes", json::num(lanes as f64)),
+            ("modelled_steps_per_sec", json::num(modelled)),
+            (
+                "s_per_step_atom",
+                json::num(ledger.s_per_step_atom(CLOCK_HZ)),
+            ),
+        ]));
+    }
+
+    b.attach("farm", Value::Arr(rows));
+    b.attach("lane_sweep", Value::Arr(lane_rows));
+    b.finish();
+}

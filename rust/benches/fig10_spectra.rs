@@ -15,7 +15,7 @@ fn main() {
     b.measure("autocorrelation_4k_lags", || {
         fft::autocorrelation(&signal[..8192], 4096).len()
     });
-    let quick = std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1");
+    let quick = nvnmd::benchkit::quick_mode();
     let (res, _) = b.measure_once("fig10_full_pipeline", || nvnmd::exp::fig10::run(quick));
     match res {
         Ok(r) => println!("{}", r.render()),

@@ -7,26 +7,14 @@
 use nvnmd::asic::{ChipConfig, MlpChip};
 use nvnmd::benchkit::Bench;
 use nvnmd::coordinator::{ParallelMode, WaterSystem};
+use nvnmd::exp::water_model_or_fallback as model;
 use nvnmd::fixedpoint::{q13, Q13};
 use nvnmd::fpga::WaterFpga;
 use nvnmd::md::{initialize_velocities, System};
-use nvnmd::nn::{Activation, Mlp, Sqnn};
+use nvnmd::nn::Sqnn;
 use nvnmd::potentials::WaterPes;
 use nvnmd::runtime::{Runtime, Tensor};
 use nvnmd::util::rng::Pcg;
-
-fn model() -> Mlp {
-    Mlp::load(&nvnmd::artifact_path("models/water_qnn_k3.json")).unwrap_or_else(|_| {
-        let mut rng = Pcg::new(7);
-        let mut m = Mlp::init_random("fallback", &[3, 3, 3, 2], Activation::Phi, &mut rng);
-        for l in &mut m.layers {
-            for w in &mut l.w {
-                *w *= 0.4;
-            }
-        }
-        m
-    })
-}
 
 fn initial() -> System {
     let pes = WaterPes::dft_surrogate();
@@ -48,10 +36,62 @@ fn main() {
     });
     b.measure("q13_dot_wide_256", || q13::dot_wide(&qa, &qb).0);
 
-    // L3a: SQNN forward (the chip datapath without accounting).
+    // L3a: SQNN forward (the chip datapath without accounting) — the
+    // allocating convenience form (the historical §Perf series) and the
+    // allocation-free `_into` the coordinator actually drives, so the
+    // batch-speedup notes below can separate the batching gain from the
+    // scalar wrapper's per-call Vec.
     let net = Sqnn::from_mlp(&m, 3);
     let x = [Q13::from_f64(1.03), Q13::from_f64(0.65), Q13::from_f64(1.03)];
-    b.measure("sqnn_forward_q13", || net.forward_q13(&x)[0].0);
+    let scalar = b.measure("sqnn_forward_q13", || net.forward_q13(&x)[0].0);
+    let mut y = [Q13::ZERO; 2];
+    let scalar_into = b.measure("sqnn_forward_q13_into", || {
+        net.forward_q13_into(&x, &mut y);
+        y[0].0
+    });
+
+    // L3a': weight-stationary batched SQNN forward (the molecule-farm
+    // serving kernel), measured with caller-owned scratch exactly as the
+    // chip drives it. Each measurement runs a whole SoA batch, so
+    // ns/inference = median / batch — recorded as notes for the §Perf
+    // iteration log.
+    let mut batch_stats = Vec::new();
+    let mut scratch = nvnmd::nn::sqnn::BatchScratch::default();
+    for batch in [8usize, 64] {
+        let mut xs = vec![Q13::ZERO; net.in_dim() * batch];
+        for (i, slot) in xs.iter_mut().enumerate() {
+            *slot = Q13::from_f64(0.55 + 0.01 * (i % 23) as f64);
+        }
+        let mut out = vec![Q13::ZERO; net.out_dim() * batch];
+        let st = b.measure(&format!("sqnn_forward_batch{batch}"), || {
+            net.forward_q13_batch_with(&xs, batch, &mut out, &mut scratch);
+            out[0].0
+        });
+        batch_stats.push((batch, st));
+    }
+    b.note("sqnn_scalar_ns_per_inference", format!("{:.1}", scalar.median_ns));
+    b.note("sqnn_scalar_into_ns_per_inference", format!("{:.1}", scalar_into.median_ns));
+    for (batch, st) in &batch_stats {
+        b.note(
+            &format!("sqnn_batch{batch}_ns_per_inference"),
+            format!("{:.1}", st.median_ns / *batch as f64),
+        );
+    }
+    if let Some((batch, st)) = batch_stats.last() {
+        let per_inf = st.median_ns / *batch as f64;
+        let vs_scalar = scalar.median_ns / per_inf;
+        let vs_into = scalar_into.median_ns / per_inf;
+        b.note(
+            "sqnn_batch_speedup_vs_scalar",
+            format!("batch{batch}: {vs_scalar:.2}x faster than the scalar path, per inference"),
+        );
+        // vs the allocation-free scalar: the batching gain proper, with
+        // the scalar wrapper's per-call Vec factored out.
+        b.note(
+            "sqnn_batch_speedup_vs_scalar_into",
+            format!("batch{batch}: {vs_into:.2}x faster than the alloc-free scalar path"),
+        );
+    }
 
     // L3b: chip inference with cycle/energy accounting.
     let mut chip = MlpChip::new(0, ChipConfig::default());

@@ -3,7 +3,8 @@ use nvnmd::benchkit::Bench;
 
 fn main() {
     let mut b = Bench::new("scaling_projection");
-    match nvnmd::exp::scaling::run() {
+    let quick = nvnmd::benchkit::quick_mode();
+    match nvnmd::exp::scaling::run(quick) {
         Ok(r) => println!("{}", r.render()),
         Err(e) => println!("scaling failed: {e:#}"),
     }

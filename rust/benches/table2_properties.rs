@@ -5,7 +5,7 @@ use nvnmd::exp::table2;
 
 fn main() {
     let mut b = Bench::new("table2_properties");
-    let quick = std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1");
+    let quick = nvnmd::benchkit::quick_mode();
     let cfg = table2::Config::with_quick(quick);
     let (res, wall) = b.measure_once("table2_four_methods", || table2::run(cfg));
     match res {

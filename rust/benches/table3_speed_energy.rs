@@ -3,7 +3,7 @@ use nvnmd::benchkit::Bench;
 
 fn main() {
     let mut b = Bench::new("table3_speed_energy");
-    let quick = std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1");
+    let quick = nvnmd::benchkit::quick_mode();
     let (res, wall) = b.measure_once("table3_all_methods", || nvnmd::exp::table3::run(quick));
     match res {
         Ok(r) => println!("{}", r.render()),

@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::fixedpoint::Q13;
 use crate::hw::power::{EnergyModel, OpCounts, ProcessNode, CHIP_POWER_W};
+use crate::nn::sqnn::BatchScratch;
 use crate::nn::{Mlp, Sqnn};
 
 /// Static configuration of the chip.
@@ -24,11 +25,21 @@ pub struct ChipConfig {
     pub node: ProcessNode,
     /// Die area (paper: 1.73 mm²) — reported, not derived.
     pub die_mm2: f64,
+    /// Parallel MLP lanes on the die — the §VI A₂ knob: transistor
+    /// density at advanced nodes buys replicated shift–accumulate
+    /// datapaths, so a batch of B inferences takes ⌈B/lanes⌉ sequential
+    /// waves instead of B. The taped-out 180 nm chip has one lane.
+    pub lanes: usize,
 }
 
 impl Default for ChipConfig {
     fn default() -> Self {
-        ChipConfig { clock_hz: crate::hw::timing::CLOCK_HZ, node: ProcessNode::N180, die_mm2: 1.73 }
+        ChipConfig {
+            clock_hz: crate::hw::timing::CLOCK_HZ,
+            node: ProcessNode::N180,
+            die_mm2: 1.73,
+            lanes: 1,
+        }
     }
 }
 
@@ -46,6 +57,9 @@ pub struct MlpChip {
     /// (the network is static after initialization — NvN).
     per_inf_ops: OpCounts,
     per_inf_cycles: u64,
+    /// Chip-owned batch-kernel scratch: steady-state
+    /// [`Self::infer_batch_into`] allocates nothing.
+    scratch: BatchScratch,
 }
 
 impl MlpChip {
@@ -59,6 +73,7 @@ impl MlpChip {
             ops: OpCounts::default(),
             per_inf_ops: OpCounts::default(),
             per_inf_cycles: 0,
+            scratch: BatchScratch::default(),
         }
     }
 
@@ -145,7 +160,8 @@ impl MlpChip {
         // network is static, §Perf).
         self.total_cycles += self.per_inf_cycles;
         self.inferences += 1;
-        self.ops.merge(&self.per_inf_ops.clone());
+        let per_inf = self.per_inf_ops;
+        self.ops.merge(&per_inf);
         Ok(out)
     }
 
@@ -164,7 +180,40 @@ impl MlpChip {
         net.forward_q13_into(features, out);
         self.total_cycles += self.per_inf_cycles;
         self.inferences += 1;
-        self.ops.merge(&self.per_inf_ops.clone());
+        let per_inf = self.per_inf_ops;
+        self.ops.merge(&per_inf);
+        Ok(())
+    }
+
+    /// Modelled latency of a batch of `batch` inferences under the lane
+    /// model: the lanes run in lock-step, so the batch drains in
+    /// ⌈batch/lanes⌉ sequential pipeline waves.
+    pub fn batch_latency_cycles(&self, batch: usize) -> u64 {
+        let lanes = self.cfg.lanes.max(1);
+        (batch.div_ceil(lanes)) as u64 * self.per_inf_cycles
+    }
+
+    /// Batched inference on an SoA batch (feature `i` of lane `b` at
+    /// `xs[i*batch + b]`, output `o` of lane `b` at `out[o*batch + b]`):
+    /// the weight-stationary kernel (`Sqnn::forward_q13_batch_with`,
+    /// bit-identical per lane to the scalar datapath) run against the
+    /// chip-owned scratch (allocation-free in steady state), plus the
+    /// lane-model cycle accounting and per-inference op/energy
+    /// accounting.
+    pub fn infer_batch_into(&mut self, xs: &[Q13], batch: usize, out: &mut [Q13]) -> Result<()> {
+        let net = self
+            .net
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("chip {} not programmed", self.id))?;
+        anyhow::ensure!(
+            xs.len() == net.in_dim() * batch && out.len() == net.out_dim() * batch,
+            "chip {}: batch io width mismatch (batch {batch})",
+            self.id
+        );
+        net.forward_q13_batch_with(xs, batch, out, &mut self.scratch);
+        self.total_cycles += self.batch_latency_cycles(batch);
+        self.inferences += batch as u64;
+        self.ops.merge(&self.per_inf_ops.scale(batch as u64));
         Ok(())
     }
 
@@ -241,6 +290,77 @@ mod tests {
             let b = net.forward_q13(&x);
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    fn batch_inference_matches_scalar_bit_exactly() {
+        let mut chip = water_like_chip();
+        let net = chip.network().unwrap().clone();
+        let mut rng = Pcg::new(17);
+        for batch in [1usize, 5, 32] {
+            let lanes: Vec<Vec<Q13>> = (0..batch)
+                .map(|_| (0..3).map(|_| Q13::from_f64(rng.range(-2.0, 2.0))).collect())
+                .collect();
+            let mut xs = vec![Q13::ZERO; 3 * batch];
+            for (b, lane) in lanes.iter().enumerate() {
+                for (i, &v) in lane.iter().enumerate() {
+                    xs[i * batch + b] = v;
+                }
+            }
+            let mut out = vec![Q13::ZERO; 2 * batch];
+            chip.infer_batch_into(&xs, batch, &mut out).unwrap();
+            for (b, lane) in lanes.iter().enumerate() {
+                let want = net.forward_q13(lane);
+                assert_eq!(out[b], want[0]);
+                assert_eq!(out[batch + b], want[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_accounting_matches_scalar_with_one_lane() {
+        // lanes = 1: a batch of B must cost exactly B scalar inferences
+        // in cycles, op counts, and inference count.
+        let mut a = water_like_chip();
+        let mut b = water_like_chip();
+        let x = [Q13::from_f64(0.9), Q13::from_f64(0.5), Q13::from_f64(1.1)];
+        let batch = 16usize;
+        let mut xs = vec![Q13::ZERO; 3 * batch];
+        for lane in 0..batch {
+            for i in 0..3 {
+                xs[i * batch + lane] = x[i];
+            }
+        }
+        let mut out = vec![Q13::ZERO; 2 * batch];
+        a.infer_batch_into(&xs, batch, &mut out).unwrap();
+        for _ in 0..batch {
+            b.infer(&x).unwrap();
+        }
+        assert_eq!(a.inferences, b.inferences);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.ops, b.ops);
+    }
+
+    #[test]
+    fn lane_model_compresses_batch_latency() {
+        let mut rng = Pcg::new(3);
+        let mut m = Mlp::init_random("w", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.7;
+            }
+        }
+        let mut chip = MlpChip::new(0, ChipConfig { lanes: 4, ..ChipConfig::default() });
+        chip.program(&m, 3);
+        let per = chip.latency_cycles();
+        // 10 inferences on 4 lanes: ceil(10/4) = 3 waves.
+        assert_eq!(chip.batch_latency_cycles(10), 3 * per);
+        assert_eq!(chip.batch_latency_cycles(1), per);
+        assert_eq!(chip.batch_latency_cycles(0), 0);
+        // one lane degenerates to the sequential model
+        let mut seq = MlpChip::new(1, ChipConfig::default());
+        seq.program(&m, 3);
+        assert_eq!(seq.batch_latency_cycles(10), 10 * per);
     }
 
     #[test]

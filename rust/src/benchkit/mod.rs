@@ -38,10 +38,17 @@ pub struct Bench {
     extra: Vec<(String, Value)>,
 }
 
+/// Quick mode for CI-style smoke runs (`NVNMD_BENCH_QUICK=1`): the one
+/// place the protocol is parsed — bench bodies that scale their own
+/// workloads (tick counts, molecule counts) must use this too, so they
+/// can never drift from the warmup/measure windows.
+pub fn quick_mode() -> bool {
+    std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1")
+}
+
 impl Bench {
     pub fn new(name: &str) -> Self {
-        // Honour quick mode for CI-style smoke runs: NVNMD_BENCH_QUICK=1.
-        let quick = std::env::var("NVNMD_BENCH_QUICK").ok().as_deref() == Some("1");
+        let quick = quick_mode();
         Bench {
             name: name.to_string(),
             warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(150) },

@@ -1,0 +1,508 @@
+//! The molecule farm — the batched, sharded serving path of the
+//! coordinator.
+//!
+//! Where [`super::WaterSystem`] reproduces the paper's single-molecule
+//! latency pipeline, [`WaterFarm`] turns the same devices into a
+//! throughput engine: N independent water molecules advance one MD step
+//! per *tick*, sharded over worker threads. Each shard owns its
+//! molecules' FPGA state, one batched MLP chip, and all the scratch the
+//! hot loop needs, and drives the paper's §IV-C workflow in batch form:
+//!
+//! 1. `fpga::extract_features_batch` — feature triples of every
+//!    hydrogen in the shard, scattered into the chip's SoA layout;
+//! 2. `MlpChip::infer_batch_into` — one weight-stationary batched
+//!    inference over all 2·N_shard hydrogen lanes, with the
+//!    `ChipConfig::lanes` intra-ASIC parallelism model (§VI A₂)
+//!    accounting ⌈B/lanes⌉ pipeline waves;
+//! 3. `fpga::integrate_batch` — force reconstruction, Newton's third
+//!    law, and integration per molecule.
+//!
+//! Shards are fully independent, so the inline and threaded backends
+//! are bit-identical by construction — the same guarantee the
+//! single-molecule coordinator makes, extended to the farm. The
+//! aggregated [`FarmLedger`] reports modelled hardware cycles (lane
+//! model included), op counts, and **host throughput in
+//! molecule-steps/second** — the first-class serving metric.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::asic::{ChipConfig, MlpChip};
+use crate::fixedpoint::Q13;
+use crate::fpga::{self, HFeatures, WaterFpga, ZERO_FRAME};
+use crate::hw::power::OpCounts;
+use crate::hw::timing::StepCycles;
+use crate::md::{initialize_velocities, System};
+use crate::nn::Mlp;
+use crate::potentials::WaterPes;
+use crate::util::rng::Pcg;
+use crate::util::Vec3;
+
+use super::pool::WorkerPool;
+use super::ParallelMode;
+
+/// Farm construction knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct FarmConfig {
+    /// Worker shards (clamped to the molecule count).
+    pub shards: usize,
+    /// Parallel MLP lanes per shard chip (see [`ChipConfig::lanes`]).
+    pub lanes: usize,
+    /// Shift terms per weight for quantization.
+    pub k: usize,
+    /// Integrator timestep (fs).
+    pub dt_fs: f64,
+    /// Shard execution backend.
+    pub mode: ParallelMode,
+}
+
+impl Default for FarmConfig {
+    fn default() -> Self {
+        FarmConfig { shards: 1, lanes: 1, k: 3, dt_fs: 0.25, mode: ParallelMode::Inline }
+    }
+}
+
+/// One shard: a slice of the farm's molecules, its batched chip, and
+/// the scratch buffers of the hot loop (owned here so a tick allocates
+/// nothing).
+struct FarmShard {
+    mols: Vec<WaterFpga>,
+    chip: MlpChip,
+    frames: Vec<HFeatures>,
+    feats: Vec<Q13>,
+    forces: Vec<Q13>,
+    /// Modelled hardware cycles of one tick of this shard.
+    tick_cycles: u64,
+    ticks: u64,
+    wall: Duration,
+}
+
+impl FarmShard {
+    fn new(
+        id: usize,
+        systems: &[System],
+        model: &Mlp,
+        force_shift: i32,
+        cfg: &FarmConfig,
+    ) -> Result<FarmShard> {
+        let mut chip = MlpChip::new(id, ChipConfig { lanes: cfg.lanes, ..ChipConfig::default() });
+        chip.program(model, cfg.k);
+        let mols: Vec<WaterFpga> = systems
+            .iter()
+            .map(|sys| {
+                let mut f = WaterFpga::new(sys, cfg.dt_fs);
+                super::program_water_fpga(&mut f, model, force_shift);
+                f
+            })
+            .collect();
+        let lanes = 2 * mols.len();
+        let tick_cycles = Self::tick_cycle_budget(mols.len(), &chip);
+        Ok(FarmShard {
+            mols,
+            chip,
+            frames: vec![ZERO_FRAME; lanes],
+            feats: vec![Q13::ZERO; 3 * lanes],
+            forces: vec![Q13::ZERO; 2 * lanes],
+            tick_cycles,
+            ticks: 0,
+            wall: Duration::ZERO,
+        })
+    }
+
+    /// Modelled cycles of one shard tick: the FPGA streams its molecules
+    /// through feature extraction and integration sequentially, shares
+    /// one transfer/control window per tick, and the chip's lane model
+    /// covers the batched MLP stage (⌈2·N/lanes⌉ pipeline waves).
+    fn tick_cycle_budget(n_mols: usize, chip: &MlpChip) -> u64 {
+        let b = StepCycles::water();
+        n_mols as u64 * (b.feature + b.integrate)
+            + b.to_chip
+            + b.from_chip
+            + b.control
+            + chip.batch_latency_cycles(2 * n_mols)
+    }
+
+    /// One MD step for every molecule in the shard.
+    fn tick(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let lanes = 2 * self.mols.len();
+        fpga::extract_features_batch(&mut self.mols, &mut self.frames, &mut self.feats);
+        self.chip.infer_batch_into(&self.feats, lanes, &mut self.forces)?;
+        fpga::integrate_batch(&mut self.mols, &self.frames, &self.forces);
+        self.ticks += 1;
+        self.wall += t0.elapsed();
+        Ok(())
+    }
+
+    fn positions(&self) -> Vec<Vec<Vec3>> {
+        self.mols.iter().map(|m| m.positions()).collect()
+    }
+}
+
+enum FarmBackend {
+    Inline(Vec<FarmShard>),
+    Threaded(WorkerPool<FarmShard>),
+}
+
+/// Aggregated accounting of a farm run.
+#[derive(Debug, Clone, Default)]
+pub struct FarmLedger {
+    /// Farm ticks completed (each advances every molecule one step).
+    pub ticks: u64,
+    pub n_molecules: usize,
+    /// Total molecule-steps: `ticks × n_molecules`.
+    pub molecule_steps: u64,
+    /// Modelled hardware cycles: Σ_shards ticks × shard tick budget
+    /// (shards run on parallel hardware, but the conservative ledger
+    /// sums them; see [`FarmLedger::hw_seconds_parallel`]).
+    pub modelled_cycles: u64,
+    /// Modelled cycles of the **slowest** shard (parallel-hardware view).
+    pub critical_path_cycles: u64,
+    pub chip_inferences: u64,
+    pub chip_ops: OpCounts,
+    pub fpga_ops: OpCounts,
+    /// Host wall-clock of the whole farm (tick loop, incl. transport).
+    pub host_wall: Duration,
+    /// Host wall-clock each shard spent inside its own tick body.
+    pub shard_walls: Vec<Duration>,
+}
+
+impl FarmLedger {
+    /// Modelled hardware seconds if the shards ran on one serial device.
+    pub fn hw_seconds(&self, clock_hz: f64) -> f64 {
+        self.modelled_cycles as f64 / clock_hz
+    }
+
+    /// Modelled hardware seconds with one device per shard (the farm's
+    /// deployment model): the critical-path shard bounds the tick.
+    pub fn hw_seconds_parallel(&self, clock_hz: f64) -> f64 {
+        self.critical_path_cycles as f64 / clock_hz
+    }
+
+    /// Modelled hardware throughput, molecule-steps per second, with
+    /// one device per shard.
+    pub fn modelled_steps_per_second(&self, clock_hz: f64) -> f64 {
+        let t = self.hw_seconds_parallel(clock_hz);
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.molecule_steps as f64 / t
+    }
+
+    /// Host (simulator) throughput, molecule-steps per second.
+    pub fn host_steps_per_second(&self) -> f64 {
+        let t = self.host_wall.as_secs_f64();
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.molecule_steps as f64 / t
+    }
+
+    /// The paper's S metric over the farm (s/step/atom, 3 atoms per
+    /// molecule, parallel-hardware view).
+    pub fn s_per_step_atom(&self, clock_hz: f64) -> f64 {
+        if self.molecule_steps == 0 {
+            return 0.0;
+        }
+        self.hw_seconds_parallel(clock_hz) / self.molecule_steps as f64 / 3.0
+    }
+}
+
+/// The batched multi-molecule serving system.
+pub struct WaterFarm {
+    backend: FarmBackend,
+    pub n_molecules: usize,
+    cfg: FarmConfig,
+    ticks: u64,
+    host_wall: Duration,
+}
+
+impl WaterFarm {
+    /// Build the farm: one initial [`System`] per molecule, partitioned
+    /// into contiguous shards (the partition depends only on counts, so
+    /// inline and threaded backends see identical shard contents).
+    pub fn new(model: &Mlp, systems: &[System], cfg: &FarmConfig) -> Result<WaterFarm> {
+        anyhow::ensure!(!systems.is_empty(), "farm needs at least one molecule");
+        let force_shift = super::validate_water_model(model)?;
+        anyhow::ensure!(cfg.shards >= 1, "farm needs at least one shard");
+        anyhow::ensure!(cfg.lanes >= 1, "chip needs at least one MLP lane");
+        let n = systems.len();
+        let n_shards = cfg.shards.min(n);
+        let base = n / n_shards;
+        let rem = n % n_shards;
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut start = 0usize;
+        for s in 0..n_shards {
+            let take = base + usize::from(s < rem);
+            let slice = &systems[start..start + take];
+            shards.push(FarmShard::new(s, slice, model, force_shift, cfg)?);
+            start += take;
+        }
+        debug_assert_eq!(start, n);
+        let backend = match cfg.mode {
+            ParallelMode::Inline => FarmBackend::Inline(shards),
+            ParallelMode::Threaded => {
+                FarmBackend::Threaded(WorkerPool::spawn("farm-shard", shards))
+            }
+        };
+        // Store the *effective* configuration (shards post-clamp), so
+        // `config()` agrees with what was actually built.
+        let cfg_eff = FarmConfig { shards: n_shards, ..*cfg };
+        Ok(WaterFarm {
+            backend,
+            n_molecules: n,
+            cfg: cfg_eff,
+            ticks: 0,
+            host_wall: Duration::ZERO,
+        })
+    }
+
+    /// One farm tick: every molecule advances one MD step.
+    pub fn tick(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        match &mut self.backend {
+            FarmBackend::Inline(shards) => {
+                for s in shards.iter_mut() {
+                    s.tick()?;
+                }
+            }
+            FarmBackend::Threaded(pool) => {
+                for r in pool.run_all(|_, s: &mut FarmShard| s.tick())? {
+                    r?;
+                }
+            }
+        }
+        self.ticks += 1;
+        self.host_wall += t0.elapsed();
+        Ok(())
+    }
+
+    /// Run `n` ticks.
+    pub fn run(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.tick()?;
+        }
+        Ok(())
+    }
+
+    /// Decoded positions of every molecule ([molecule][atom], atoms
+    /// ordered [O, H1, H2]), in the original `systems` order.
+    pub fn positions(&self) -> Result<Vec<Vec<Vec3>>> {
+        let per_shard: Vec<Vec<Vec<Vec3>>> = match &self.backend {
+            FarmBackend::Inline(shards) => shards.iter().map(|s| s.positions()).collect(),
+            FarmBackend::Threaded(pool) => pool.run_all(|_, s: &mut FarmShard| s.positions())?,
+        };
+        Ok(per_shard.into_iter().flatten().collect())
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// The farm's effective configuration: `shards` is the post-clamp
+    /// count actually built (≤ the requested count).
+    pub fn config(&self) -> FarmConfig {
+        self.cfg
+    }
+
+    /// Tear the farm down (joining shard threads) and aggregate the
+    /// ledger.
+    pub fn finish(self) -> Result<FarmLedger> {
+        let shards = match self.backend {
+            FarmBackend::Inline(shards) => shards,
+            FarmBackend::Threaded(pool) => pool.into_items(),
+        };
+        let mut ledger = FarmLedger {
+            ticks: self.ticks,
+            n_molecules: self.n_molecules,
+            molecule_steps: self.ticks * self.n_molecules as u64,
+            host_wall: self.host_wall,
+            ..FarmLedger::default()
+        };
+        for s in &shards {
+            debug_assert_eq!(s.ticks, self.ticks);
+            let shard_cycles = s.ticks * s.tick_cycles;
+            ledger.modelled_cycles += shard_cycles;
+            ledger.critical_path_cycles = ledger.critical_path_cycles.max(shard_cycles);
+            ledger.chip_inferences += s.chip.inferences;
+            ledger.chip_ops.merge(&s.chip.ops);
+            for m in &s.mols {
+                ledger.fpga_ops.merge(&m.ops);
+            }
+            ledger.shard_walls.push(s.wall);
+        }
+        Ok(ledger)
+    }
+}
+
+/// Convenience: `n` water molecules at the DFT-surrogate equilibrium
+/// with Maxwell–Boltzmann velocities, each from its own deterministic
+/// per-molecule stream of `seed` — the farm workload generator used by
+/// tests, benches, and the scaling experiment.
+pub fn random_water_systems(n: usize, t_k: f64, seed: u64) -> Vec<System> {
+    let pes = WaterPes::dft_surrogate();
+    (0..n)
+        .map(|i| {
+            let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
+            let stream = (i as u64)
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                .wrapping_add(0x2545_f491_4f6c_dd1d);
+            let mut rng = Pcg::new(seed ^ stream);
+            initialize_velocities(&mut sys, t_k, 6, &mut rng);
+            sys
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::WaterSystem;
+    use crate::hw::timing::CLOCK_HZ;
+    use crate::nn::Activation;
+
+    fn toy_model() -> Mlp {
+        let mut rng = Pcg::new(77);
+        let mut m = Mlp::init_random("toy-water", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.3;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn inline_and_threaded_farms_are_bit_identical() {
+        // The acceptance invariant: N = 64 molecules, 1000 ticks, inline
+        // vs threaded — and different shard counts — must produce
+        // bit-identical trajectories (molecules are independent and the
+        // partition only affects which thread owns them).
+        let m = toy_model();
+        let systems = random_water_systems(64, 150.0, 42);
+        let mut inline = WaterFarm::new(
+            &m,
+            &systems,
+            &FarmConfig { shards: 3, mode: ParallelMode::Inline, ..FarmConfig::default() },
+        )
+        .unwrap();
+        let mut threaded = WaterFarm::new(
+            &m,
+            &systems,
+            &FarmConfig { shards: 5, mode: ParallelMode::Threaded, ..FarmConfig::default() },
+        )
+        .unwrap();
+        inline.run(1000).unwrap();
+        threaded.run(1000).unwrap();
+        let pa = inline.positions().unwrap();
+        let pb = threaded.positions().unwrap();
+        assert_eq!(pa.len(), 64);
+        for (mol, (a, b)) in pa.iter().zip(&pb).enumerate() {
+            assert_eq!(a, b, "molecule {mol} diverged between backends");
+        }
+        let la = inline.finish().unwrap();
+        let lb = threaded.finish().unwrap();
+        assert_eq!(la.molecule_steps, 64_000);
+        assert_eq!(la.molecule_steps, lb.molecule_steps);
+        assert_eq!(la.chip_inferences, lb.chip_inferences);
+        assert_eq!(la.chip_ops, lb.chip_ops);
+        assert_eq!(la.fpga_ops, lb.fpga_ops);
+        assert_eq!(la.chip_inferences, 2 * 64_000);
+    }
+
+    #[test]
+    fn single_molecule_farm_matches_water_system() {
+        // The farm's datapath is the coordinator's datapath: one
+        // molecule served by the batch kernel must track the
+        // two-chip-in-parallel WaterSystem bit for bit.
+        let m = toy_model();
+        let systems = random_water_systems(1, 50.0, 7);
+        let mut ws = WaterSystem::new(&m, 3, &systems[0], 0.25, ParallelMode::Inline).unwrap();
+        let mut farm = WaterFarm::new(&m, &systems, &FarmConfig::default()).unwrap();
+        for _ in 0..500 {
+            ws.step().unwrap();
+            farm.tick().unwrap();
+        }
+        assert_eq!(farm.positions().unwrap()[0], ws.positions());
+    }
+
+    #[test]
+    fn ledger_accounts_lane_model() {
+        let m = toy_model();
+        let systems = random_water_systems(8, 100.0, 9);
+        let run_with_lanes = |lanes: usize| -> FarmLedger {
+            let mut farm = WaterFarm::new(
+                &m,
+                &systems,
+                &FarmConfig { shards: 2, lanes, ..FarmConfig::default() },
+            )
+            .unwrap();
+            farm.run(10).unwrap();
+            farm.finish().unwrap()
+        };
+        let serial = run_with_lanes(1);
+        let wide = run_with_lanes(8);
+        assert_eq!(serial.molecule_steps, 80);
+        assert_eq!(serial.chip_inferences, 160);
+        // More lanes ⇒ strictly fewer modelled cycles (the MLP stage
+        // compresses from 8 waves to 1 per shard tick).
+        assert!(
+            wide.modelled_cycles < serial.modelled_cycles,
+            "lanes=8 cycles {} !< lanes=1 cycles {}",
+            wide.modelled_cycles,
+            serial.modelled_cycles
+        );
+        // Identical physics regardless of the lane model.
+        assert_eq!(serial.chip_ops, wide.chip_ops);
+        assert_eq!(serial.fpga_ops, wide.fpga_ops);
+        // Cycle ledger is exactly ticks × Σ shard budgets (deterministic).
+        assert_eq!(serial.modelled_cycles % serial.ticks, 0);
+        assert!(serial.critical_path_cycles <= serial.modelled_cycles);
+        assert!(serial.host_steps_per_second() > 0.0);
+        let (fast, slow) = (
+            wide.modelled_steps_per_second(CLOCK_HZ),
+            serial.modelled_steps_per_second(CLOCK_HZ),
+        );
+        assert!(fast > slow, "lane model throughput {fast} !> {slow}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let m = toy_model();
+        assert!(WaterFarm::new(&m, &[], &FarmConfig::default()).is_err());
+        let systems = random_water_systems(2, 50.0, 1);
+        assert!(WaterFarm::new(
+            &m,
+            &systems,
+            &FarmConfig { shards: 0, ..FarmConfig::default() }
+        )
+        .is_err());
+        assert!(WaterFarm::new(
+            &m,
+            &systems,
+            &FarmConfig { lanes: 0, ..FarmConfig::default() }
+        )
+        .is_err());
+        let mut bad = toy_model();
+        bad.output_scale = 3.0; // not a power of two
+        assert!(WaterFarm::new(&bad, &systems, &FarmConfig::default()).is_err());
+    }
+
+    #[test]
+    fn shards_clamped_to_molecule_count() {
+        let m = toy_model();
+        let systems = random_water_systems(3, 50.0, 2);
+        let mut farm = WaterFarm::new(
+            &m,
+            &systems,
+            &FarmConfig { shards: 16, mode: ParallelMode::Threaded, ..FarmConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(farm.config().shards, 3, "config() must report the effective shard count");
+        farm.run(5).unwrap();
+        let l = farm.finish().unwrap();
+        assert_eq!(l.shard_walls.len(), 3);
+        assert_eq!(l.molecule_steps, 15);
+    }
+}

@@ -18,8 +18,11 @@
 //! modelled hardware time is identical in both: the step's cycle cost
 //! takes max(chip latencies), not their sum.
 
+pub mod farm;
 pub mod pool;
 pub mod vn;
+
+pub use farm::{FarmConfig, FarmLedger, WaterFarm};
 
 use anyhow::Result;
 
@@ -93,14 +96,49 @@ pub struct WaterSystem {
     /// protocol the float drivers use). See DESIGN.md §Numerics.
     pub thermostat: Option<(f64, f64)>,
     masses: Vec<f64>,
+    /// Accumulated wall-clock of the sampled steps (see `step`).
+    wall_sampled: std::time::Duration,
+    /// How many steps were actually timed.
+    wall_samples: u64,
 }
 
 /// Steps between control-plane thermostat interventions.
 pub const THERMOSTAT_STRIDE: u64 = 16;
 
+/// Steps between host wall-clock samples (§Perf: an `Instant` pair per
+/// step costs ~12% of the inline path). Deliberately coprime to
+/// [`THERMOSTAT_STRIDE`]: a power-of-two stride would phase-lock the
+/// samples against the thermostat ticks and the extrapolation would
+/// never see (or always see) their cost; 63 = 3²·7 walks every residue
+/// mod 16, so thermostat steps are sampled in proportion.
+const WALL_SAMPLE_STRIDE: u64 = 63;
+
 enum ChipBackend {
     Threaded(ChipPool),
     Inline(Vec<MlpChip>),
+}
+
+/// Validate a water model for the shift datapath (3→…→2 shape,
+/// power-of-two output scale) and return the force shift the FPGA must
+/// undo at reconstruction. Shared by [`WaterSystem`] and the farm so
+/// the two serving paths can never diverge on the protocol.
+fn validate_water_model(model: &Mlp) -> Result<i32> {
+    anyhow::ensure!(model.in_dim() == 3 && model.out_dim() == 2, "water model must be 3→…→2");
+    // The model predicts F / output_scale; the FPGA undoes that with a
+    // free power-of-two shift at reconstruction.
+    anyhow::ensure!(
+        model.output_scale > 0.0 && model.output_scale.log2().fract() == 0.0,
+        "output_scale {} must be a power of two for the shift datapath",
+        model.output_scale
+    );
+    Ok(model.output_scale.log2() as i32)
+}
+
+/// Program an FPGA's force-rescale and feature-conditioning stages from
+/// a validated water model (the host-CPU initialization path, Fig. 1).
+fn program_water_fpga(fpga: &mut WaterFpga, model: &Mlp, force_shift: i32) {
+    fpga.force_shift = force_shift;
+    fpga.program_feature_conditioning(&model.feature_center, &model.feature_scale);
 }
 
 impl WaterSystem {
@@ -108,7 +146,7 @@ impl WaterSystem {
     /// (Fig. 1) — load the trained model into both chips' distributed
     /// memories and the initial state into the FPGA.
     pub fn new(model: &Mlp, k: usize, sys: &System, dt_fs: f64, mode: ParallelMode) -> Result<Self> {
-        anyhow::ensure!(model.in_dim() == 3 && model.out_dim() == 2, "water model must be 3→…→2");
+        let force_shift = validate_water_model(model)?;
         let mut chips: Vec<MlpChip> = (0..2)
             .map(|id| {
                 let mut c = MlpChip::new(id, ChipConfig::default());
@@ -118,15 +156,7 @@ impl WaterSystem {
             .collect();
         let chip_latency = chips[0].latency_cycles();
         let mut fpga = WaterFpga::new(sys, dt_fs);
-        // The model predicts F / output_scale; the FPGA undoes that with
-        // a free power-of-two shift at reconstruction.
-        anyhow::ensure!(
-            model.output_scale > 0.0 && model.output_scale.log2().fract() == 0.0,
-            "output_scale {} must be a power of two for the shift datapath",
-            model.output_scale
-        );
-        fpga.force_shift = model.output_scale.log2() as i32;
-        fpga.program_feature_conditioning(&model.feature_center, &model.feature_scale);
+        program_water_fpga(&mut fpga, model, force_shift);
         let mut cycles = StepCycles::water();
         // The MLP stage of the budget is the *actual* programmed-network
         // latency (the nominal budget assumes the water arch).
@@ -144,6 +174,8 @@ impl WaterSystem {
             chip_latency,
             thermostat: None,
             masses: sys.masses.clone(),
+            wall_sampled: std::time::Duration::ZERO,
+            wall_samples: 0,
         })
     }
 
@@ -171,10 +203,17 @@ impl WaterSystem {
 
     /// One MD step through the full heterogeneous pipeline.
     ///
-    /// §Perf: host wall-clock is sampled every 64 steps (an `Instant`
-    /// pair per step cost ~12% of the inline path).
+    /// §Perf: host wall-clock is sampled every [`WALL_SAMPLE_STRIDE`]
+    /// steps (a stride coprime to the thermostat's, so control-plane
+    /// cost is sampled in proportion) and `Ledger::host_wall`
+    /// extrapolated by the **actual** sample coverage
+    /// (`samples / md_steps`), not a fixed ×stride — the old
+    /// extrapolation over-counted runs whose length is not a stride
+    /// multiple. Sampling starts at the *second* step so the cold
+    /// first step (cache warmup, lazy page faults) never skews the
+    /// estimate; runs shorter than two steps report zero host_wall.
     pub fn step(&mut self) -> Result<()> {
-        let sample_wall = self.ledger.md_steps % 64 == 0;
+        let sample_wall = self.ledger.md_steps % WALL_SAMPLE_STRIDE == 1;
         let t0 = if sample_wall { Some(std::time::Instant::now()) } else { None };
         // (1) FPGA feature extraction.
         let frames = self.fpga.extract_features();
@@ -208,10 +247,21 @@ impl WaterSystem {
             self.thermostat_tick();
         }
         if let Some(t0) = t0 {
-            // extrapolate the sampled step over the 64-step stride
-            self.ledger.host_wall += t0.elapsed() * 64;
+            self.wall_sampled += t0.elapsed();
+            self.wall_samples += 1;
+            self.refresh_host_wall();
         }
         Ok(())
+    }
+
+    /// Extrapolate `host_wall` from the sampled steps by their actual
+    /// coverage of the run so far.
+    fn refresh_host_wall(&mut self) {
+        if self.wall_samples > 0 {
+            self.ledger.host_wall = self
+                .wall_sampled
+                .mul_f64(self.ledger.md_steps as f64 / self.wall_samples as f64);
+        }
     }
 
     /// Run `n` steps, invoking `tap` with the decoded positions every
@@ -233,6 +283,7 @@ impl WaterSystem {
     /// Collect final counters (draining worker-thread stats into the
     /// ledger) and return the ledger.
     pub fn finish(mut self) -> Result<Ledger> {
+        self.refresh_host_wall();
         let (infs, _cycles, ops) = match &mut self.chips {
             ChipBackend::Threaded(pool) => pool.stats()?,
             ChipBackend::Inline(chips) => {
@@ -348,6 +399,39 @@ mod tests {
             assert!(p.norm() <= 32.0 * 1.8, "position escaped: {p:?}");
             assert!(p.norm().is_finite());
         }
+    }
+
+    #[test]
+    fn host_wall_scales_by_actual_coverage() {
+        // Regression for the sampling bias: host_wall must extrapolate
+        // by the real samples-to-steps ratio, not a fixed ×stride (the
+        // old version reported Σsampled × 64 regardless of run length).
+        // The extrapolation arithmetic is pinned deterministically
+        // (wall-clock magnitudes are too jittery for CI assertions):
+        // mean(sampled) × md_steps, exactly.
+        let m = toy_model();
+        let sys = initial_system(11);
+        let mut s = WaterSystem::new(&m, 3, &sys, 0.25, ParallelMode::Inline).unwrap();
+        s.ledger.md_steps = 100;
+        s.wall_sampled = std::time::Duration::from_micros(10);
+        s.wall_samples = 2;
+        s.refresh_host_wall();
+        // 10 µs over 2 samples ⇒ 5 µs/step × 100 steps.
+        assert_eq!(s.ledger.host_wall, std::time::Duration::from_micros(500));
+
+        // End-to-end: a real 100-step run samples the warm steps
+        // (indices 1 and 64) and must report a nonzero wall…
+        let run = |steps: usize| -> std::time::Duration {
+            let sys = initial_system(11);
+            let mut s = WaterSystem::new(&m, 3, &sys, 0.25, ParallelMode::Inline).unwrap();
+            for _ in 0..steps {
+                s.step().unwrap();
+            }
+            s.finish().unwrap().host_wall
+        };
+        assert!(run(100) > std::time::Duration::ZERO);
+        // …while a 1-step run has no warm sample and must not invent one.
+        assert_eq!(run(1), std::time::Duration::ZERO);
     }
 
     #[test]

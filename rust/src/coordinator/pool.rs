@@ -118,6 +118,82 @@ impl ChipPool {
     }
 }
 
+/// A job shipped to a pool worker: runs against the worker's owned item.
+type PoolJob<T> = Box<dyn FnOnce(&mut T) + Send>;
+
+/// Generic worker pool: each thread owns one `T` (a chip simulator, a
+/// molecule-farm shard) and runs shipped closures against it. This is
+/// the transport layer shared by the farm's threaded shard backend; the
+/// original [`ChipPool`] predates it and keeps its specialized protocol.
+pub struct WorkerPool<T: Send + 'static> {
+    txs: Vec<mpsc::Sender<PoolJob<T>>>,
+    handles: Vec<JoinHandle<T>>,
+}
+
+impl<T: Send + 'static> WorkerPool<T> {
+    /// Spawn one worker thread per item; threads are named `{name}-{i}`.
+    pub fn spawn(name: &str, items: Vec<T>) -> WorkerPool<T> {
+        let mut txs = Vec::with_capacity(items.len());
+        let mut handles = Vec::with_capacity(items.len());
+        for (i, mut item) in items.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<PoolJob<T>>();
+            let handle = std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job(&mut item);
+                    }
+                    item
+                })
+                .expect("spawn pool worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { txs, handles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.txs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.txs.is_empty()
+    }
+
+    /// Run `f` on every worker's item **concurrently** and collect the
+    /// results in worker order (a full barrier: returns once every
+    /// worker has replied).
+    pub fn run_all<R, F>(&self, f: F) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut T) -> R + Clone + Send + 'static,
+    {
+        let mut replies = Vec::with_capacity(self.txs.len());
+        for (i, tx) in self.txs.iter().enumerate() {
+            let (rtx, rrx) = mpsc::channel::<R>();
+            let g = f.clone();
+            tx.send(Box::new(move |item: &mut T| {
+                let _ = rtx.send(g(i, item));
+            }))
+            .map_err(|_| anyhow::anyhow!("pool worker {i} hung up"))?;
+            replies.push(rrx);
+        }
+        replies
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| rx.recv().with_context(|| format!("pool worker {i} reply")))
+            .collect()
+    }
+
+    /// Shut the pool down and hand the items back in worker order.
+    pub fn into_items(self) -> Vec<T> {
+        drop(self.txs); // closes every channel; workers fall out of recv()
+        self.handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    }
+}
+
 impl Drop for ChipPool {
     fn drop(&mut self) {
         for w in &self.workers {
@@ -207,5 +283,32 @@ mod tests {
     fn drop_joins_workers() {
         let (pool, _m) = pool_of(4);
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn worker_pool_runs_concurrently_and_returns_items_in_order() {
+        let pool = WorkerPool::spawn("ctr", vec![0u64, 100, 200, 300]);
+        assert_eq!(pool.len(), 4);
+        for _ in 0..5 {
+            let sums = pool
+                .run_all(|i, c| {
+                    *c += 1;
+                    (i, *c)
+                })
+                .unwrap();
+            for (slot, &(i, _)) in sums.iter().enumerate() {
+                assert_eq!(slot, i, "results must come back in worker order");
+            }
+        }
+        let items = pool.into_items();
+        assert_eq!(items, vec![5, 105, 205, 305]);
+    }
+
+    #[test]
+    fn worker_pool_empty_is_fine() {
+        let pool: WorkerPool<u8> = WorkerPool::spawn("none", Vec::new());
+        assert!(pool.is_empty());
+        assert!(pool.run_all(|_, _: &mut u8| ()).unwrap().is_empty());
+        assert!(pool.into_items().is_empty());
     }
 }

@@ -98,6 +98,28 @@ pub fn load_model(stem: &str) -> Result<Mlp> {
     })
 }
 
+/// The water model of the §Perf benches: the trained artifact when
+/// present, else a deterministic random fallback. Shared by
+/// `hotpath_micro` and `farm_throughput` so their scalar-vs-farm
+/// numbers always measure the same network.
+pub fn water_model_or_fallback() -> Mlp {
+    load_model("water_qnn_k3").unwrap_or_else(|_| {
+        let mut rng = crate::util::rng::Pcg::new(7);
+        let mut m = Mlp::init_random(
+            "fallback",
+            &[3, 3, 3, 2],
+            crate::nn::Activation::Phi,
+            &mut rng,
+        );
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.4;
+            }
+        }
+        m
+    })
+}
+
 /// Load a dataset artifact by name.
 pub fn load_dataset(name: &str) -> Result<crate::datasets::Dataset> {
     let path = crate::artifact_path(&format!("datasets/{name}.json"));
@@ -122,7 +144,7 @@ pub fn all_experiments(quick: bool) -> Vec<(&'static str, Box<dyn FnOnce() -> Re
         ("table2", Box::new(move || table2::run(table2::Config::with_quick(quick)))),
         ("fig10", Box::new(move || fig10::run(quick))),
         ("table3", Box::new(move || table3::run(quick))),
-        ("scaling", Box::new(scaling::run)),
+        ("scaling", Box::new(move || scaling::run(quick))),
     ]
 }
 

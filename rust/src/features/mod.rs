@@ -86,30 +86,54 @@ pub fn local_descriptor(pos: &[Vec3], atom: usize, nb_idx: &[usize]) -> Vec<f64>
     out
 }
 
+/// Keep the `n_nb` nearest candidate indices by `dist` (ties broken by
+/// index, the documented ordering). Each distance is evaluated exactly
+/// once up front; an O(N) `select_nth_unstable_by` partition then keeps
+/// only the winners and a final sort orders just that prefix — the full
+/// O(N log N) sort (with per-comparison distance recomputation) the
+/// previous implementation paid is gone for bulk systems where
+/// `n_nb ≪ N`.
+fn nearest_by(
+    candidates: impl Iterator<Item = usize>,
+    n_nb: usize,
+    dist: impl Fn(usize) -> f64,
+) -> Vec<usize> {
+    if n_nb == 0 {
+        return Vec::new();
+    }
+    let mut keyed: Vec<(f64, usize)> = candidates.map(|j| (dist(j), j)).collect();
+    let cmp = |a: &(f64, usize), b: &(f64, usize)| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+    };
+    if keyed.len() > n_nb {
+        // total order (index tie-break), so the first n_nb slots are
+        // exactly the n_nb smallest after selecting the (n_nb−1)-th
+        keyed.select_nth_unstable_by(n_nb - 1, cmp);
+        keyed.truncate(n_nb);
+    }
+    keyed.sort_by(cmp);
+    keyed.into_iter().map(|(_, j)| j).collect()
+}
+
 /// Neighbor ordering for an atom: indices of the `n_nb` nearest other
 /// atoms in the reference geometry (stable across configurations).
 pub fn reference_neighbors(ref_coords: &[Vec3], atom: usize, n_nb: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..ref_coords.len()).filter(|&j| j != atom).collect();
-    idx.sort_by(|&a, &b| {
-        let da = (ref_coords[a] - ref_coords[atom]).norm();
-        let db = (ref_coords[b] - ref_coords[atom]).norm();
-        da.partial_cmp(&db).unwrap().then(a.cmp(&b))
-    });
-    idx.truncate(n_nb);
-    idx
+    nearest_by((0..ref_coords.len()).filter(|&j| j != atom), n_nb, |j| {
+        (ref_coords[j] - ref_coords[atom]).norm()
+    })
 }
 
 /// Periodic variant for bulk systems: minimum-image distances in a cubic
 /// box; also returns the same fixed neighbor list semantics.
-pub fn reference_neighbors_pbc(ref_coords: &[Vec3], atom: usize, n_nb: usize, box_l: f64) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..ref_coords.len()).filter(|&j| j != atom).collect();
-    idx.sort_by(|&a, &b| {
-        let da = (ref_coords[a] - ref_coords[atom]).min_image(box_l).norm();
-        let db = (ref_coords[b] - ref_coords[atom]).min_image(box_l).norm();
-        da.partial_cmp(&db).unwrap().then(a.cmp(&b))
-    });
-    idx.truncate(n_nb);
-    idx
+pub fn reference_neighbors_pbc(
+    ref_coords: &[Vec3],
+    atom: usize,
+    n_nb: usize,
+    box_l: f64,
+) -> Vec<usize> {
+    nearest_by((0..ref_coords.len()).filter(|&j| j != atom), n_nb, |j| {
+        (ref_coords[j] - ref_coords[atom]).min_image(box_l).norm()
+    })
 }
 
 /// Periodic descriptor (minimum-image displacements).
@@ -239,6 +263,47 @@ mod tests {
         assert_eq!(nb, vec![1, 3, 2]);
         let nb2 = reference_neighbors(&coords, 0, 2);
         assert_eq!(nb2, vec![1, 3]);
+    }
+
+    #[test]
+    fn selection_matches_full_sort_including_ties() {
+        // The O(N) selection path must reproduce the old full-sort
+        // semantics exactly: distance order, ties broken by index. A
+        // lattice gives many exactly-equal distances.
+        let mut coords = Vec::new();
+        for x in 0..4 {
+            for y in 0..4 {
+                for z in 0..4 {
+                    coords.push(Vec3::new(x as f64, y as f64, z as f64));
+                }
+            }
+        }
+        let mut rng = Pcg::new(31);
+        for _ in 0..20 {
+            let atom = rng.below(coords.len() as u32) as usize;
+            for n_nb in [0usize, 1, 5, 12, 63, 100] {
+                let got = reference_neighbors(&coords, atom, n_nb);
+                // reference: the previous full-sort implementation
+                let mut want: Vec<usize> = (0..coords.len()).filter(|&j| j != atom).collect();
+                want.sort_by(|&a, &b| {
+                    let da = (coords[a] - coords[atom]).norm();
+                    let db = (coords[b] - coords[atom]).norm();
+                    da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+                });
+                want.truncate(n_nb);
+                assert_eq!(got, want, "atom {atom} n_nb {n_nb}");
+                let got_pbc = reference_neighbors_pbc(&coords, atom, n_nb, 4.0);
+                let mut want_pbc: Vec<usize> =
+                    (0..coords.len()).filter(|&j| j != atom).collect();
+                want_pbc.sort_by(|&a, &b| {
+                    let da = (coords[a] - coords[atom]).min_image(4.0).norm();
+                    let db = (coords[b] - coords[atom]).min_image(4.0).norm();
+                    da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+                });
+                want_pbc.truncate(n_nb);
+                assert_eq!(got_pbc, want_pbc, "pbc atom {atom} n_nb {n_nb}");
+            }
+        }
     }
 
     #[test]

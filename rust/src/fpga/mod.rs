@@ -317,6 +317,56 @@ impl WaterFpga {
     }
 }
 
+/// A zeroed feature frame — scratch-buffer fill value for the batched
+/// entry points below.
+pub const ZERO_FRAME: HFeatures =
+    HFeatures { d: [Q13::ZERO; 3], u_ho: [Q13::ZERO; 3], u_hh: [Q13::ZERO; 3] };
+
+/// Batched feature extraction over a shard of molecules: runs module (i)
+/// on every molecule and scatters the Q13 feature triples into the SoA
+/// layout the batched chip kernel consumes — feature `i` of lane `b` at
+/// `feats[i * lanes + b]`, where lane `b = 2·mol + h` (two hydrogens per
+/// molecule) and `lanes = 2 · mols.len()`.
+///
+/// `frames` (2 per molecule) and `feats` (3 per lane) are shard-owned
+/// scratch; this function allocates nothing. Per molecule it is the
+/// exact single-molecule `extract_features` datapath, so the farm
+/// inherits the coordinator's bit-identity guarantee.
+pub fn extract_features_batch(mols: &mut [WaterFpga], frames: &mut [HFeatures], feats: &mut [Q13]) {
+    let lanes = 2 * mols.len();
+    assert_eq!(frames.len(), lanes, "frames scratch: 2 per molecule");
+    assert_eq!(feats.len(), 3 * lanes, "feature scratch: 3 per lane");
+    for (m, fpga) in mols.iter_mut().enumerate() {
+        let fr = fpga.extract_features();
+        for (hi, f) in fr.iter().enumerate() {
+            let b = 2 * m + hi;
+            frames[b] = *f;
+            for (i, &d) in f.d.iter().enumerate() {
+                feats[i * lanes + b] = d;
+            }
+        }
+    }
+}
+
+/// Batched force reconstruction + N3L + integration over a shard:
+/// consumes the chips' SoA outputs (output `o` of lane `b` at
+/// `c[o * lanes + b]`, lanes as in [`extract_features_batch`]) and
+/// advances every molecule one step via the exact single-molecule
+/// `integrate` datapath. Allocation-free.
+pub fn integrate_batch(mols: &mut [WaterFpga], frames: &[HFeatures], c: &[Q13]) {
+    let lanes = 2 * mols.len();
+    assert_eq!(frames.len(), lanes, "frames scratch: 2 per molecule");
+    assert_eq!(c.len(), 2 * lanes, "force input: 2 per lane");
+    for (m, fpga) in mols.iter_mut().enumerate() {
+        let fr = [frames[2 * m], frames[2 * m + 1]];
+        let cc = [
+            [c[2 * m], c[lanes + 2 * m]],
+            [c[2 * m + 1], c[lanes + 2 * m + 1]],
+        ];
+        fpga.integrate(&fr, cc);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,6 +519,70 @@ mod tests {
         };
         let drift = (com1 - com0).norm();
         assert!(drift < 0.05, "COM drifted {drift} Å over 5 ps — momentum pumping");
+    }
+
+    #[test]
+    fn batched_entry_points_match_single_molecule_path() {
+        // Two molecules, perturbed differently, stepped 50 times through
+        // the batched entry points vs the per-molecule calls: positions
+        // and op counters must be bit-identical.
+        let mut sys_a = eq_system();
+        sys_a.pos[1] += Vec3::new(0.02, -0.01, 0.015);
+        sys_a.vel[1] = Vec3::new(0.004, 0.002, -0.003);
+        let mut sys_b = eq_system();
+        sys_b.pos[2] += Vec3::new(-0.015, 0.01, 0.02);
+        sys_b.vel[2] = Vec3::new(-0.003, 0.001, 0.002);
+
+        let mut batch = vec![WaterFpga::new(&sys_a, 0.25), WaterFpga::new(&sys_b, 0.25)];
+        let mut solo = vec![WaterFpga::new(&sys_a, 0.25), WaterFpga::new(&sys_b, 0.25)];
+
+        let lanes = 2 * batch.len();
+        let mut frames = vec![ZERO_FRAME; lanes];
+        let mut feats = vec![Q13::ZERO; 3 * lanes];
+        // fixed chip outputs per lane (the integration datapath is what
+        // is under test, not the network)
+        let mut c = vec![Q13::ZERO; 2 * lanes];
+        for (b, v) in c.iter_mut().enumerate() {
+            *v = Q13(((b as i32) - 3) * 7);
+        }
+        for _ in 0..50 {
+            extract_features_batch(&mut batch, &mut frames, &mut feats);
+            integrate_batch(&mut batch, &frames, &c);
+            for (m, fpga) in solo.iter_mut().enumerate() {
+                let fr = fpga.extract_features();
+                // lane b = 2m+hi; outputs o at c[o*lanes + b]
+                let cc = [
+                    [c[2 * m], c[lanes + 2 * m]],
+                    [c[2 * m + 1], c[lanes + 2 * m + 1]],
+                ];
+                fpga.integrate(&fr, cc);
+            }
+        }
+        for (a, b) in batch.iter().zip(&solo) {
+            assert_eq!(a.positions(), b.positions());
+            assert_eq!(a.velocities(), b.velocities());
+            assert_eq!(a.ops, b.ops);
+            assert_eq!(a.steps, b.steps);
+        }
+    }
+
+    #[test]
+    fn batched_features_scatter_soa_layout() {
+        let sys = eq_system();
+        let mut batch = vec![WaterFpga::new(&sys, 0.25)];
+        let mut reference = WaterFpga::new(&sys, 0.25);
+        let lanes = 2;
+        let mut frames = vec![ZERO_FRAME; lanes];
+        let mut feats = vec![Q13::ZERO; 3 * lanes];
+        extract_features_batch(&mut batch, &mut frames, &mut feats);
+        let want = reference.extract_features();
+        for hi in 0..2 {
+            for i in 0..3 {
+                assert_eq!(feats[i * lanes + hi], want[hi].d[i], "h{hi} feature {i}");
+            }
+            assert_eq!(frames[hi].u_ho, want[hi].u_ho);
+            assert_eq!(frames[hi].u_hh, want[hi].u_hh);
+        }
     }
 
     #[test]

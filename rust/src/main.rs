@@ -95,7 +95,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "table2" => exp::table2::run(exp::table2::Config::with_quick(quick)).map(print_report),
         "fig10" => exp::fig10::run(quick).map(print_report),
         "table3" => exp::table3::run(quick).map(print_report),
-        "scaling" => exp::scaling::run().map(print_report),
+        "scaling" => exp::scaling::run(quick).map(print_report),
         "all" => {
             for (name, f) in exp::all_experiments(quick) {
                 println!("\n########## {name} ##########");

@@ -40,6 +40,18 @@ struct PackedLayer {
 /// Maximum layer width of the packed fast path (stack scratch size).
 pub const MAX_WIDTH: usize = 128;
 
+/// Reusable scratch of the batch kernel: the two ping-pong activation
+/// planes and the lane accumulators. Own one per serving shard/chip and
+/// pass it to [`Sqnn::forward_q13_batch_with`] so steady-state batched
+/// inference allocates nothing (buffers grow to the high-water
+/// `max_layer_width × batch` and are reused).
+#[derive(Debug, Clone, Default)]
+pub struct BatchScratch {
+    plane_a: Vec<i32>,
+    plane_b: Vec<i32>,
+    acc: Vec<i64>,
+}
+
 /// The shift-based quantized MLP.
 #[derive(Debug, Clone)]
 pub struct Sqnn {
@@ -202,6 +214,135 @@ impl Sqnn {
         for (slot, &r) in out.iter_mut().zip(res) {
             *slot = Q13(r);
         }
+    }
+
+    /// Weight-stationary batched forward on an SoA batch (the
+    /// molecule-farm serving kernel).
+    ///
+    /// Layout: feature `i` of lane `b` lives at `xs[i * batch + b]`, and
+    /// output `o` of lane `b` at `out[o * batch + b]`. Each packed weight
+    /// (sign / n_terms / exps) is decoded **once** and its
+    /// shift–accumulate applied to all `batch` lane accumulators before
+    /// the walk moves to the next weight — the scalar path re-walks the
+    /// packed arrays per sample, so the decode cost here is amortized
+    /// over the whole batch (§Perf: the A₂ intra-ASIC-parallelism story
+    /// needs many inferences per cycle to be cheap on the simulator too).
+    ///
+    /// Bit-identical per lane to [`Self::forward_q13_reference`]: the
+    /// lane accumulators are exact i64 (no mid-sum saturation), so the
+    /// reassociated accumulation order cannot change any bit.
+    ///
+    /// This convenience form allocates a fresh [`BatchScratch`] per
+    /// call; the serving hot path ([`crate::asic::MlpChip`], and through
+    /// it the molecule farm) holds its own scratch and calls
+    /// [`Self::forward_q13_batch_with`] so a steady-state tick allocates
+    /// nothing.
+    pub fn forward_q13_batch_into(&self, xs: &[Q13], batch: usize, out: &mut [Q13]) {
+        let mut scratch = BatchScratch::default();
+        self.forward_q13_batch_with(xs, batch, out, &mut scratch);
+    }
+
+    /// The batch kernel proper: same datapath as
+    /// [`Self::forward_q13_batch_into`], with caller-owned scratch.
+    pub fn forward_q13_batch_with(
+        &self,
+        xs: &[Q13],
+        batch: usize,
+        out: &mut [Q13],
+        scratch: &mut BatchScratch,
+    ) {
+        assert_eq!(xs.len(), self.in_dim() * batch, "SoA input length");
+        assert_eq!(out.len(), self.out_dim() * batch, "SoA output length");
+        if batch == 0 {
+            return;
+        }
+        let maxw = self
+            .packed
+            .iter()
+            .map(|l| l.out_dim.max(l.in_dim))
+            .max()
+            .unwrap_or(0);
+        let BatchScratch { plane_a, plane_b, acc } = scratch;
+        plane_a.resize(maxw * batch, 0);
+        plane_b.resize(maxw * batch, 0);
+        acc.resize(batch, 0);
+        let (buf_a, buf_b) = (plane_a, plane_b);
+        for (slot, v) in buf_a.iter_mut().zip(xs) {
+            *slot = v.0;
+        }
+        let mut cur_is_a = true;
+        let mut width = self.in_dim();
+        for layer in &self.packed {
+            let (cur, next) = if cur_is_a {
+                (&buf_a[..], &mut buf_b[..])
+            } else {
+                (&buf_b[..], &mut buf_a[..])
+            };
+            let mut term_idx = 0usize;
+            let mut w_idx = 0usize;
+            for j in 0..layer.out_dim {
+                let bias = layer.bias[j] as i64;
+                for a in acc.iter_mut() {
+                    *a = bias;
+                }
+                for i in 0..layer.in_dim {
+                    let sign = layer.sign[w_idx];
+                    let nt = layer.n_terms[w_idx] as usize;
+                    w_idx += 1;
+                    if sign == 0 {
+                        debug_assert_eq!(nt, 0);
+                        continue;
+                    }
+                    let exps = &layer.exps[term_idx..term_idx + nt];
+                    term_idx += nt;
+                    let row = &cur[i * batch..(i + 1) * batch];
+                    if sign < 0 {
+                        for (a, &xr) in acc.iter_mut().zip(row) {
+                            let xv = xr as i64;
+                            let mut wsum: i64 = 0;
+                            for &e in exps {
+                                wsum += if e >= 0 { xv << e } else { xv >> (-e) };
+                            }
+                            *a -= wsum;
+                        }
+                    } else {
+                        for (a, &xr) in acc.iter_mut().zip(row) {
+                            let xv = xr as i64;
+                            let mut wsum: i64 = 0;
+                            for &e in exps {
+                                wsum += if e >= 0 { xv << e } else { xv >> (-e) };
+                            }
+                            *a += wsum;
+                        }
+                    }
+                }
+                let dst = &mut next[j * batch..(j + 1) * batch];
+                for (slot, &a) in dst.iter_mut().zip(acc.iter()) {
+                    let mut v = Q13(a.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32);
+                    if layer.activation {
+                        v = match self.activation {
+                            Activation::Phi => phi_q13(v),
+                            Activation::Tanh => Q13::from_f64(v.to_f64().tanh()),
+                        };
+                    }
+                    *slot = v.0;
+                }
+            }
+            width = layer.out_dim;
+            cur_is_a = !cur_is_a;
+        }
+        let res = if cur_is_a { &buf_a[..] } else { &buf_b[..] };
+        for (slot, &r) in out.iter_mut().zip(&res[..width * batch]) {
+            *slot = Q13(r);
+        }
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`Self::forward_q13_batch_into`] (same SoA layout).
+    pub fn forward_q13_batch(&self, xs: &[Q13], batch: usize) -> Vec<Q13> {
+        let mut out = vec![Q13::ZERO; self.out_dim() * batch];
+        self.forward_q13_batch_into(xs, batch, &mut out);
+        out
     }
 
     /// Reference (unpacked) forward — used by tests to pin the packed
@@ -389,6 +530,67 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn batch_kernel_is_bit_identical_to_reference_per_lane() {
+        // The farm-serving invariant: the weight-stationary batch kernel
+        // must reproduce the reference datapath bit for bit on every
+        // lane, across architectures, K, and batch sizes — including
+        // saturating inputs (lane 0 of every batch is forced to the Q13
+        // rails).
+        let mut rng = Pcg::new(2024);
+        for arch in [&[3usize, 3, 3, 2][..], &[8, 16, 16, 3], &[64, 64, 64, 3]] {
+            let mut m = Mlp::init_random("b", arch, Activation::Phi, &mut rng);
+            for l in &mut m.layers {
+                for w in &mut l.w {
+                    *w *= 0.6;
+                }
+            }
+            for k in [1usize, 3, 5] {
+                let s = Sqnn::from_mlp(&m, k);
+                for batch in [1usize, 7, 8, 64] {
+                    // AoS lanes, then transpose to the kernel's SoA.
+                    let lanes: Vec<Vec<Q13>> = (0..batch)
+                        .map(|b| {
+                            (0..arch[0])
+                                .map(|_| {
+                                    if b == 0 {
+                                        if rng.below(2) == 0 { Q13::MAX } else { Q13::MIN }
+                                    } else {
+                                        Q13::from_f64(rng.range(-6.0, 6.0))
+                                    }
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    let mut xs = vec![Q13::ZERO; arch[0] * batch];
+                    for (b, lane) in lanes.iter().enumerate() {
+                        for (i, &v) in lane.iter().enumerate() {
+                            xs[i * batch + b] = v;
+                        }
+                    }
+                    let out = s.forward_q13_batch(&xs, batch);
+                    for (b, lane) in lanes.iter().enumerate() {
+                        let want = s.forward_q13_reference(lane);
+                        for (o, &w) in want.iter().enumerate() {
+                            assert_eq!(
+                                out[o * batch + b], w,
+                                "arch={arch:?} k={k} batch={batch} lane={b} out={o}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_kernel_handles_empty_batch() {
+        let s = Sqnn::from_mlp(&trained_like_model(), 3);
+        let mut out: Vec<Q13> = Vec::new();
+        s.forward_q13_batch_into(&[], 0, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]
