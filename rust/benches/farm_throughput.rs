@@ -1,13 +1,17 @@
 //! Farm serving-path throughput: molecule-steps/second of the batched,
 //! sharded [`WaterFarm`] — the measured counterpart of the §VI A₂
-//! (intra-ASIC parallelization) projection. Emits host throughput for
-//! inline vs threaded shard backends and the modelled lane-model
-//! throughput sweep into the benchkit JSON, so `BENCH_*.json` tracks a
-//! throughput trajectory PR over PR.
+//! (intra-ASIC parallelization) projection — plus the mixed-species
+//! [`MoleculeFarm`] (water + ethanol-class molecules, each shard
+//! programmed with its own species model) reporting molecule-steps/s
+//! **per species**. Emits host throughput for inline vs threaded shard
+//! backends and the modelled lane-model throughput sweep into the
+//! benchkit JSON, so `BENCH_*.json` tracks a throughput trajectory PR
+//! over PR.
 
 use nvnmd::benchkit::Bench;
-use nvnmd::coordinator::farm::{random_water_systems, FarmConfig, WaterFarm};
+use nvnmd::coordinator::farm::{random_water_systems, FarmConfig, MoleculeFarm, WaterFarm};
 use nvnmd::coordinator::ParallelMode;
+use nvnmd::exp::scaling::mixed_farm_groups;
 use nvnmd::exp::water_model_or_fallback as model;
 use nvnmd::hw::timing::CLOCK_HZ;
 use nvnmd::util::json::{self, Value};
@@ -86,7 +90,47 @@ fn main() {
         ]));
     }
 
+    // Mixed-species serving tier: two species with distinct per-shard
+    // models (water 3→…→2, ethanol 32→…→3) in one farm — host
+    // molecule-steps/s per species, inline and threaded. The farm shape
+    // is the shared `exp::scaling::mixed_farm_groups` definition, so
+    // this bench and the scaling report measure the same tier.
+    let mixed_ticks = if quick { 50 } else { 500 };
+    let mut mixed_rows: Vec<Value> = Vec::new();
+    for (label, mode) in [("inline", ParallelMode::Inline), ("threaded", ParallelMode::Threaded)] {
+        let groups = mixed_farm_groups(48, 16, 2024, 4048).expect("mixed groups");
+        let mut farm = MoleculeFarm::new(groups, 1, mode).expect("farm construction");
+        b.measure_once(&format!("mixed_farm_{label}_x{mixed_ticks}"), || {
+            farm.run(mixed_ticks).expect("farm run");
+        });
+        let ledger = farm.finish().expect("farm finish");
+        let farm_elapsed = ledger.host_wall.as_secs_f64();
+        for sp in &ledger.species {
+            // Two rates per species: achieved rate over the farm's
+            // elapsed wall (species share the run), and the backend-
+            // independent per-shard-second serving cost.
+            let elapsed_rate =
+                if farm_elapsed > 0.0 { sp.molecule_steps as f64 / farm_elapsed } else { 0.0 };
+            let shard_rate = sp.steps_per_shard_second();
+            b.note(
+                &format!("mixed_{label}_{}_molecule_steps_per_sec", sp.name),
+                format!("{elapsed_rate:.0}"),
+            );
+            mixed_rows.push(json::obj(vec![
+                ("backend", json::s(label)),
+                ("species", json::s(&sp.name)),
+                ("n_molecules", json::num(sp.n_molecules as f64)),
+                ("n_atoms", json::num(sp.n_atoms as f64)),
+                ("ticks", json::num(mixed_ticks as f64)),
+                ("molecule_steps_per_sec", json::num(elapsed_rate)),
+                ("molecule_steps_per_shard_sec", json::num(shard_rate)),
+                ("chip_inferences", json::num(sp.chip_inferences as f64)),
+            ]));
+        }
+    }
+
     b.attach("farm", Value::Arr(rows));
     b.attach("lane_sweep", Value::Arr(lane_rows));
+    b.attach("mixed_species", Value::Arr(mixed_rows));
     b.finish();
 }

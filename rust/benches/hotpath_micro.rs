@@ -108,6 +108,32 @@ fn main() {
         fpga.steps
     });
 
+    // L3c': generic-molecule serving path — SoA descriptor extraction +
+    // conditioning and the per-step fixed-point integration for an
+    // ethanol-class molecule (9 atoms, 4·n_nb = 32 features/lane).
+    {
+        use nvnmd::fpga::{FeatureConditioner, MoleculeFpga};
+        let mol = nvnmd::potentials::ff::ethanol();
+        let n_nb = 8usize;
+        let gsys = nvnmd::md::System::new(mol.coords.clone(), mol.masses());
+        let nb: Vec<Vec<usize>> = (0..gsys.len())
+            .map(|i| nvnmd::features::reference_neighbors(&mol.coords, i, n_nb))
+            .collect();
+        let cond = FeatureConditioner::new(4 * n_nb, &[], &[]).unwrap();
+        let mut gfpga = MoleculeFpga::new(&gsys, nb, cond, 0.25).unwrap();
+        let lanes = gfpga.n_atoms();
+        let mut gfeats = vec![Q13::ZERO; 4 * n_nb * lanes];
+        b.measure("molecule_fpga_extract_soa_9atom", || {
+            gfpga.extract_features_soa(&mut gfeats, lanes, 0);
+            gfeats[0].0
+        });
+        let gc = vec![Q13(7); 3 * lanes];
+        b.measure("molecule_fpga_integrate_soa_9atom", || {
+            gfpga.integrate_soa(&gc, lanes, 0);
+            gfpga.steps
+        });
+    }
+
     // L3d: full coordinator step, inline vs threaded.
     let mut inline = WaterSystem::new(&m, 3, &initial(), 0.25, ParallelMode::Inline).unwrap();
     b.measure("coordinator_step_inline", || {

@@ -342,6 +342,29 @@ mod tests {
     }
 
     #[test]
+    fn batch_zero_is_a_noop() {
+        // Farm edge case: an empty shard tick must be accepted and must
+        // not move any counter (no inferences, no cycles, no ops, no
+        // scratch garbage on later calls).
+        let mut chip = water_like_chip();
+        let mut out: Vec<Q13> = Vec::new();
+        chip.infer_batch_into(&[], 0, &mut out).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(chip.inferences, 0);
+        assert_eq!(chip.total_cycles, 0);
+        assert_eq!(chip.ops, crate::hw::power::OpCounts::default());
+        // and a real batch afterwards still works
+        let net = chip.network().unwrap().clone();
+        let mut xs = vec![Q13::ZERO; 3];
+        xs[0] = Q13::from_f64(0.8);
+        let mut y = vec![Q13::ZERO; 2];
+        chip.infer_batch_into(&xs, 1, &mut y).unwrap();
+        let want = net.forward_q13(&[xs[0], xs[1], xs[2]]);
+        assert_eq!(y, want);
+        assert_eq!(chip.inferences, 1);
+    }
+
+    #[test]
     fn lane_model_compresses_batch_latency() {
         let mut rng = Pcg::new(3);
         let mut m = Mlp::init_random("w", &[3, 3, 3, 2], Activation::Phi, &mut rng);

@@ -1,36 +1,50 @@
-//! The molecule farm — the batched, sharded serving path of the
-//! coordinator.
+//! The molecule farm — the batched, sharded, **multi-species** serving
+//! path of the coordinator.
 //!
 //! Where [`super::WaterSystem`] reproduces the paper's single-molecule
-//! latency pipeline, [`WaterFarm`] turns the same devices into a
-//! throughput engine: N independent water molecules advance one MD step
-//! per *tick*, sharded over worker threads. Each shard owns its
-//! molecules' FPGA state, one batched MLP chip, and all the scratch the
-//! hot loop needs, and drives the paper's §IV-C workflow in batch form:
+//! latency pipeline, [`MoleculeFarm`] turns the same devices into a
+//! throughput engine for the whole Table-I mix: N independent molecules
+//! advance one MD step per *tick*, sharded over worker threads. The
+//! farm is parameterized over the [`ServedMolecule`] trait (extract →
+//! batched infer → integrate), and molecules are grouped into
+//! [`SpeciesGroup`]s: every shard programs its **own** `nn::Sqnn` from
+//! its species' model, so per-species models coexist in one farm and
+//! request batches route to the shard holding their model — the
+//! serving-tier shape of heterogeneous ML-force-field traffic.
 //!
-//! 1. `fpga::extract_features_batch` — feature triples of every
-//!    hydrogen in the shard, scattered into the chip's SoA layout;
+//! Each shard owns its molecules' FPGA state, one batched MLP chip
+//! programmed with the species model, and all the scratch the hot loop
+//! needs, and drives the paper's §IV-C workflow in batch form:
+//!
+//! 1. extract — every molecule scatters its conditioned Q13 features
+//!    into the shard's SoA block (water: `fpga::WaterFpga` hydrogen
+//!    triples; generic molecules: the `fpga::MoleculeFpga` 4·n_nb
+//!    descriptor path);
 //! 2. `MlpChip::infer_batch_into` — one weight-stationary batched
-//!    inference over all 2·N_shard hydrogen lanes, with the
-//!    `ChipConfig::lanes` intra-ASIC parallelism model (§VI A₂)
-//!    accounting ⌈B/lanes⌉ pipeline waves;
-//! 3. `fpga::integrate_batch` — force reconstruction, Newton's third
-//!    law, and integration per molecule.
+//!    inference over all shard lanes, with the `ChipConfig::lanes`
+//!    intra-ASIC parallelism model (§VI A₂) accounting ⌈B/lanes⌉
+//!    pipeline waves;
+//! 3. integrate — force reconstruction (+ Newton's third law where the
+//!    species needs it) and integration per molecule.
 //!
 //! Shards are fully independent, so the inline and threaded backends
 //! are bit-identical by construction — the same guarantee the
 //! single-molecule coordinator makes, extended to the farm. The
 //! aggregated [`FarmLedger`] reports modelled hardware cycles (lane
 //! model included), op counts, and **host throughput in
-//! molecule-steps/second** — the first-class serving metric.
+//! molecule-steps/second**, farm-wide and per species.
+//!
+//! [`WaterFarm`] is the water instantiation of the generic farm and
+//! keeps the pre-refactor behavior bit for bit.
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::asic::{ChipConfig, MlpChip};
+use crate::features;
 use crate::fixedpoint::Q13;
-use crate::fpga::{self, HFeatures, WaterFpga, ZERO_FRAME};
+use crate::fpga::{FeatureConditioner, HFeatures, MoleculeFpga, WaterFpga, ZERO_FRAME};
 use crate::hw::power::OpCounts;
 use crate::hw::timing::StepCycles;
 use crate::md::{initialize_velocities, System};
@@ -63,15 +77,237 @@ impl Default for FarmConfig {
     }
 }
 
-/// One shard: a slice of the farm's molecules, its batched chip, and
-/// the scratch buffers of the hot loop (owned here so a tick allocates
-/// nothing).
+/// One served molecule: how a species plugs its FPGA datapath into the
+/// farm's extract → batched-infer → integrate tick. Implementations own
+/// all per-molecule state (including whatever the integrate stage needs
+/// from extraction, e.g. the water bond frames), so a tick allocates
+/// nothing.
+pub trait ServedMolecule: Send {
+    /// Chip lanes (inferences) this molecule occupies per tick.
+    fn lanes(&self) -> usize;
+    /// Atom count (serving-metric denominator).
+    fn n_atoms(&self) -> usize;
+    /// Modelled FPGA cycles (feature + integration stages) of one step
+    /// of this molecule; the shared per-tick transfer/control windows
+    /// and the chip lane model are accounted by the shard.
+    fn fpga_cycles_per_tick(&self) -> u64;
+    /// Scatter the conditioned Q13 features into the shard's SoA block:
+    /// feature `i` of the molecule's local lane `l` belongs at
+    /// `feats[i * batch + lane0 + l]`.
+    fn extract(&mut self, feats: &mut [Q13], batch: usize, lane0: usize);
+    /// Consume the chip's SoA outputs for this molecule's lanes (output
+    /// `o` of local lane `l` at `outs[o * batch + lane0 + l]`) and
+    /// advance one MD step.
+    fn integrate(&mut self, outs: &[Q13], batch: usize, lane0: usize);
+    /// Decoded positions (analysis tap).
+    fn positions(&self) -> Vec<Vec3>;
+    /// FPGA op counters (energy model).
+    fn ops(&self) -> OpCounts;
+    /// Steps integrated so far.
+    fn steps(&self) -> u64;
+}
+
+/// The water species: one [`WaterFpga`] per molecule, two hydrogen
+/// lanes, local-frame force reconstruction + Newton's third law — the
+/// paper's §IV-C datapath, bit-identical to the pre-refactor farm.
+struct WaterServed {
+    fpga: WaterFpga,
+    /// Bond frames of the last extraction (consumed by integrate).
+    frames: [HFeatures; 2],
+}
+
+impl ServedMolecule for WaterServed {
+    fn lanes(&self) -> usize {
+        2
+    }
+    fn n_atoms(&self) -> usize {
+        3
+    }
+    fn fpga_cycles_per_tick(&self) -> u64 {
+        let b = StepCycles::water();
+        b.feature + b.integrate
+    }
+    fn extract(&mut self, feats: &mut [Q13], batch: usize, lane0: usize) {
+        let fr = self.fpga.extract_features();
+        for (hi, f) in fr.iter().enumerate() {
+            for (i, &d) in f.d.iter().enumerate() {
+                feats[i * batch + lane0 + hi] = d;
+            }
+        }
+        self.frames = fr;
+    }
+    fn integrate(&mut self, outs: &[Q13], batch: usize, lane0: usize) {
+        let c = [
+            [outs[lane0], outs[batch + lane0]],
+            [outs[lane0 + 1], outs[batch + lane0 + 1]],
+        ];
+        self.fpga.integrate(&self.frames, c);
+    }
+    fn positions(&self) -> Vec<Vec3> {
+        self.fpga.positions()
+    }
+    fn ops(&self) -> OpCounts {
+        self.fpga.ops
+    }
+    fn steps(&self) -> u64 {
+        self.fpga.steps
+    }
+}
+
+/// A generic Table-I molecule: one [`MoleculeFpga`] per molecule, one
+/// chip lane per atom over the 4·n_nb `local_descriptor` path, the chip
+/// predicting Cartesian forces directly.
+struct GenericServed {
+    fpga: MoleculeFpga,
+}
+
+impl ServedMolecule for GenericServed {
+    fn lanes(&self) -> usize {
+        self.fpga.n_atoms()
+    }
+    fn n_atoms(&self) -> usize {
+        self.fpga.n_atoms()
+    }
+    fn fpga_cycles_per_tick(&self) -> u64 {
+        self.fpga.cycles_per_step()
+    }
+    fn extract(&mut self, feats: &mut [Q13], batch: usize, lane0: usize) {
+        self.fpga.extract_features_soa(feats, batch, lane0);
+    }
+    fn integrate(&mut self, outs: &[Q13], batch: usize, lane0: usize) {
+        self.fpga.integrate_soa(outs, batch, lane0);
+    }
+    fn positions(&self) -> Vec<Vec3> {
+        self.fpga.positions()
+    }
+    fn ops(&self) -> OpCounts {
+        self.fpga.ops
+    }
+    fn steps(&self) -> u64 {
+        self.fpga.steps
+    }
+}
+
+/// One species' slice of the farm: its model (each shard programs its
+/// own `Sqnn` from it), quantization K, requested shard count, and the
+/// served molecules.
+pub struct SpeciesGroup {
+    name: String,
+    model: Mlp,
+    k: usize,
+    shards: usize,
+    mols: Vec<Box<dyn ServedMolecule>>,
+}
+
+impl SpeciesGroup {
+    /// Assemble a species group from pre-built served molecules. The
+    /// `model`/`k` pair is what every shard of this species programs
+    /// into its chip; `mols` must already be programmed consistently
+    /// with it (use [`water_group`] / [`generic_group`] unless you are
+    /// plugging in a custom [`ServedMolecule`]).
+    pub fn new(
+        name: &str,
+        model: Mlp,
+        k: usize,
+        shards: usize,
+        mols: Vec<Box<dyn ServedMolecule>>,
+    ) -> Result<SpeciesGroup> {
+        anyhow::ensure!(!mols.is_empty(), "species {name:?} needs at least one molecule");
+        anyhow::ensure!(shards >= 1, "species {name:?} needs at least one shard");
+        Ok(SpeciesGroup { name: name.to_string(), model, k, shards, mols })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+    pub fn n_molecules(&self) -> usize {
+        self.mols.len()
+    }
+}
+
+/// Build the water species group (the Table-I water instantiation).
+pub fn water_group(
+    model: &Mlp,
+    systems: &[System],
+    k: usize,
+    shards: usize,
+    dt_fs: f64,
+) -> Result<SpeciesGroup> {
+    let force_shift = super::validate_water_model(model)?;
+    let mols = systems
+        .iter()
+        .map(|sys| {
+            let mut f = WaterFpga::new(sys, dt_fs);
+            super::program_water_fpga(&mut f, model, force_shift)?;
+            Ok(Box::new(WaterServed { fpga: f, frames: [ZERO_FRAME; 2] })
+                as Box<dyn ServedMolecule>)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    SpeciesGroup::new("water", model.clone(), k, shards, mols)
+}
+
+/// Build a generic-molecule species group over the 4·n_nb descriptor
+/// path: neighbor ordering fixed by `ref_coords` (reference topology),
+/// feature conditioning and force rescale programmed from the model —
+/// the host-CPU initialization path generalized beyond water.
+#[allow(clippy::too_many_arguments)] // flat one-call init API, mirrors water_group + topology
+pub fn generic_group(
+    name: &str,
+    model: &Mlp,
+    ref_coords: &[Vec3],
+    systems: &[System],
+    n_nb: usize,
+    k: usize,
+    shards: usize,
+    dt_fs: f64,
+) -> Result<SpeciesGroup> {
+    let n = ref_coords.len();
+    anyhow::ensure!(
+        n_nb >= 1 && n_nb < n,
+        "species {name:?}: n_nb = {n_nb} needs 1 ≤ n_nb < {n} atoms"
+    );
+    anyhow::ensure!(
+        model.in_dim() == 4 * n_nb && model.out_dim() == 3,
+        "species {name:?}: model must be {}→…→3 for n_nb = {n_nb} (got {}→…→{})",
+        4 * n_nb,
+        model.in_dim(),
+        model.out_dim()
+    );
+    let force_shift = model.force_shift()?;
+    let nb: Vec<Vec<usize>> = (0..n)
+        .map(|i| features::reference_neighbors(ref_coords, i, n_nb))
+        .collect();
+    let cond = FeatureConditioner::new(4 * n_nb, &model.feature_center, &model.feature_scale)?;
+    let mols = systems
+        .iter()
+        .map(|sys| {
+            anyhow::ensure!(
+                sys.len() == n,
+                "species {name:?}: system has {} atoms, reference {n}",
+                sys.len()
+            );
+            let mut f = MoleculeFpga::new(sys, nb.clone(), cond.clone(), dt_fs)?;
+            f.force_shift = force_shift;
+            Ok(Box::new(GenericServed { fpga: f }) as Box<dyn ServedMolecule>)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    SpeciesGroup::new(name, model.clone(), k, shards, mols)
+}
+
+/// One shard: a slice of one species' molecules, its batched chip
+/// (programmed with that species' own `Sqnn`), and the scratch buffers
+/// of the hot loop (owned here so a tick allocates nothing).
 struct FarmShard {
-    mols: Vec<WaterFpga>,
+    /// Index into the farm's species table.
+    species: usize,
+    mols: Vec<Box<dyn ServedMolecule>>,
+    /// First lane of each molecule in the shard's SoA batch.
+    lane0: Vec<usize>,
+    /// Total chip lanes (Σ molecule lanes).
+    batch: usize,
     chip: MlpChip,
-    frames: Vec<HFeatures>,
     feats: Vec<Q13>,
-    forces: Vec<Q13>,
+    outs: Vec<Q13>,
     /// Modelled hardware cycles of one tick of this shard.
     tick_cycles: u64,
     ticks: u64,
@@ -81,29 +317,29 @@ struct FarmShard {
 impl FarmShard {
     fn new(
         id: usize,
-        systems: &[System],
+        species: usize,
+        mols: Vec<Box<dyn ServedMolecule>>,
         model: &Mlp,
-        force_shift: i32,
-        cfg: &FarmConfig,
+        k: usize,
+        lanes: usize,
     ) -> Result<FarmShard> {
-        let mut chip = MlpChip::new(id, ChipConfig { lanes: cfg.lanes, ..ChipConfig::default() });
-        chip.program(model, cfg.k);
-        let mols: Vec<WaterFpga> = systems
-            .iter()
-            .map(|sys| {
-                let mut f = WaterFpga::new(sys, cfg.dt_fs);
-                super::program_water_fpga(&mut f, model, force_shift);
-                f
-            })
-            .collect();
-        let lanes = 2 * mols.len();
-        let tick_cycles = Self::tick_cycle_budget(mols.len(), &chip);
+        let mut chip = MlpChip::new(id, ChipConfig { lanes, ..ChipConfig::default() });
+        chip.program(model, k);
+        let mut lane0 = Vec::with_capacity(mols.len());
+        let mut batch = 0usize;
+        for m in &mols {
+            lane0.push(batch);
+            batch += m.lanes();
+        }
+        let tick_cycles = Self::tick_cycle_budget(&mols, &chip, batch);
         Ok(FarmShard {
+            species,
+            lane0,
+            batch,
+            feats: vec![Q13::ZERO; model.in_dim() * batch],
+            outs: vec![Q13::ZERO; model.out_dim() * batch],
             mols,
             chip,
-            frames: vec![ZERO_FRAME; lanes],
-            feats: vec![Q13::ZERO; 3 * lanes],
-            forces: vec![Q13::ZERO; 2 * lanes],
             tick_cycles,
             ticks: 0,
             wall: Duration::ZERO,
@@ -113,23 +349,26 @@ impl FarmShard {
     /// Modelled cycles of one shard tick: the FPGA streams its molecules
     /// through feature extraction and integration sequentially, shares
     /// one transfer/control window per tick, and the chip's lane model
-    /// covers the batched MLP stage (⌈2·N/lanes⌉ pipeline waves).
-    fn tick_cycle_budget(n_mols: usize, chip: &MlpChip) -> u64 {
+    /// covers the batched MLP stage (⌈batch/lanes⌉ pipeline waves).
+    fn tick_cycle_budget(mols: &[Box<dyn ServedMolecule>], chip: &MlpChip, batch: usize) -> u64 {
         let b = StepCycles::water();
-        n_mols as u64 * (b.feature + b.integrate)
+        mols.iter().map(|m| m.fpga_cycles_per_tick()).sum::<u64>()
             + b.to_chip
             + b.from_chip
             + b.control
-            + chip.batch_latency_cycles(2 * n_mols)
+            + chip.batch_latency_cycles(batch)
     }
 
     /// One MD step for every molecule in the shard.
     fn tick(&mut self) -> Result<()> {
         let t0 = Instant::now();
-        let lanes = 2 * self.mols.len();
-        fpga::extract_features_batch(&mut self.mols, &mut self.frames, &mut self.feats);
-        self.chip.infer_batch_into(&self.feats, lanes, &mut self.forces)?;
-        fpga::integrate_batch(&mut self.mols, &self.frames, &self.forces);
+        for (m, mol) in self.mols.iter_mut().enumerate() {
+            mol.extract(&mut self.feats, self.batch, self.lane0[m]);
+        }
+        self.chip.infer_batch_into(&self.feats, self.batch, &mut self.outs)?;
+        for (m, mol) in self.mols.iter_mut().enumerate() {
+            mol.integrate(&self.outs, self.batch, self.lane0[m]);
+        }
         self.ticks += 1;
         self.wall += t0.elapsed();
         Ok(())
@@ -143,6 +382,41 @@ impl FarmShard {
 enum FarmBackend {
     Inline(Vec<FarmShard>),
     Threaded(WorkerPool<FarmShard>),
+}
+
+/// Per-species slice of the aggregated ledger.
+#[derive(Debug, Clone, Default)]
+pub struct SpeciesLedger {
+    pub name: String,
+    pub n_molecules: usize,
+    /// Total atoms across the species' molecules.
+    pub n_atoms: usize,
+    /// Molecule-steps of this species: `ticks × n_molecules`.
+    pub molecule_steps: u64,
+    pub chip_inferences: u64,
+    /// Host wall-clock each of the species' shards spent in its tick
+    /// body.
+    pub shard_walls: Vec<Duration>,
+}
+
+impl SpeciesLedger {
+    /// Host molecule-steps per **shard-second** of this species: steps
+    /// divided by the summed wall-clock its shards spent inside their
+    /// tick bodies. Unlike an elapsed-time rate this is backend-
+    /// independent — inline shards run sequentially and threaded shards
+    /// concurrently, but the CPU-time a species consumes per molecule-
+    /// step is the same either way — so inline and threaded rows are
+    /// directly comparable: it is the per-worker serving cost. (For an
+    /// elapsed-time rate, divide the species' steps by the whole farm's
+    /// [`FarmLedger::host_wall`].)
+    pub fn steps_per_shard_second(&self) -> f64 {
+        let t: Duration = self.shard_walls.iter().sum();
+        let t = t.as_secs_f64();
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.molecule_steps as f64 / t
+    }
 }
 
 /// Aggregated accounting of a farm run.
@@ -166,6 +440,8 @@ pub struct FarmLedger {
     pub host_wall: Duration,
     /// Host wall-clock each shard spent inside its own tick body.
     pub shard_walls: Vec<Duration>,
+    /// Per-species breakdown, in species order (the serving-mix view).
+    pub species: Vec<SpeciesLedger>,
 }
 
 impl FarmLedger {
@@ -199,66 +475,83 @@ impl FarmLedger {
         self.molecule_steps as f64 / t
     }
 
-    /// The paper's S metric over the farm (s/step/atom, 3 atoms per
-    /// molecule, parallel-hardware view).
+    /// The paper's S metric over the farm (s/step/atom,
+    /// parallel-hardware view), using the real atom count of the
+    /// species mix (3 per molecule for a water-only farm, as before).
     pub fn s_per_step_atom(&self, clock_hz: f64) -> f64 {
-        if self.molecule_steps == 0 {
+        let atoms_per_tick: u64 = self.species.iter().map(|s| s.n_atoms as u64).sum();
+        let atom_steps = self.ticks * atoms_per_tick;
+        if atom_steps == 0 {
             return 0.0;
         }
-        self.hw_seconds_parallel(clock_hz) / self.molecule_steps as f64 / 3.0
+        self.hw_seconds_parallel(clock_hz) / atom_steps as f64
     }
 }
 
-/// The batched multi-molecule serving system.
-pub struct WaterFarm {
+/// Species bookkeeping of a farm.
+struct SpeciesMeta {
+    name: String,
+    n_molecules: usize,
+    n_atoms: usize,
+}
+
+/// The batched multi-molecule, multi-species serving system.
+pub struct MoleculeFarm {
     backend: FarmBackend,
-    pub n_molecules: usize,
-    cfg: FarmConfig,
+    species: Vec<SpeciesMeta>,
+    n_molecules: usize,
+    n_shards: usize,
     ticks: u64,
     host_wall: Duration,
 }
 
-impl WaterFarm {
-    /// Build the farm: one initial [`System`] per molecule, partitioned
-    /// into contiguous shards (the partition depends only on counts, so
-    /// inline and threaded backends see identical shard contents).
-    pub fn new(model: &Mlp, systems: &[System], cfg: &FarmConfig) -> Result<WaterFarm> {
-        anyhow::ensure!(!systems.is_empty(), "farm needs at least one molecule");
-        let force_shift = super::validate_water_model(model)?;
-        anyhow::ensure!(cfg.shards >= 1, "farm needs at least one shard");
-        anyhow::ensure!(cfg.lanes >= 1, "chip needs at least one MLP lane");
-        let n = systems.len();
-        let n_shards = cfg.shards.min(n);
-        let base = n / n_shards;
-        let rem = n % n_shards;
-        let mut shards = Vec::with_capacity(n_shards);
-        let mut start = 0usize;
-        for s in 0..n_shards {
-            let take = base + usize::from(s < rem);
-            let slice = &systems[start..start + take];
-            shards.push(FarmShard::new(s, slice, model, force_shift, cfg)?);
-            start += take;
+impl MoleculeFarm {
+    /// Build the farm: each species group is partitioned into contiguous
+    /// shards (clamped to its molecule count; the partition depends only
+    /// on counts, so inline and threaded backends see identical shard
+    /// contents), and every shard programs its own `Sqnn` from the
+    /// group's model — request batches route by model.
+    pub fn new(groups: Vec<SpeciesGroup>, lanes: usize, mode: ParallelMode) -> Result<MoleculeFarm> {
+        anyhow::ensure!(!groups.is_empty(), "farm needs at least one species");
+        anyhow::ensure!(lanes >= 1, "chip needs at least one MLP lane");
+        let mut shards = Vec::new();
+        let mut species = Vec::new();
+        let mut n_molecules = 0usize;
+        for (si, g) in groups.into_iter().enumerate() {
+            let n = g.mols.len();
+            let n_shards = g.shards.min(n);
+            let base = n / n_shards;
+            let rem = n % n_shards;
+            let n_atoms = g.mols.iter().map(|m| m.n_atoms()).sum();
+            n_molecules += n;
+            let mut mols = g.mols.into_iter();
+            for s in 0..n_shards {
+                let take = base + usize::from(s < rem);
+                let slice: Vec<Box<dyn ServedMolecule>> = mols.by_ref().take(take).collect();
+                let id = shards.len();
+                shards.push(FarmShard::new(id, si, slice, &g.model, g.k, lanes)?);
+            }
+            debug_assert!(mols.next().is_none());
+            species.push(SpeciesMeta { name: g.name, n_molecules: n, n_atoms });
         }
-        debug_assert_eq!(start, n);
-        let backend = match cfg.mode {
+        let n_shards = shards.len();
+        let backend = match mode {
             ParallelMode::Inline => FarmBackend::Inline(shards),
             ParallelMode::Threaded => {
                 FarmBackend::Threaded(WorkerPool::spawn("farm-shard", shards))
             }
         };
-        // Store the *effective* configuration (shards post-clamp), so
-        // `config()` agrees with what was actually built.
-        let cfg_eff = FarmConfig { shards: n_shards, ..*cfg };
-        Ok(WaterFarm {
+        Ok(MoleculeFarm {
             backend,
-            n_molecules: n,
-            cfg: cfg_eff,
+            species,
+            n_molecules,
+            n_shards,
             ticks: 0,
             host_wall: Duration::ZERO,
         })
     }
 
-    /// One farm tick: every molecule advances one MD step.
+    /// One farm tick: every molecule of every species advances one step.
     pub fn tick(&mut self) -> Result<()> {
         let t0 = Instant::now();
         match &mut self.backend {
@@ -286,8 +579,9 @@ impl WaterFarm {
         Ok(())
     }
 
-    /// Decoded positions of every molecule ([molecule][atom], atoms
-    /// ordered [O, H1, H2]), in the original `systems` order.
+    /// Decoded positions of every molecule ([molecule][atom]), species
+    /// groups in construction order, molecules in their original order
+    /// within each group.
     pub fn positions(&self) -> Result<Vec<Vec<Vec3>>> {
         let per_shard: Vec<Vec<Vec<Vec3>>> = match &self.backend {
             FarmBackend::Inline(shards) => shards.iter().map(|s| s.positions()).collect(),
@@ -300,14 +594,21 @@ impl WaterFarm {
         self.ticks
     }
 
-    /// The farm's effective configuration: `shards` is the post-clamp
-    /// count actually built (≤ the requested count).
-    pub fn config(&self) -> FarmConfig {
-        self.cfg
+    pub fn n_molecules(&self) -> usize {
+        self.n_molecules
+    }
+
+    /// Shards actually built (post-clamp, summed over species).
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn n_species(&self) -> usize {
+        self.species.len()
     }
 
     /// Tear the farm down (joining shard threads) and aggregate the
-    /// ledger.
+    /// ledger, farm-wide and per species.
     pub fn finish(self) -> Result<FarmLedger> {
         let shards = match self.backend {
             FarmBackend::Inline(shards) => shards,
@@ -318,6 +619,17 @@ impl WaterFarm {
             n_molecules: self.n_molecules,
             molecule_steps: self.ticks * self.n_molecules as u64,
             host_wall: self.host_wall,
+            species: self
+                .species
+                .iter()
+                .map(|sp| SpeciesLedger {
+                    name: sp.name.clone(),
+                    n_molecules: sp.n_molecules,
+                    n_atoms: sp.n_atoms,
+                    molecule_steps: self.ticks * sp.n_molecules as u64,
+                    ..SpeciesLedger::default()
+                })
+                .collect(),
             ..FarmLedger::default()
         };
         for s in &shards {
@@ -328,12 +640,82 @@ impl WaterFarm {
             ledger.chip_inferences += s.chip.inferences;
             ledger.chip_ops.merge(&s.chip.ops);
             for m in &s.mols {
-                ledger.fpga_ops.merge(&m.ops);
+                ledger.fpga_ops.merge(&m.ops());
             }
             ledger.shard_walls.push(s.wall);
+            let sp = &mut ledger.species[s.species];
+            sp.chip_inferences += s.chip.inferences;
+            sp.shard_walls.push(s.wall);
         }
         Ok(ledger)
     }
+}
+
+/// The batched water-only serving system — the water instantiation of
+/// [`MoleculeFarm`], preserving the original farm API and behavior.
+pub struct WaterFarm {
+    inner: MoleculeFarm,
+    pub n_molecules: usize,
+    cfg: FarmConfig,
+}
+
+impl WaterFarm {
+    /// Build the farm: one initial [`System`] per molecule, partitioned
+    /// into contiguous shards (the partition depends only on counts, so
+    /// inline and threaded backends see identical shard contents).
+    pub fn new(model: &Mlp, systems: &[System], cfg: &FarmConfig) -> Result<WaterFarm> {
+        anyhow::ensure!(!systems.is_empty(), "farm needs at least one molecule");
+        anyhow::ensure!(cfg.shards >= 1, "farm needs at least one shard");
+        anyhow::ensure!(cfg.lanes >= 1, "chip needs at least one MLP lane");
+        let group = water_group(model, systems, cfg.k, cfg.shards, cfg.dt_fs)?;
+        let inner = MoleculeFarm::new(vec![group], cfg.lanes, cfg.mode)?;
+        // Store the *effective* configuration (shards post-clamp), so
+        // `config()` agrees with what was actually built.
+        let cfg_eff = FarmConfig { shards: inner.n_shards(), ..*cfg };
+        Ok(WaterFarm { inner, n_molecules: systems.len(), cfg: cfg_eff })
+    }
+
+    /// One farm tick: every molecule advances one MD step.
+    pub fn tick(&mut self) -> Result<()> {
+        self.inner.tick()
+    }
+
+    /// Run `n` ticks.
+    pub fn run(&mut self, n: usize) -> Result<()> {
+        self.inner.run(n)
+    }
+
+    /// Decoded positions of every molecule ([molecule][atom], atoms
+    /// ordered [O, H1, H2]), in the original `systems` order.
+    pub fn positions(&self) -> Result<Vec<Vec<Vec3>>> {
+        self.inner.positions()
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.inner.ticks()
+    }
+
+    /// The farm's effective configuration: `shards` is the post-clamp
+    /// count actually built (≤ the requested count).
+    pub fn config(&self) -> FarmConfig {
+        self.cfg
+    }
+
+    /// Tear the farm down (joining shard threads) and aggregate the
+    /// ledger.
+    pub fn finish(self) -> Result<FarmLedger> {
+        self.inner.finish()
+    }
+}
+
+/// Deterministic per-molecule RNG stream: molecule `i` of workload seed
+/// `seed` always sees the same velocities, independent of the farm's
+/// shard layout.
+fn molecule_rng(seed: u64, i: usize) -> Pcg {
+    let stream = (i as u64)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(0x2545_f491_4f6c_dd1d);
+    Pcg::new(seed ^ stream)
 }
 
 /// Convenience: `n` water molecules at the DFT-surrogate equilibrium
@@ -345,11 +727,29 @@ pub fn random_water_systems(n: usize, t_k: f64, seed: u64) -> Vec<System> {
     (0..n)
         .map(|i| {
             let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
-            let stream = (i as u64)
-                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
-                .wrapping_add(0x2545_f491_4f6c_dd1d);
-            let mut rng = Pcg::new(seed ^ stream);
+            let mut rng = molecule_rng(seed, i);
             initialize_velocities(&mut sys, t_k, 6, &mut rng);
+            sys
+        })
+        .collect()
+}
+
+/// Convenience: `n` copies of a generic molecule at its reference
+/// geometry with Maxwell–Boltzmann velocities (per-molecule streams as
+/// in [`random_water_systems`]) — the mixed-species workload generator.
+pub fn random_molecule_systems(
+    coords: &[Vec3],
+    masses: &[f64],
+    n: usize,
+    t_k: f64,
+    seed: u64,
+) -> Vec<System> {
+    let dof = (3 * coords.len()).saturating_sub(3).max(1);
+    (0..n)
+        .map(|i| {
+            let mut sys = System::new(coords.to_vec(), masses.to_vec());
+            let mut rng = molecule_rng(seed, i);
+            initialize_velocities(&mut sys, t_k, dof, &mut rng);
             sys
         })
         .collect()
@@ -360,7 +760,8 @@ mod tests {
     use super::*;
     use crate::coordinator::WaterSystem;
     use crate::hw::timing::CLOCK_HZ;
-    use crate::nn::Activation;
+    use crate::nn::{Activation, Sqnn};
+    use crate::potentials::ff;
 
     fn toy_model() -> Mlp {
         let mut rng = Pcg::new(77);
@@ -371,6 +772,31 @@ mod tests {
             }
         }
         m
+    }
+
+    /// A toy ethanol-class model: 4·n_nb → … → 3 Cartesian forces.
+    fn toy_generic_model(n_nb: usize) -> Mlp {
+        let mut rng = Pcg::new(55);
+        let mut m = Mlp::init_random(
+            "toy-generic",
+            &[4 * n_nb, 8, 8, 3],
+            Activation::Phi,
+            &mut rng,
+        );
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.2;
+            }
+        }
+        m
+    }
+
+    fn ethanol_group(n_mols: usize, shards: usize, seed: u64) -> SpeciesGroup {
+        let mol = ff::ethanol();
+        let n_nb = 4usize;
+        let model = toy_generic_model(n_nb);
+        let systems = random_molecule_systems(&mol.coords, &mol.masses(), n_mols, 100.0, seed);
+        generic_group("ethanol", &model, &mol.coords, &systems, n_nb, 3, shards, 0.25).unwrap()
     }
 
     #[test]
@@ -487,6 +913,17 @@ mod tests {
         let mut bad = toy_model();
         bad.output_scale = 3.0; // not a power of two
         assert!(WaterFarm::new(&bad, &systems, &FarmConfig::default()).is_err());
+        // multi-species validation
+        assert!(MoleculeFarm::new(Vec::new(), 1, ParallelMode::Inline).is_err());
+        let g = water_group(&m, &systems, 3, 1, 0.25).unwrap();
+        assert!(MoleculeFarm::new(vec![g], 0, ParallelMode::Inline).is_err());
+        // generic-group validation: wrong model shape for n_nb
+        let mol = ff::ethanol();
+        let sys = random_molecule_systems(&mol.coords, &mol.masses(), 1, 50.0, 3);
+        let wrong = toy_generic_model(3); // 12 inputs, but n_nb = 4 wants 16
+        assert!(
+            generic_group("ethanol", &wrong, &mol.coords, &sys, 4, 3, 1, 0.25).is_err()
+        );
     }
 
     #[test]
@@ -504,5 +941,132 @@ mod tests {
         let l = farm.finish().unwrap();
         assert_eq!(l.shard_walls.len(), 3);
         assert_eq!(l.molecule_steps, 15);
+    }
+
+    #[test]
+    fn generic_single_molecule_matches_unbatched_reference() {
+        // The generic serving path must be bit-identical to the
+        // unbatched reference: the same MoleculeFpga stepped with
+        // per-lane scalar Sqnn inference instead of the farm's batched
+        // chip kernel.
+        let mol = ff::ethanol();
+        let n_nb = 4usize;
+        let model = toy_generic_model(n_nb);
+        let systems = random_molecule_systems(&mol.coords, &mol.masses(), 1, 120.0, 11);
+        let group =
+            generic_group("ethanol", &model, &mol.coords, &systems, n_nb, 3, 1, 0.25).unwrap();
+        let mut farm = MoleculeFarm::new(vec![group], 1, ParallelMode::Inline).unwrap();
+        farm.run(300).unwrap();
+
+        // Reference path: scalar inference lane by lane.
+        let net = Sqnn::from_mlp(&model, 3);
+        let n = mol.coords.len();
+        let nb: Vec<Vec<usize>> = (0..n)
+            .map(|i| features::reference_neighbors(&mol.coords, i, n_nb))
+            .collect();
+        let cond =
+            FeatureConditioner::new(4 * n_nb, &model.feature_center, &model.feature_scale)
+                .unwrap();
+        let mut fpga = MoleculeFpga::new(&systems[0], nb, cond, 0.25).unwrap();
+        fpga.force_shift = model.force_shift().unwrap();
+        let in_dim = 4 * n_nb;
+        let batch = n;
+        let mut feats = vec![Q13::ZERO; in_dim * batch];
+        let mut outs = vec![Q13::ZERO; 3 * batch];
+        let mut lane = vec![Q13::ZERO; in_dim];
+        for _ in 0..300 {
+            fpga.extract_features_soa(&mut feats, batch, 0);
+            for b in 0..batch {
+                for (i, slot) in lane.iter_mut().enumerate() {
+                    *slot = feats[i * batch + b];
+                }
+                let y = net.forward_q13(&lane);
+                for (o, &v) in y.iter().enumerate() {
+                    outs[o * batch + b] = v;
+                }
+            }
+            fpga.integrate_soa(&outs, batch, 0);
+        }
+        let got = farm.positions().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], fpga.positions(), "batched farm diverged from scalar reference");
+        let ledger = farm.finish().unwrap();
+        assert_eq!(ledger.fpga_ops, fpga.ops);
+        assert_eq!(ledger.chip_inferences, 300 * n as u64);
+    }
+
+    #[test]
+    fn mixed_species_farm_is_bit_identical_across_backends() {
+        // The multi-model acceptance invariant: a farm serving two
+        // distinct per-shard models (water 3→…→2 and an ethanol-class
+        // 16→…→3) must be bit-identical between inline and threaded
+        // backends, across different shard counts.
+        let wm = toy_model();
+        let water_systems = random_water_systems(10, 120.0, 21);
+        let build = |water_shards: usize, eth_shards: usize, mode: ParallelMode| {
+            let groups = vec![
+                water_group(&wm, &water_systems, 3, water_shards, 0.25).unwrap(),
+                ethanol_group(6, eth_shards, 33),
+            ];
+            MoleculeFarm::new(groups, 1, mode).unwrap()
+        };
+        let mut inline = build(3, 2, ParallelMode::Inline);
+        let mut threaded = build(4, 3, ParallelMode::Threaded);
+        inline.run(200).unwrap();
+        threaded.run(200).unwrap();
+        let pa = inline.positions().unwrap();
+        let pb = threaded.positions().unwrap();
+        assert_eq!(pa.len(), 16);
+        assert_eq!(pa[0].len(), 3, "water molecules first, [O,H1,H2]");
+        assert_eq!(pa[10].len(), 9, "ethanol molecules follow, 9 atoms");
+        for (mol, (a, b)) in pa.iter().zip(&pb).enumerate() {
+            assert_eq!(a, b, "molecule {mol} diverged between backends");
+        }
+        let la = inline.finish().unwrap();
+        let lb = threaded.finish().unwrap();
+        assert_eq!(la.chip_inferences, lb.chip_inferences);
+        assert_eq!(la.chip_ops, lb.chip_ops);
+        assert_eq!(la.fpga_ops, lb.fpga_ops);
+        assert_eq!(la.molecule_steps, lb.molecule_steps);
+    }
+
+    #[test]
+    fn per_species_ledger_accounts_the_mix() {
+        let wm = toy_model();
+        let water_systems = random_water_systems(4, 100.0, 5);
+        let groups = vec![
+            water_group(&wm, &water_systems, 3, 2, 0.25).unwrap(),
+            ethanol_group(2, 1, 9),
+        ];
+        let mut farm = MoleculeFarm::new(groups, 1, ParallelMode::Inline).unwrap();
+        assert_eq!(farm.n_molecules(), 6);
+        assert_eq!(farm.n_species(), 2);
+        assert_eq!(farm.n_shards(), 3);
+        farm.run(10).unwrap();
+        let l = farm.finish().unwrap();
+        assert_eq!(l.molecule_steps, 60);
+        assert_eq!(l.species.len(), 2);
+        let (w, e) = (&l.species[0], &l.species[1]);
+        assert_eq!(w.name, "water");
+        assert_eq!(e.name, "ethanol");
+        assert_eq!(w.n_molecules, 4);
+        assert_eq!(e.n_molecules, 2);
+        assert_eq!(w.n_atoms, 12);
+        assert_eq!(e.n_atoms, 18);
+        assert_eq!(w.molecule_steps, 40);
+        assert_eq!(e.molecule_steps, 20);
+        // Lane routing by model: water = 2 lanes/molecule, ethanol =
+        // 9 lanes (one per atom).
+        assert_eq!(w.chip_inferences, 10 * 4 * 2);
+        assert_eq!(e.chip_inferences, 10 * 2 * 9);
+        assert_eq!(w.chip_inferences + e.chip_inferences, l.chip_inferences);
+        assert_eq!(w.shard_walls.len(), 2);
+        assert_eq!(e.shard_walls.len(), 1);
+        assert!(w.steps_per_shard_second() > 0.0);
+        assert!(e.steps_per_shard_second() > 0.0);
+        // Mixed-atom S metric uses the real atom mix (30 atoms/tick).
+        let s = l.s_per_step_atom(CLOCK_HZ);
+        assert!(s > 0.0 && s.is_finite());
+        assert!((s - l.hw_seconds_parallel(CLOCK_HZ) / 300.0).abs() < 1e-18);
     }
 }

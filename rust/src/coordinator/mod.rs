@@ -22,7 +22,10 @@ pub mod farm;
 pub mod pool;
 pub mod vn;
 
-pub use farm::{FarmConfig, FarmLedger, WaterFarm};
+pub use farm::{
+    generic_group, water_group, FarmConfig, FarmLedger, MoleculeFarm, ServedMolecule,
+    SpeciesGroup, SpeciesLedger, WaterFarm,
+};
 
 use anyhow::Result;
 
@@ -126,19 +129,14 @@ fn validate_water_model(model: &Mlp) -> Result<i32> {
     anyhow::ensure!(model.in_dim() == 3 && model.out_dim() == 2, "water model must be 3→…→2");
     // The model predicts F / output_scale; the FPGA undoes that with a
     // free power-of-two shift at reconstruction.
-    anyhow::ensure!(
-        model.output_scale > 0.0 && model.output_scale.log2().fract() == 0.0,
-        "output_scale {} must be a power of two for the shift datapath",
-        model.output_scale
-    );
-    Ok(model.output_scale.log2() as i32)
+    model.force_shift()
 }
 
 /// Program an FPGA's force-rescale and feature-conditioning stages from
 /// a validated water model (the host-CPU initialization path, Fig. 1).
-fn program_water_fpga(fpga: &mut WaterFpga, model: &Mlp, force_shift: i32) {
+fn program_water_fpga(fpga: &mut WaterFpga, model: &Mlp, force_shift: i32) -> Result<()> {
     fpga.force_shift = force_shift;
-    fpga.program_feature_conditioning(&model.feature_center, &model.feature_scale);
+    fpga.program_feature_conditioning(&model.feature_center, &model.feature_scale)
 }
 
 impl WaterSystem {
@@ -156,7 +154,7 @@ impl WaterSystem {
             .collect();
         let chip_latency = chips[0].latency_cycles();
         let mut fpga = WaterFpga::new(sys, dt_fs);
-        program_water_fpga(&mut fpga, model, force_shift);
+        program_water_fpga(&mut fpga, model, force_shift)?;
         let mut cycles = StepCycles::water();
         // The MLP stage of the budget is the *actual* programmed-network
         // latency (the nominal budget assumes the water arch).

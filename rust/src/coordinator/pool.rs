@@ -1,7 +1,13 @@
-//! Worker-thread pool of ASIC chip simulators with channel transport —
-//! the concurrent-device half of the coordinator, also used as a batch
-//! inference service (round-robin dispatch) by the serving example and
-//! the Fig. 9 evaluation.
+//! Worker-thread pools with channel transport — the concurrent-device
+//! half of the coordinator.
+//!
+//! [`WorkerPool`] is the one transport: each worker thread owns one item
+//! and runs shipped closures against it. [`ChipPool`] — the ASIC-chip
+//! pool used by the paper's two-chip step, the serving example, and the
+//! Fig. 9 evaluation — is a thin routing layer (round-robin dispatch,
+//! pair dispatch, stats aggregation) over a `WorkerPool<MlpChip>`; it
+//! used to speak its own request/reply protocol on hand-rolled worker
+//! threads.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -12,119 +18,14 @@ use crate::asic::MlpChip;
 use crate::fixedpoint::Q13;
 use crate::hw::power::OpCounts;
 
-enum Req {
-    /// Run one inference; reply on the embedded sender.
-    Infer(Vec<Q13>, mpsc::Sender<Result<Vec<Q13>>>),
-    /// Report (inferences, cycles, ops).
-    Stats(mpsc::Sender<(u64, u64, OpCounts)>),
-    Stop,
-}
-
-struct Worker {
-    tx: mpsc::Sender<Req>,
-    handle: Option<JoinHandle<()>>,
-}
-
-/// A pool of chip workers, one thread per chip.
-pub struct ChipPool {
-    workers: Vec<Worker>,
-    next: usize,
-}
-
-impl ChipPool {
-    /// Spawn one worker thread per chip.
-    pub fn spawn(chips: Vec<MlpChip>) -> ChipPool {
-        let workers = chips
-            .into_iter()
-            .map(|mut chip| {
-                let (tx, rx) = mpsc::channel::<Req>();
-                let handle = std::thread::Builder::new()
-                    .name(format!("mlp-chip-{}", chip.id))
-                    .spawn(move || {
-                        while let Ok(req) = rx.recv() {
-                            match req {
-                                Req::Infer(x, reply) => {
-                                    let _ = reply.send(chip.infer(&x));
-                                }
-                                Req::Stats(reply) => {
-                                    let _ = reply.send((chip.inferences, chip.total_cycles, chip.ops));
-                                }
-                                Req::Stop => break,
-                            }
-                        }
-                    })
-                    .expect("spawn chip worker");
-                Worker { tx, handle: Some(handle) }
-            })
-            .collect();
-        ChipPool { workers, next: 0 }
-    }
-
-    pub fn len(&self) -> usize {
-        self.workers.len()
-    }
-    pub fn is_empty(&self) -> bool {
-        self.workers.is_empty()
-    }
-
-    /// Dispatch two inferences to the first two chips *concurrently* and
-    /// wait for both — the paper's two-hydrogen parallel step.
-    pub fn infer_pair(&mut self, a: Vec<Q13>, b: Vec<Q13>) -> Result<(Vec<Q13>, Vec<Q13>)> {
-        anyhow::ensure!(self.workers.len() >= 2, "need ≥2 chips");
-        let (ra_tx, ra_rx) = mpsc::channel();
-        let (rb_tx, rb_rx) = mpsc::channel();
-        self.workers[0].tx.send(Req::Infer(a, ra_tx)).context("chip 0 send")?;
-        self.workers[1].tx.send(Req::Infer(b, rb_tx)).context("chip 1 send")?;
-        let ya = ra_rx.recv().context("chip 0 reply")??;
-        let yb = rb_rx.recv().context("chip 1 reply")??;
-        Ok((ya, yb))
-    }
-
-    /// Batch inference service: round-robin the rows over all chips,
-    /// `chunk` rows in flight per chip, results returned in input order.
-    pub fn infer_batch(&mut self, rows: &[Vec<Q13>]) -> Result<Vec<Vec<Q13>>> {
-        let n = self.workers.len();
-        anyhow::ensure!(n > 0, "empty pool");
-        let mut pending: Vec<(usize, mpsc::Receiver<Result<Vec<Q13>>>)> = Vec::with_capacity(rows.len());
-        for (i, row) in rows.iter().enumerate() {
-            let (tx, rx) = mpsc::channel();
-            let w = (self.next + i) % n;
-            self.workers[w]
-                .tx
-                .send(Req::Infer(row.clone(), tx))
-                .with_context(|| format!("chip {w} send"))?;
-            pending.push((i, rx));
-        }
-        self.next = (self.next + rows.len()) % n;
-        let mut out = vec![Vec::new(); rows.len()];
-        for (i, rx) in pending {
-            out[i] = rx.recv().context("chip reply")??;
-        }
-        Ok(out)
-    }
-
-    /// Aggregate counters across all chips.
-    pub fn stats(&mut self) -> Result<(u64, u64, OpCounts)> {
-        let mut total = (0u64, 0u64, OpCounts::default());
-        for w in &self.workers {
-            let (tx, rx) = mpsc::channel();
-            w.tx.send(Req::Stats(tx)).context("stats send")?;
-            let (i, c, o) = rx.recv().context("stats reply")?;
-            total.0 += i;
-            total.1 += c;
-            total.2.merge(&o);
-        }
-        Ok(total)
-    }
-}
-
 /// A job shipped to a pool worker: runs against the worker's owned item.
 type PoolJob<T> = Box<dyn FnOnce(&mut T) + Send>;
 
 /// Generic worker pool: each thread owns one `T` (a chip simulator, a
 /// molecule-farm shard) and runs shipped closures against it. This is
-/// the transport layer shared by the farm's threaded shard backend; the
-/// original [`ChipPool`] predates it and keeps its specialized protocol.
+/// the transport layer shared by the farm's threaded shard backend and
+/// [`ChipPool`]. Dropping the pool (or calling [`Self::into_items`])
+/// closes the job channels and joins every worker.
 pub struct WorkerPool<T: Send + 'static> {
     txs: Vec<mpsc::Sender<PoolJob<T>>>,
     handles: Vec<JoinHandle<T>>,
@@ -159,6 +60,26 @@ impl<T: Send + 'static> WorkerPool<T> {
         self.txs.is_empty()
     }
 
+    /// Ship `f` to worker `i` and return the receiver of its result
+    /// (asynchronous: the caller decides when to block on the reply, so
+    /// several workers can be kept in flight concurrently).
+    pub fn submit<R, F>(&self, i: usize, f: F) -> Result<mpsc::Receiver<R>>
+    where
+        R: Send + 'static,
+        F: FnOnce(usize, &mut T) -> R + Send + 'static,
+    {
+        let tx = self
+            .txs
+            .get(i)
+            .with_context(|| format!("no pool worker {i}"))?;
+        let (rtx, rrx) = mpsc::channel::<R>();
+        tx.send(Box::new(move |item: &mut T| {
+            let _ = rtx.send(f(i, item));
+        }))
+        .map_err(|_| anyhow::anyhow!("pool worker {i} hung up"))?;
+        Ok(rrx)
+    }
+
     /// Run `f` on every worker's item **concurrently** and collect the
     /// results in worker order (a full barrier: returns once every
     /// worker has replied).
@@ -168,14 +89,8 @@ impl<T: Send + 'static> WorkerPool<T> {
         F: Fn(usize, &mut T) -> R + Clone + Send + 'static,
     {
         let mut replies = Vec::with_capacity(self.txs.len());
-        for (i, tx) in self.txs.iter().enumerate() {
-            let (rtx, rrx) = mpsc::channel::<R>();
-            let g = f.clone();
-            tx.send(Box::new(move |item: &mut T| {
-                let _ = rtx.send(g(i, item));
-            }))
-            .map_err(|_| anyhow::anyhow!("pool worker {i} hung up"))?;
-            replies.push(rrx);
+        for i in 0..self.txs.len() {
+            replies.push(self.submit(i, f.clone())?);
         }
         replies
             .into_iter()
@@ -185,25 +100,88 @@ impl<T: Send + 'static> WorkerPool<T> {
     }
 
     /// Shut the pool down and hand the items back in worker order.
-    pub fn into_items(self) -> Vec<T> {
-        drop(self.txs); // closes every channel; workers fall out of recv()
-        self.handles
+    pub fn into_items(mut self) -> Vec<T> {
+        self.txs.clear(); // closes every channel; workers fall out of recv()
+        let handles = std::mem::take(&mut self.handles);
+        handles
             .into_iter()
             .map(|h| h.join().expect("pool worker panicked"))
             .collect()
     }
 }
 
-impl Drop for ChipPool {
+impl<T: Send + 'static> Drop for WorkerPool<T> {
     fn drop(&mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(Req::Stop);
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
-        for w in &mut self.workers {
-            if let Some(h) = w.handle.take() {
-                let _ = h.join();
-            }
+    }
+}
+
+/// A pool of chip workers, one thread per chip, on the [`WorkerPool`]
+/// transport: pair dispatch for the paper's two-hydrogen step,
+/// round-robin batch service, and counter aggregation.
+pub struct ChipPool {
+    pool: WorkerPool<MlpChip>,
+    next: usize,
+}
+
+impl ChipPool {
+    /// Spawn one worker thread per chip.
+    pub fn spawn(chips: Vec<MlpChip>) -> ChipPool {
+        ChipPool { pool: WorkerPool::spawn("mlp-chip", chips), next: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pool.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.pool.is_empty()
+    }
+
+    /// Dispatch two inferences to the first two chips *concurrently* and
+    /// wait for both — the paper's two-hydrogen parallel step.
+    pub fn infer_pair(&mut self, a: Vec<Q13>, b: Vec<Q13>) -> Result<(Vec<Q13>, Vec<Q13>)> {
+        anyhow::ensure!(self.pool.len() >= 2, "need ≥2 chips");
+        let ra = self.pool.submit(0, move |_, chip: &mut MlpChip| chip.infer(&a))?;
+        let rb = self.pool.submit(1, move |_, chip: &mut MlpChip| chip.infer(&b))?;
+        let ya = ra.recv().context("chip 0 reply")??;
+        let yb = rb.recv().context("chip 1 reply")??;
+        Ok((ya, yb))
+    }
+
+    /// Batch inference service: round-robin the rows over all chips
+    /// (every row in flight at once), results returned in input order.
+    pub fn infer_batch(&mut self, rows: &[Vec<Q13>]) -> Result<Vec<Vec<Q13>>> {
+        let n = self.pool.len();
+        anyhow::ensure!(n > 0, "empty pool");
+        let mut pending = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let w = (self.next + i) % n;
+            let row = row.clone();
+            pending.push(self.pool.submit(w, move |_, chip: &mut MlpChip| chip.infer(&row))?);
         }
+        self.next = (self.next + rows.len()) % n;
+        let mut out = vec![Vec::new(); rows.len()];
+        for (i, rx) in pending.into_iter().enumerate() {
+            out[i] = rx.recv().context("chip reply")??;
+        }
+        Ok(out)
+    }
+
+    /// Aggregate counters across all chips.
+    pub fn stats(&mut self) -> Result<(u64, u64, OpCounts)> {
+        let per_chip = self
+            .pool
+            .run_all(|_, c: &mut MlpChip| (c.inferences, c.total_cycles, c.ops))?;
+        let mut total = (0u64, 0u64, OpCounts::default());
+        for (i, c, o) in per_chip {
+            total.0 += i;
+            total.1 += c;
+            total.2.merge(&o);
+        }
+        Ok(total)
     }
 }
 
@@ -270,6 +248,23 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_spreads_work_across_calls() {
+        // The `next` cursor must persist between batch calls so repeated
+        // small batches don't pile onto chip 0 (the routing semantics of
+        // the pre-WorkerPool protocol, preserved).
+        let (mut pool, _m) = pool_of(3);
+        for _ in 0..3 {
+            pool.infer_batch(&[vec![Q13::ZERO; 3]]).unwrap();
+        }
+        // 3 single-row batches over 3 chips: every chip served exactly 1.
+        let per_chip = pool
+            .pool
+            .run_all(|_, c: &mut MlpChip| c.inferences)
+            .unwrap();
+        assert_eq!(per_chip, vec![1, 1, 1]);
+    }
+
+    #[test]
     fn bad_input_width_propagates_error() {
         let (mut pool, _m) = pool_of(2);
         let err = pool.infer_pair(vec![Q13::ZERO; 2], vec![Q13::ZERO; 3]);
@@ -310,5 +305,15 @@ mod tests {
         assert!(pool.is_empty());
         assert!(pool.run_all(|_, _: &mut u8| ()).unwrap().is_empty());
         assert!(pool.into_items().is_empty());
+    }
+
+    #[test]
+    fn submit_targets_one_worker() {
+        let pool = WorkerPool::spawn("one", vec![10u64, 20]);
+        let r = pool.submit(1, |i, c: &mut u64| (i, *c)).unwrap();
+        assert_eq!(r.recv().unwrap(), (1, 20));
+        assert!(pool.submit(2, |_, c: &mut u64| *c).is_err(), "out-of-range worker");
+        let items = pool.into_items();
+        assert_eq!(items, vec![10, 20]);
     }
 }

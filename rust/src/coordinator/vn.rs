@@ -55,6 +55,9 @@ pub struct VnMlmd<M: HForceModel> {
     pub model: M,
     pub dt: f64,
     pub steps_done: u64,
+    /// Reusable integrator scratch: holds F(t) on entry to `euler_step`
+    /// each step (§Perf: the step loop allocates nothing — an earlier
+    /// version cloned this buffer every step).
     forces: Vec<Vec3>,
 }
 
@@ -78,7 +81,6 @@ impl<M: HForceModel> VnMlmd<M> {
     /// One MD step with the paper's Eq. (2)–(3) integrator.
     pub fn step(&mut self) -> Result<()> {
         let f = self.eval_forces()?;
-        self.forces.copy_from_slice(&f);
         // semi-implicit Euler with externally supplied forces: reuse
         // euler_step against a wrapper field that replays `f`.
         struct Replay<'a>(&'a [Vec3; 3]);
@@ -88,10 +90,10 @@ impl<M: HForceModel> VnMlmd<M> {
                 0.0
             }
         }
-        // euler_step consumes F(t) from `forces` on entry.
+        // euler_step consumes F(t) from the scratch buffer on entry.
         let replay = Replay(&f);
-        let mut buf = self.forces.clone();
-        euler_step(&mut self.sys, &replay, self.dt, &mut buf);
+        self.forces.copy_from_slice(&f);
+        euler_step(&mut self.sys, &replay, self.dt, &mut self.forces);
         self.steps_done += 1;
         Ok(())
     }
@@ -182,6 +184,47 @@ mod tests {
             assert!(p.norm().is_finite());
         }
         assert_eq!(driver.steps_done, 1_000);
+    }
+
+    #[test]
+    fn step_scratch_buffer_preserves_trajectory() {
+        // Regression for the per-step `self.forces.clone()`: the
+        // reusable scratch must leave the trajectory bit-identical to
+        // the old clone-per-step implementation, replicated inline here
+        // with a freshly allocated buffer every step.
+        let mut rng = Pcg::new(8);
+        let mut m = Mlp::init_random("t", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.25;
+            }
+        }
+        let pes = WaterPes::dft_surrogate();
+        let mut sys = System::new(pes.equilibrium(), WaterPes::masses());
+        let mut vrng = Pcg::new(17);
+        initialize_velocities(&mut sys, 150.0, 6, &mut vrng);
+
+        let mut driver = VnMlmd::new(sys.clone(), MlpForceModel { model: m.clone() }, 0.25);
+        let mut reference = VnMlmd::new(sys, MlpForceModel { model: m }, 0.25);
+        struct Replay<'a>(&'a [Vec3; 3]);
+        impl ForceField for Replay<'_> {
+            fn compute(&self, _pos: &[Vec3], forces: &mut [Vec3]) -> f64 {
+                forces.copy_from_slice(self.0);
+                0.0
+            }
+        }
+        for step in 0..500 {
+            driver.step().unwrap();
+            // the pre-fix algorithm, verbatim
+            let f = reference.eval_forces().unwrap();
+            let replay = Replay(&f);
+            let mut buf = vec![Vec3::ZERO; 3];
+            buf.copy_from_slice(&f);
+            euler_step(&mut reference.sys, &replay, reference.dt, &mut buf);
+            assert_eq!(driver.sys.pos, reference.sys.pos, "positions diverged at step {step}");
+            assert_eq!(driver.sys.vel, reference.sys.vel, "velocities diverged at step {step}");
+        }
+        assert_eq!(driver.steps_done, 500);
     }
 
     #[test]

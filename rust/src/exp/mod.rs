@@ -120,6 +120,35 @@ pub fn water_model_or_fallback() -> Mlp {
     })
 }
 
+/// The serving model of a non-water Table-I molecule for the §Perf
+/// benches and the mixed-species farm: the trained `<name>_qnn_k3`
+/// artifact when present *and* compatible with the fixed-point serving
+/// path (4·n_nb→…→3 shape, power-of-two output scale), else a
+/// deterministic random fallback at the spec's architecture. Shared by
+/// `farm_throughput` and `exp::scaling` so both measure the same
+/// network.
+pub fn molecule_model_or_fallback(name: &str) -> Mlp {
+    let spec = crate::datasets::spec(name).expect("known Table-I system");
+    if let Ok(m) = load_model(&format!("{name}_qnn_k3")) {
+        if m.in_dim() == 4 * spec.n_nb && m.out_dim() == 3 && m.force_shift().is_ok() {
+            return m;
+        }
+    }
+    let mut rng = crate::util::rng::Pcg::new(40 + spec.seed);
+    let mut m = Mlp::init_random(
+        &format!("{name}-fallback"),
+        &spec.arch,
+        crate::nn::Activation::Phi,
+        &mut rng,
+    );
+    for l in &mut m.layers {
+        for w in &mut l.w {
+            *w *= 0.2;
+        }
+    }
+    m
+}
+
 /// Load a dataset artifact by name.
 pub fn load_dataset(name: &str) -> Result<crate::datasets::Dataset> {
     let path = crate::artifact_path(&format!("datasets/{name}.json"));

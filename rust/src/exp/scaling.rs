@@ -10,7 +10,11 @@
 
 use anyhow::Result;
 
-use crate::coordinator::farm::{random_water_systems, FarmConfig, WaterFarm};
+use crate::coordinator::farm::{
+    generic_group, random_molecule_systems, random_water_systems, water_group, FarmConfig,
+    FarmLedger, MoleculeFarm, SpeciesGroup, WaterFarm,
+};
+use crate::coordinator::ParallelMode;
 use crate::hw::power::ProcessNode;
 use crate::hw::timing::{SystemTiming, CLOCK_HZ, PAPER_NVN_S};
 use crate::util::json::{self, Value};
@@ -84,6 +88,45 @@ pub fn measure_farm(
         .collect()
 }
 
+/// Measure the heterogeneous serving tier: one [`MoleculeFarm`] holding
+/// water and the ethanol-class generic species (distinct descriptor
+/// widths, every shard programmed with its **own** species model),
+/// reporting the per-species ledger — the mixed-traffic counterpart of
+/// [`measure_farm`]'s single-species lane sweep.
+/// Build the water + ethanol-class species groups of the mixed-traffic
+/// measurement — one definition shared by this report and the
+/// `farm_throughput` bench, so both always measure the same farm shape
+/// (models, shard counts, dt, conditioning; only counts/seeds vary).
+pub fn mixed_farm_groups(
+    n_water: usize,
+    n_ethanol: usize,
+    water_seed: u64,
+    ethanol_seed: u64,
+) -> Result<Vec<SpeciesGroup>> {
+    let wm = super::water_model_or_fallback();
+    let em = super::molecule_model_or_fallback("ethanol");
+    let eth = crate::potentials::ff::ethanol();
+    let spec = crate::datasets::spec("ethanol")?;
+    let water_systems = random_water_systems(n_water, 300.0, water_seed);
+    let eth_systems =
+        random_molecule_systems(&eth.coords, &eth.masses(), n_ethanol, 300.0, ethanol_seed);
+    Ok(vec![
+        water_group(&wm, &water_systems, 3, 2, 0.25)?,
+        generic_group("ethanol", &em, &eth.coords, &eth_systems, spec.n_nb, 3, 2, 0.25)?,
+    ])
+}
+
+pub fn measure_mixed_farm(
+    n_water: usize,
+    n_ethanol: usize,
+    ticks: usize,
+    mode: ParallelMode,
+) -> Result<FarmLedger> {
+    let mut farm = MoleculeFarm::new(mixed_farm_groups(n_water, n_ethanol, 17, 23)?, 1, mode)?;
+    farm.run(ticks)?;
+    farm.finish()
+}
+
 pub fn run(quick: bool) -> Result<Report> {
     let mut report = Report::new("§VI projection — NvN-MLMD at advanced process nodes");
     let rows = compute();
@@ -151,6 +194,53 @@ pub fn run(quick: bool) -> Result<Report> {
                 .collect(),
         ),
     );
+    // Mixed-species serving: the same farm machinery holding two
+    // species with their own per-shard models (water 3→…→2, ethanol
+    // 4·n_nb→…→3) — the heterogeneous-traffic point of the serving
+    // tier, with per-species molecule-steps/s.
+    let (n_water, n_eth, mixed_ticks) = if quick { (8, 4, 30) } else { (32, 16, 200) };
+    let mixed = measure_mixed_farm(n_water, n_eth, mixed_ticks, ParallelMode::Inline)?;
+    let farm_elapsed = mixed.host_wall.as_secs_f64();
+    let elapsed_rate = |steps: u64| if farm_elapsed > 0.0 { steps as f64 / farm_elapsed } else { 0.0 };
+    let mixed_table: Vec<Vec<String>> = mixed
+        .species
+        .iter()
+        .map(|sp| {
+            vec![
+                sp.name.clone(),
+                format!("{}", sp.n_molecules),
+                format!("{}", sp.n_atoms),
+                format!("{}", sp.molecule_steps),
+                format!("{:.0}", sp.steps_per_shard_second()),
+                format!("{:.0}", elapsed_rate(sp.molecule_steps)),
+            ]
+        })
+        .collect();
+    report.table(
+        "Mixed-species farm (per-shard models; host rates per species)",
+        &["species", "molecules", "atoms", "molecule-steps", "steps/shard-s", "steps/s elapsed"],
+        &mixed_table,
+    );
+    report.attach(
+        "mixed_farm",
+        Value::Arr(
+            mixed
+                .species
+                .iter()
+                .map(|sp| {
+                    json::obj(vec![
+                        ("species", json::s(&sp.name)),
+                        ("n_molecules", json::num(sp.n_molecules as f64)),
+                        ("n_atoms", json::num(sp.n_atoms as f64)),
+                        ("molecule_steps", json::num(sp.molecule_steps as f64)),
+                        ("steps_per_shard_s", json::num(sp.steps_per_shard_second())),
+                        ("steps_per_s_elapsed", json::num(elapsed_rate(sp.molecule_steps))),
+                        ("chip_inferences", json::num(sp.chip_inferences as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
     report.attach(
         "projections",
         Value::Arr(
@@ -185,6 +275,24 @@ mod tests {
         // baseline row is identity
         assert!((rows[0].a1 - 1.0).abs() < 1e-12);
         assert!((rows[0].a2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_farm_serves_both_species() {
+        let l = measure_mixed_farm(4, 2, 20, ParallelMode::Inline).unwrap();
+        assert_eq!(l.species.len(), 2);
+        assert_eq!(l.species[0].name, "water");
+        assert_eq!(l.species[1].name, "ethanol");
+        assert_eq!(l.species[0].molecule_steps, 80);
+        assert_eq!(l.species[1].molecule_steps, 40);
+        assert_eq!(l.molecule_steps, 120);
+        // distinct per-shard models: water chips serve 2 lanes/molecule,
+        // ethanol chips one lane per atom (9)
+        assert_eq!(l.species[0].chip_inferences, 80 * 2);
+        assert_eq!(l.species[1].chip_inferences, 40 * 9);
+        for sp in &l.species {
+            assert!(sp.steps_per_shard_second() > 0.0, "{} rate", sp.name);
+        }
     }
 
     #[test]

@@ -72,18 +72,26 @@ pub fn water_force_from_local(pos: &[Vec3], which_h: usize, c: [f64; 2]) -> Vec3
 /// Generic per-atom descriptor: 4 features per neighbor, neighbors fixed
 /// by the reference-topology ordering (`nb_idx`).
 pub fn local_descriptor(pos: &[Vec3], atom: usize, nb_idx: &[usize]) -> Vec<f64> {
-    let mut out = Vec::with_capacity(4 * nb_idx.len());
+    let mut out = vec![0.0; 4 * nb_idx.len()];
+    local_descriptor_into(pos, atom, nb_idx, &mut out);
+    out
+}
+
+/// Allocation-free form of [`local_descriptor`]: writes the 4·n_nb
+/// features into `out` (the serving hot path re-extracts every step, so
+/// the farm's generic-molecule FPGA owns this scratch).
+pub fn local_descriptor_into(pos: &[Vec3], atom: usize, nb_idx: &[usize], out: &mut [f64]) {
+    debug_assert_eq!(out.len(), 4 * nb_idx.len());
     let ri = pos[atom];
-    for &j in nb_idx {
+    for (k, &j) in nb_idx.iter().enumerate() {
         let d = pos[j] - ri;
         let r2 = d.norm_sq();
         let r = r2.sqrt();
-        out.push(1.0 / r);
-        out.push(d.x / r2);
-        out.push(d.y / r2);
-        out.push(d.z / r2);
+        out[4 * k] = 1.0 / r;
+        out[4 * k + 1] = d.x / r2;
+        out[4 * k + 2] = d.y / r2;
+        out[4 * k + 3] = d.z / r2;
     }
-    out
 }
 
 /// Keep the `n_nb` nearest candidate indices by `dist` (ties broken by
@@ -318,6 +326,21 @@ mod tests {
         // second neighbor atom 1 at distance 2
         assert!((d[4] - 0.5).abs() < 1e-12);
         assert!((d[5] - 0.5).abs() < 1e-12); // x/r² = 2/4
+    }
+
+    #[test]
+    fn descriptor_into_matches_allocating_form() {
+        let mut rng = Pcg::new(77);
+        let coords: Vec<Vec3> = (0..12)
+            .map(|_| Vec3::new(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), rng.range(-2.0, 2.0)))
+            .collect();
+        for atom in 0..coords.len() {
+            let nb = reference_neighbors(&coords, atom, 5);
+            let want = local_descriptor(&coords, atom, &nb);
+            let mut got = vec![0.0; 20];
+            local_descriptor_into(&coords, atom, &nb, &mut got);
+            assert_eq!(got, want, "atom {atom}");
+        }
     }
 
     #[test]

@@ -11,6 +11,9 @@
 
 pub mod rsqrt;
 
+use anyhow::Result;
+
+use crate::features;
 use crate::fixedpoint::{q13, Q13};
 use crate::hw::power::OpCounts;
 use crate::md::System;
@@ -35,6 +38,57 @@ pub const DT_FRAC: u32 = 14;
 
 fn sat_state(x: i64) -> i64 {
     x.clamp(STATE_MIN, STATE_MAX)
+}
+
+/// Encode a float into the 26-bit state format (frac 20, saturated) —
+/// the host CPU's initialization path, shared by the water and generic
+/// molecule FPGAs.
+fn enc_state(x: f64) -> i64 {
+    sat_state((x * (1i64 << STATE_FRAC) as f64).round() as i64)
+}
+
+/// Resolve per-feature power-of-two gains to wire shifts, validating the
+/// broadcast rule up front: length 0 = unit gain, length 1 = broadcast,
+/// length `dim` = per feature. Any other length is a hard error here —
+/// not an index-out-of-bounds panic deep in a broadcast arm (the old
+/// water path panicked on a 2-element scale).
+fn feature_shifts(dim: usize, scale: &[f64]) -> Result<Vec<i32>> {
+    anyhow::ensure!(
+        matches!(scale.len(), 0 | 1) || scale.len() == dim,
+        "feature scale length {} must be 0, 1, or {dim}",
+        scale.len()
+    );
+    (0..dim)
+        .map(|i| {
+            let s = match scale.len() {
+                0 => 1.0,
+                1 => scale[0],
+                _ => scale[i],
+            };
+            anyhow::ensure!(
+                s > 0.0 && s.log2().fract() == 0.0,
+                "feature scale {s} must be a power of two"
+            );
+            Ok(s.log2() as i32)
+        })
+        .collect()
+}
+
+/// Encode a physical feature center at the conditioning pipeline's
+/// frac-24 working precision.
+fn enc_center_raw24(c: f64) -> i64 {
+    (c * (1i64 << rsqrt_work_frac()) as f64).round() as i64
+}
+
+/// The conditioning stage on one frac-24 raw feature: (raw − center)
+/// << m, truncate to the Q13 bus, saturate — a constant subtract plus a
+/// wire shift in RTL. Shared by the water datapath and the generic
+/// [`FeatureConditioner`], so the two can never diverge.
+fn condition_raw24(raw24: i64, center_raw24: i64, shift: i32) -> Q13 {
+    let centered = raw24 - center_raw24;
+    let amplified = crate::fixedpoint::shift_raw(centered, shift);
+    let q = amplified >> (rsqrt_work_frac() - q13::FRAC);
+    Q13(q.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
 }
 
 /// Round-to-nearest right shift. The integrator MUST NOT truncate
@@ -92,7 +146,6 @@ impl WaterFpga {
     /// initialization path.
     pub fn new(sys: &System, dt_fs: f64) -> Self {
         assert_eq!(sys.len(), 3, "water FPGA expects [O, H1, H2]");
-        let enc_state = |v: f64| sat_state((v * (1i64 << STATE_FRAC) as f64).round() as i64);
         let mut pos = [[0i64; 3]; 3];
         let mut vel = [[0i64; 3]; 3];
         for i in 0..3 {
@@ -124,29 +177,27 @@ impl WaterFpga {
 
     /// Program the feature-conditioning constants (host init path).
     /// `center` is the per-feature physical center, `scale` the
-    /// power-of-two gain (as trained/exported by the model).
-    pub fn program_feature_conditioning(&mut self, center: &[f64], scale: &[f64]) {
+    /// power-of-two gain (as trained/exported by the model). Lengths are
+    /// validated up front (center: 0 or 3; scale: 0, 1, or 3; gains must
+    /// be powers of two) and bad inputs are a proper error — the old
+    /// broadcast arm indexed past a 2-element scale and panicked.
+    pub fn program_feature_conditioning(&mut self, center: &[f64], scale: &[f64]) -> Result<()> {
         if center.is_empty() {
             self.feat_center_raw = [0; 3];
             self.feat_shift = [0; 3];
-            return;
+            return Ok(());
         }
-        assert_eq!(center.len(), 3, "water feature center must be length 3");
+        anyhow::ensure!(
+            center.len() == 3,
+            "water feature center length {} must be 0 or 3",
+            center.len()
+        );
+        let shifts = feature_shifts(3, scale)?;
         for (slot, &c) in self.feat_center_raw.iter_mut().zip(center) {
-            *slot = (c * (1i64 << rsqrt_work_frac()) as f64).round() as i64;
+            *slot = enc_center_raw24(c);
         }
-        for i in 0..3 {
-            let s = match scale.len() {
-                0 => 1.0,
-                1 => scale[0],
-                _ => scale[i],
-            };
-            assert!(
-                s > 0.0 && s.log2().fract() == 0.0,
-                "feature scale {s} must be a power of two"
-            );
-            self.feat_shift[i] = s.log2() as i32;
-        }
+        self.feat_shift.copy_from_slice(&shifts);
+        Ok(())
     }
 
     /// Control-plane velocity rescale (the host CPU's weak-coupling
@@ -244,10 +295,7 @@ impl WaterFpga {
     /// Conditioning stage on one inverse distance (frac-24 raw in,
     /// Q13 out): (inv − c) << m, truncate, saturate.
     fn condition(&self, inv_raw24: i64, idx: usize) -> Q13 {
-        let centered = inv_raw24 - self.feat_center_raw[idx];
-        let amplified = crate::fixedpoint::shift_raw(centered, self.feat_shift[idx]);
-        let q = amplified >> (rsqrt_work_frac() - q13::FRAC);
-        Q13(q.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
+        condition_raw24(inv_raw24, self.feat_center_raw[idx], self.feat_shift[idx])
     }
 
     /// 1/|r_j − r_i| as high-precision raw (frac 24) plus the Q13 unit
@@ -286,7 +334,11 @@ impl WaterFpga {
             for a in 0..3 {
                 let fa = frames[hi].u_ho[a].mul(c[hi][0]).0 as i64
                     + frames[hi].u_hh[a].mul(c[hi][1]).0 as i64;
-                f[1 + hi][a] = fa << self.force_shift;
+                // Sign-aware wire shift: a model with output_scale < 1
+                // programs a *negative* force_shift (arithmetic right
+                // shift), which a raw `<<` would turn into an
+                // overflowing-shift panic.
+                f[1 + hi][a] = crate::fixedpoint::shift_raw(fa, self.force_shift);
             }
         }
         // Oxygen: F_O = −(F_H1 + F_H2).
@@ -317,53 +369,268 @@ impl WaterFpga {
     }
 }
 
-/// A zeroed feature frame — scratch-buffer fill value for the batched
-/// entry points below.
+/// A zeroed feature frame — initial value of the per-molecule frame
+/// scratch the farm's water serving path keeps between its extract and
+/// integrate stages (`coordinator::farm`).
 pub const ZERO_FRAME: HFeatures =
     HFeatures { d: [Q13::ZERO; 3], u_ho: [Q13::ZERO; 3], u_hh: [Q13::ZERO; 3] };
 
-/// Batched feature extraction over a shard of molecules: runs module (i)
-/// on every molecule and scatters the Q13 feature triples into the SoA
-/// layout the batched chip kernel consumes — feature `i` of lane `b` at
-/// `feats[i * lanes + b]`, where lane `b = 2·mol + h` (two hydrogens per
-/// molecule) and `lanes = 2 · mols.len()`.
-///
-/// `frames` (2 per molecule) and `feats` (3 per lane) are shard-owned
-/// scratch; this function allocates nothing. Per molecule it is the
-/// exact single-molecule `extract_features` datapath, so the farm
-/// inherits the coordinator's bit-identity guarantee.
-pub fn extract_features_batch(mols: &mut [WaterFpga], frames: &mut [HFeatures], feats: &mut [Q13]) {
-    let lanes = 2 * mols.len();
-    assert_eq!(frames.len(), lanes, "frames scratch: 2 per molecule");
-    assert_eq!(feats.len(), 3 * lanes, "feature scratch: 3 per lane");
-    for (m, fpga) in mols.iter_mut().enumerate() {
-        let fr = fpga.extract_features();
-        for (hi, f) in fr.iter().enumerate() {
-            let b = 2 * m + hi;
-            frames[b] = *f;
-            for (i, &d) in f.d.iter().enumerate() {
-                feats[i * lanes + b] = d;
-            }
+/// Float→Q13 feature-conditioning stage of the generic-molecule path —
+/// the exact integer stage of [`WaterFpga::program_feature_conditioning`]
+/// ((raw − center) << m at frac-24, truncate to the Q13 bus), applied to
+/// descriptors the FPGA computes in its float front-end. Lengths follow
+/// the same broadcast rule (center: 0 or dim; scale: 0, 1, or dim) and
+/// are validated at construction.
+#[derive(Debug, Clone)]
+pub struct FeatureConditioner {
+    /// Per-feature centers at frac-24 (all zero when unprogrammed).
+    center_raw: Vec<i64>,
+    /// Per-feature wire shifts (2^m gains).
+    shift: Vec<i32>,
+}
+
+impl FeatureConditioner {
+    pub fn new(dim: usize, center: &[f64], scale: &[f64]) -> Result<FeatureConditioner> {
+        anyhow::ensure!(dim > 0, "conditioner needs at least one feature");
+        anyhow::ensure!(
+            center.is_empty() || center.len() == dim,
+            "feature center length {} must be 0 or {dim}",
+            center.len()
+        );
+        if center.is_empty() {
+            // Unprogrammed: identity centering and unit gain, matching
+            // the water FPGA's reset state (scale is ignored there too).
+            return Ok(FeatureConditioner { center_raw: vec![0; dim], shift: vec![0; dim] });
         }
+        Ok(FeatureConditioner {
+            center_raw: center.iter().map(|&c| enc_center_raw24(c)).collect(),
+            shift: feature_shifts(dim, scale)?,
+        })
+    }
+
+    /// Conditioned descriptor width (features per lane).
+    pub fn dim(&self) -> usize {
+        self.center_raw.len()
+    }
+
+    /// Condition one raw feature onto the Q13 bus: encode at the
+    /// pipeline's frac-24 working precision, then the shared integer
+    /// subtract-shift-truncate stage.
+    pub fn q13(&self, i: usize, raw: f64) -> Q13 {
+        condition_raw24(enc_center_raw24(raw), self.center_raw[i], self.shift[i])
     }
 }
 
-/// Batched force reconstruction + N3L + integration over a shard:
-/// consumes the chips' SoA outputs (output `o` of lane `b` at
-/// `c[o * lanes + b]`, lanes as in [`extract_features_batch`]) and
-/// advances every molecule one step via the exact single-molecule
-/// `integrate` datapath. Allocation-free.
-pub fn integrate_batch(mols: &mut [WaterFpga], frames: &[HFeatures], c: &[Q13]) {
-    let lanes = 2 * mols.len();
-    assert_eq!(frames.len(), lanes, "frames scratch: 2 per molecule");
-    assert_eq!(c.len(), 2 * lanes, "force input: 2 per lane");
-    for (m, fpga) in mols.iter_mut().enumerate() {
-        let fr = [frames[2 * m], frames[2 * m + 1]];
-        let cc = [
-            [c[2 * m], c[lanes + 2 * m]],
-            [c[2 * m + 1], c[lanes + 2 * m + 1]],
-        ];
-        fpga.integrate(&fr, cc);
+/// The generic-molecule FPGA: the water pipeline's integration datapath
+/// generalized to N atoms, fronted by the `features::local_descriptor`
+/// path (4·n_nb features per atom) and the [`FeatureConditioner`].
+///
+/// Signal plan (DESIGN.md §Substitutions): positions and velocities live
+/// in the same 26-bit state registers as [`WaterFpga`]; the descriptor
+/// front-end consumes the truncated 13-bit bus view of the positions and
+/// evaluates the DeePMD-style `(1/r, x/r², y/r², z/r²)` neighbor block
+/// in the float rsqrt pipeline (the conditioning stage then truncates
+/// each feature to the Q13 chip bus). The chip predicts the Cartesian
+/// per-atom force `F / 2^force_shift` directly (3 outputs per atom lane,
+/// as the Table-I datasets are labeled), so integration needs no local
+/// frame reconstruction and no N3L pass — each atom's lane carries its
+/// own force.
+#[derive(Debug, Clone)]
+pub struct MoleculeFpga {
+    /// 26-bit (frac 20) position/velocity state, [atom][axis].
+    pos: Vec<[i64; 3]>,
+    vel: Vec<[i64; 3]>,
+    /// dt·ACC_CONV/m per atom, raw frac-24.
+    c_raw: Vec<i64>,
+    /// dt, raw frac-14.
+    dt_raw: i64,
+    /// Power-of-two force rescale undone at integration (see
+    /// [`WaterFpga::force_shift`]).
+    pub force_shift: i32,
+    /// Fixed reference-topology neighbor ordering, `n_nb` per atom.
+    nb: Vec<Vec<usize>>,
+    cond: FeatureConditioner,
+    /// Scratch: decoded bus positions and one atom's raw descriptor
+    /// (owned here so extraction allocates nothing).
+    pos_f: Vec<Vec3>,
+    feat_f: Vec<f64>,
+    pub ops: OpCounts,
+    pub steps: u64,
+}
+
+impl MoleculeFpga {
+    /// Initialize from a float system, a per-atom neighbor ordering
+    /// (`n_nb` entries each, e.g. `features::reference_neighbors`), and
+    /// a programmed conditioning stage of width `4·n_nb`.
+    pub fn new(
+        sys: &System,
+        nb: Vec<Vec<usize>>,
+        cond: FeatureConditioner,
+        dt_fs: f64,
+    ) -> Result<MoleculeFpga> {
+        let n = sys.len();
+        anyhow::ensure!(n >= 2, "molecule FPGA needs at least two atoms");
+        anyhow::ensure!(nb.len() == n, "neighbor lists: {} for {n} atoms", nb.len());
+        let n_nb = nb[0].len();
+        anyhow::ensure!(n_nb >= 1, "descriptor needs at least one neighbor");
+        for (i, l) in nb.iter().enumerate() {
+            anyhow::ensure!(
+                l.len() == n_nb,
+                "atom {i}: ragged neighbor list ({} vs {n_nb}) — lanes must share one width",
+                l.len()
+            );
+            for &j in l {
+                anyhow::ensure!(j < n && j != i, "atom {i}: bad neighbor index {j}");
+            }
+        }
+        anyhow::ensure!(
+            cond.dim() == 4 * n_nb,
+            "conditioner width {} != descriptor width {}",
+            cond.dim(),
+            4 * n_nb
+        );
+        let mut pos = vec![[0i64; 3]; n];
+        let mut vel = vec![[0i64; 3]; n];
+        for i in 0..n {
+            let p = sys.pos[i].to_array();
+            let v = sys.vel[i].to_array();
+            for a in 0..3 {
+                pos[i][a] = enc_state(p[a]);
+                vel[i][a] = enc_state(v[a]);
+            }
+        }
+        let c_raw = sys
+            .masses
+            .iter()
+            .map(|&m| ((dt_fs * ACC_CONV / m) * (1i64 << CONST_FRAC) as f64).round() as i64)
+            .collect();
+        Ok(MoleculeFpga {
+            pos,
+            vel,
+            c_raw,
+            dt_raw: (dt_fs * (1i64 << DT_FRAC) as f64).round() as i64,
+            force_shift: 0,
+            nb,
+            cond,
+            pos_f: vec![Vec3::ZERO; n],
+            feat_f: vec![0.0; 4 * n_nb],
+            ops: OpCounts::default(),
+            steps: 0,
+        })
+    }
+
+    pub fn n_atoms(&self) -> usize {
+        self.pos.len()
+    }
+
+    pub fn n_nb(&self) -> usize {
+        self.nb[0].len()
+    }
+
+    /// Conditioned descriptor width per atom lane (the chip `in_dim`).
+    pub fn in_dim(&self) -> usize {
+        self.cond.dim()
+    }
+
+    /// Decode current positions to float (analysis taps).
+    pub fn positions(&self) -> Vec<Vec3> {
+        self.pos.iter().map(|p| Self::dec_state(p)).collect()
+    }
+
+    pub fn velocities(&self) -> Vec<Vec3> {
+        self.vel.iter().map(|v| Self::dec_state(v)).collect()
+    }
+
+    fn dec_state(r: &[i64; 3]) -> Vec3 {
+        let s = (1i64 << STATE_FRAC) as f64;
+        Vec3::new(r[0] as f64 / s, r[1] as f64 / s, r[2] as f64 / s)
+    }
+
+    /// Position of atom `i` as seen on the truncated 13-bit inter-module
+    /// bus — the view the descriptor front-end consumes, matching the
+    /// water feature module.
+    fn bus_pos(&self, i: usize) -> Vec3 {
+        let d = |a: usize| {
+            let raw = self.pos[i][a] >> (STATE_FRAC - q13::FRAC);
+            raw.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as f64 * q13::LSB
+        };
+        Vec3::new(d(0), d(1), d(2))
+    }
+
+    /// Extract every atom's conditioned Q13 descriptor into an SoA
+    /// feature block: feature `i` of this molecule's atom `a` lands at
+    /// `feats[i * batch + lane0 + a]` (one chip lane per atom). The
+    /// block may be shared with other molecules of a farm shard —
+    /// `batch` is the shard's total lane count and `lane0` this
+    /// molecule's first lane. Allocation-free.
+    pub fn extract_features_soa(&mut self, feats: &mut [Q13], batch: usize, lane0: usize) {
+        let n = self.pos.len();
+        let in_dim = self.cond.dim();
+        assert_eq!(feats.len(), in_dim * batch, "SoA feature block size");
+        assert!(lane0 + n <= batch, "molecule lanes exceed the batch");
+        for i in 0..n {
+            let p = self.bus_pos(i);
+            self.pos_f[i] = p;
+        }
+        for atom in 0..n {
+            features::local_descriptor_into(&self.pos_f, atom, &self.nb[atom], &mut self.feat_f);
+            for (fi, &raw) in self.feat_f.iter().enumerate() {
+                feats[fi * batch + lane0 + atom] = self.cond.q13(fi, raw);
+            }
+        }
+        // Energy model, per neighbor pair: 3 coordinate diffs + 2
+        // accumulations (adds), 3 squares + 4 Newton multiplies + 4
+        // feature multiplies (mults), one rsqrt LUT read; per feature:
+        // one centering subtract and one gain shift.
+        let pairs = (n * self.n_nb()) as u64;
+        self.ops.adds += 5 * pairs + 4 * pairs;
+        self.ops.mults += 11 * pairs;
+        self.ops.shifts += 4 * pairs;
+        self.ops.sram_reads += pairs;
+    }
+
+    /// Consume the chip's SoA outputs (output `o` of atom `a` at
+    /// `c[o * batch + lane0 + a]`, 3 Cartesian force components per atom
+    /// lane, each `F / 2^force_shift`) and advance every atom one
+    /// semi-implicit Euler step on the exact water MAC datapath
+    /// (round-to-nearest renormalization — see [`rshift_round`]).
+    pub fn integrate_soa(&mut self, c: &[Q13], batch: usize, lane0: usize) {
+        let n = self.pos.len();
+        assert_eq!(c.len(), 3 * batch, "SoA force block size");
+        assert!(lane0 + n <= batch, "molecule lanes exceed the batch");
+        for i in 0..n {
+            for a in 0..3 {
+                // Force raw frac-10, rescaled by the free (sign-aware)
+                // wire shift — see the matching note in
+                // [`WaterFpga::integrate`].
+                let f = crate::fixedpoint::shift_raw(c[a * batch + lane0 + i].0 as i64, self.force_shift);
+                // F frac 10 × c frac 24 → frac 34 → state frac 20.
+                let dv = rshift_round(f * self.c_raw[i], 10 + CONST_FRAC - STATE_FRAC);
+                self.vel[i][a] = sat_state(self.vel[i][a] + dv);
+                // v frac 20 × dt frac 14 → frac 34 → frac 20.
+                let dr = rshift_round(self.vel[i][a] * self.dt_raw, DT_FRAC);
+                self.pos[i][a] = sat_state(self.pos[i][a] + dr);
+            }
+        }
+        let n = n as u64;
+        self.ops.shifts += 3 * n;
+        self.ops.mults += 6 * n;
+        self.ops.adds += 6 * n;
+        self.ops.reg_writes_bits += 6 * n * 26;
+        self.steps += 1;
+    }
+
+    /// Modelled FPGA cycles of one step of this molecule (feature +
+    /// integration stages; transfer/control windows are accounted per
+    /// shard tick): per neighbor pair one distance pipeline (diff,
+    /// square, accumulate ≈ 4 cycles) plus one rsqrt (LUT + 2 Newton
+    /// stages ≈ 6 cycles, shared across the pair's 4 features); per atom
+    /// the integrator's 3-axis MAC + state update (≈ 2 cycles each) —
+    /// the same per-stage model `hw::timing::StepCycles::water` uses.
+    pub fn cycles_per_step(&self) -> u64 {
+        let n = self.pos.len() as u64;
+        let pairs = n * self.n_nb() as u64;
+        10 * pairs + 6 * n + 6
     }
 }
 
@@ -522,67 +789,30 @@ mod tests {
     }
 
     #[test]
-    fn batched_entry_points_match_single_molecule_path() {
-        // Two molecules, perturbed differently, stepped 50 times through
-        // the batched entry points vs the per-molecule calls: positions
-        // and op counters must be bit-identical.
-        let mut sys_a = eq_system();
-        sys_a.pos[1] += Vec3::new(0.02, -0.01, 0.015);
-        sys_a.vel[1] = Vec3::new(0.004, 0.002, -0.003);
-        let mut sys_b = eq_system();
-        sys_b.pos[2] += Vec3::new(-0.015, 0.01, 0.02);
-        sys_b.vel[2] = Vec3::new(-0.003, 0.001, 0.002);
-
-        let mut batch = vec![WaterFpga::new(&sys_a, 0.25), WaterFpga::new(&sys_b, 0.25)];
-        let mut solo = vec![WaterFpga::new(&sys_a, 0.25), WaterFpga::new(&sys_b, 0.25)];
-
-        let lanes = 2 * batch.len();
-        let mut frames = vec![ZERO_FRAME; lanes];
-        let mut feats = vec![Q13::ZERO; 3 * lanes];
-        // fixed chip outputs per lane (the integration datapath is what
-        // is under test, not the network)
-        let mut c = vec![Q13::ZERO; 2 * lanes];
-        for (b, v) in c.iter_mut().enumerate() {
-            *v = Q13(((b as i32) - 3) * 7);
-        }
-        for _ in 0..50 {
-            extract_features_batch(&mut batch, &mut frames, &mut feats);
-            integrate_batch(&mut batch, &frames, &c);
-            for (m, fpga) in solo.iter_mut().enumerate() {
-                let fr = fpga.extract_features();
-                // lane b = 2m+hi; outputs o at c[o*lanes + b]
-                let cc = [
-                    [c[2 * m], c[lanes + 2 * m]],
-                    [c[2 * m + 1], c[lanes + 2 * m + 1]],
-                ];
-                fpga.integrate(&fr, cc);
-            }
-        }
-        for (a, b) in batch.iter().zip(&solo) {
-            assert_eq!(a.positions(), b.positions());
-            assert_eq!(a.velocities(), b.velocities());
-            assert_eq!(a.ops, b.ops);
-            assert_eq!(a.steps, b.steps);
-        }
-    }
-
-    #[test]
-    fn batched_features_scatter_soa_layout() {
+    fn negative_force_shift_is_a_right_shift_not_a_panic() {
+        // output_scale = 0.5 programs force_shift = −1: the rescale must
+        // be the paper's sign-aware P(x, n) wire shift, not a raw `<<`
+        // (which panics on negative shift amounts in debug builds).
         let sys = eq_system();
-        let mut batch = vec![WaterFpga::new(&sys, 0.25)];
-        let mut reference = WaterFpga::new(&sys, 0.25);
-        let lanes = 2;
-        let mut frames = vec![ZERO_FRAME; lanes];
-        let mut feats = vec![Q13::ZERO; 3 * lanes];
-        extract_features_batch(&mut batch, &mut frames, &mut feats);
-        let want = reference.extract_features();
-        for hi in 0..2 {
-            for i in 0..3 {
-                assert_eq!(feats[i * lanes + hi], want[hi].d[i], "h{hi} feature {i}");
-            }
-            assert_eq!(frames[hi].u_ho, want[hi].u_ho);
-            assert_eq!(frames[hi].u_hh, want[hi].u_hh);
-        }
+        let mut fpga = WaterFpga::new(&sys, 0.25);
+        fpga.force_shift = -1;
+        let frames = fpga.extract_features();
+        fpga.integrate(&frames, [[Q13(100), Q13(-50)]; 2]);
+        assert!(fpga.positions()[1].norm().is_finite());
+
+        let mol = crate::potentials::ff::ethanol();
+        let msys = System::new(mol.coords.clone(), mol.masses());
+        let nb: Vec<Vec<usize>> = (0..msys.len())
+            .map(|i| features::reference_neighbors(&mol.coords, i, 4))
+            .collect();
+        let cond = FeatureConditioner::new(16, &[], &[]).unwrap();
+        let mut g = MoleculeFpga::new(&msys, nb, cond, 0.25).unwrap();
+        g.force_shift = -1;
+        let n = g.n_atoms();
+        let c = vec![Q13(101); 3 * n];
+        g.integrate_soa(&c, n, 0);
+        assert_eq!(g.steps, 1);
+        assert!(g.positions()[0].norm().is_finite());
     }
 
     #[test]
@@ -595,6 +825,161 @@ mod tests {
         assert!(fpga.ops.mults > before.mults);
         assert!(fpga.ops.adds > before.adds);
         assert_eq!(fpga.steps, 1);
+    }
+
+    #[test]
+    fn conditioning_validates_scale_lengths() {
+        // Regression: scale.len() == 2 used to panic with an
+        // index-out-of-bounds in the broadcast arm; every length is now
+        // validated up front. Lengths 0 (unit), 1 (broadcast) and 3
+        // (per-feature) are accepted, anything else is a proper error.
+        let sys = eq_system();
+        let mut fpga = WaterFpga::new(&sys, 0.25);
+        let center = [1.0, 0.7, 1.0];
+        fpga.program_feature_conditioning(&center, &[]).unwrap();
+        assert_eq!(fpga.feat_shift, [0, 0, 0]);
+        fpga.program_feature_conditioning(&center, &[4.0]).unwrap();
+        assert_eq!(fpga.feat_shift, [2, 2, 2]);
+        fpga.program_feature_conditioning(&center, &[1.0, 2.0, 4.0]).unwrap();
+        assert_eq!(fpga.feat_shift, [0, 1, 2]);
+        let err = fpga.program_feature_conditioning(&center, &[2.0, 2.0]);
+        assert!(err.is_err(), "2-element scale must be rejected, not panic");
+        assert!(err.unwrap_err().to_string().contains("length 2"));
+        // non-power-of-two and non-positive gains are rejected too
+        assert!(fpga.program_feature_conditioning(&center, &[3.0]).is_err());
+        assert!(fpga.program_feature_conditioning(&center, &[-2.0]).is_err());
+        // bad center length is an error, not an assert
+        assert!(fpga.program_feature_conditioning(&[1.0, 0.7], &[]).is_err());
+        // empty center resets the stage and ignores scale (unprogrammed)
+        fpga.program_feature_conditioning(&[], &[2.0, 2.0]).unwrap();
+        assert_eq!(fpga.feat_shift, [0, 0, 0]);
+        assert_eq!(fpga.feat_center_raw, [0, 0, 0]);
+    }
+
+    #[test]
+    fn feature_conditioner_matches_water_stage() {
+        // The generic float→Q13 conditioner must reproduce the water
+        // FPGA's integer conditioning stage exactly when fed the same
+        // frac-24 raw values.
+        let sys = eq_system();
+        let mut fpga = WaterFpga::new(&sys, 0.25);
+        let center = [0.9, 0.6, 0.95];
+        let scale = [2.0, 4.0, 2.0];
+        fpga.program_feature_conditioning(&center, &scale).unwrap();
+        let cond = FeatureConditioner::new(3, &center, &scale).unwrap();
+        for step in 0..200 {
+            let raw = 0.25 + 0.007 * step as f64; // covers the feature range
+            let raw24 = enc_center_raw24(raw);
+            for i in 0..3 {
+                assert_eq!(cond.q13(i, raw), fpga.condition(raw24, i), "feature {i} raw {raw}");
+            }
+        }
+        // broadcast rule mirrors the water path
+        assert!(FeatureConditioner::new(3, &center, &[2.0, 2.0]).is_err());
+        let unit = FeatureConditioner::new(4, &[], &[]).unwrap();
+        assert_eq!(unit.dim(), 4);
+        assert_eq!(unit.q13(0, 1.0), Q13::from_f64(1.0));
+    }
+
+    #[test]
+    fn molecule_fpga_rejects_bad_topology() {
+        let mol = crate::potentials::ff::ethanol();
+        let sys = System::new(mol.coords.clone(), mol.masses());
+        let n = sys.len();
+        let nb: Vec<Vec<usize>> = (0..n)
+            .map(|i| features::reference_neighbors(&mol.coords, i, 4))
+            .collect();
+        let cond = FeatureConditioner::new(16, &[], &[]).unwrap();
+        assert!(MoleculeFpga::new(&sys, nb.clone(), cond.clone(), 0.25).is_ok());
+        // ragged neighbor lists
+        let mut ragged = nb.clone();
+        ragged[2].pop();
+        assert!(MoleculeFpga::new(&sys, ragged, cond.clone(), 0.25).is_err());
+        // conditioner width mismatch
+        let narrow = FeatureConditioner::new(8, &[], &[]).unwrap();
+        assert!(MoleculeFpga::new(&sys, nb.clone(), narrow, 0.25).is_err());
+        // self-neighbor
+        let mut selfish = nb.clone();
+        selfish[0][0] = 0;
+        assert!(MoleculeFpga::new(&sys, selfish, cond.clone(), 0.25).is_err());
+        // missing lists
+        assert!(MoleculeFpga::new(&sys, nb[..n - 1].to_vec(), cond, 0.25).is_err());
+    }
+
+    #[test]
+    fn molecule_fpga_features_match_descriptor_reference() {
+        // The SoA extraction must equal `local_descriptor` on the bus
+        // view of the positions, conditioned feature by feature.
+        let mol = crate::potentials::ff::ethanol();
+        let sys = System::new(mol.coords.clone(), mol.masses());
+        let n = sys.len();
+        let n_nb = 4usize;
+        let nb: Vec<Vec<usize>> = (0..n)
+            .map(|i| features::reference_neighbors(&mol.coords, i, n_nb))
+            .collect();
+        let center = vec![0.4; 16];
+        let scale = vec![2.0; 16];
+        let cond = FeatureConditioner::new(16, &center, &scale).unwrap();
+        let mut fpga = MoleculeFpga::new(&sys, nb.clone(), cond.clone(), 0.25).unwrap();
+        let batch = n + 3; // molecule embedded mid-batch
+        let lane0 = 2usize;
+        let mut feats = vec![Q13::ZERO; 16 * batch];
+        fpga.extract_features_soa(&mut feats, batch, lane0);
+        // reference: descriptor on the decoded bus positions
+        let bus: Vec<Vec3> = (0..n).map(|i| fpga.bus_pos(i)).collect();
+        for atom in 0..n {
+            let want = features::local_descriptor(&bus, atom, &nb[atom]);
+            for (fi, &raw) in want.iter().enumerate() {
+                assert_eq!(
+                    feats[fi * batch + lane0 + atom],
+                    cond.q13(fi, raw),
+                    "atom {atom} feature {fi}"
+                );
+            }
+        }
+        assert!(fpga.ops.mults > 0 && fpga.ops.adds > 0);
+    }
+
+    #[test]
+    fn molecule_fpga_integration_tracks_float_euler() {
+        // Drive the generic integrator with exact FF forces quantized
+        // like the chip interface; it must track float semi-implicit
+        // Euler closely over a short run (same tolerance class as the
+        // water test).
+        let mol = crate::potentials::ff::ethanol();
+        let ffield = crate::potentials::MoleculeFF { mol };
+        let mut sys = System::new(ffield.mol.coords.clone(), ffield.mol.masses());
+        sys.pos[3] += Vec3::new(0.02, -0.015, 0.01);
+        let n = sys.len();
+        let dt = 0.25;
+        let nb: Vec<Vec<usize>> = (0..n)
+            .map(|i| features::reference_neighbors(&ffield.mol.coords, i, 4))
+            .collect();
+        let cond = FeatureConditioner::new(16, &[], &[]).unwrap();
+        let mut fpga = MoleculeFpga::new(&sys, nb, cond, dt).unwrap();
+        let mut float_sys = sys.clone();
+        let mut forces = vec![Vec3::ZERO; n];
+        ffield.compute(&float_sys.pos, &mut forces);
+        let batch = n;
+        let mut c = vec![Q13::ZERO; 3 * batch];
+        for _ in 0..200 {
+            let pos_fx = fpga.positions();
+            let mut f_fx = vec![Vec3::ZERO; n];
+            ffield.compute(&pos_fx, &mut f_fx);
+            for i in 0..n {
+                let f = f_fx[i].to_array();
+                for a in 0..3 {
+                    c[a * batch + i] = Q13::from_f64(f[a]);
+                }
+            }
+            fpga.integrate_soa(&c, batch, 0);
+            crate::md::euler_step(&mut float_sys, &ffield, dt, &mut forces);
+        }
+        for i in 0..n {
+            let d = (fpga.positions()[i] - float_sys.pos[i]).norm();
+            assert!(d < 0.02, "atom {i} diverged by {d} Å");
+        }
+        assert_eq!(fpga.steps, 200);
     }
 
     #[test]

@@ -95,6 +95,21 @@ impl Mlp {
         }
     }
 
+    /// The power-of-two force rescale the hardware undoes at force
+    /// reconstruction: the model predicts `F / output_scale`, and the
+    /// shift datapath can only apply a 2^m gain. Validates
+    /// `output_scale` and returns `m = log2(output_scale)`. Shared by
+    /// every fixed-point serving path (water and generic molecules), so
+    /// they can never diverge on the protocol.
+    pub fn force_shift(&self) -> Result<i32> {
+        anyhow::ensure!(
+            self.output_scale > 0.0 && self.output_scale.log2().fract() == 0.0,
+            "output_scale {} must be a power of two for the shift datapath",
+            self.output_scale
+        );
+        Ok(self.output_scale.log2() as i32)
+    }
+
     /// Apply the feature-conditioning stage to raw features.
     pub fn condition(&self, x: &[f64]) -> Vec<f64> {
         if self.feature_center.is_empty() {
