@@ -1,0 +1,239 @@
+#!/usr/bin/env python3
+"""Generate the core-profile golden vectors (rust/tests/core_golden.rs).
+
+Replicates the crate's exact integer datapath — the Q13 SQNN kernel, the
+phi/tanh activation units, the fixed-point rsqrt, the 26-bit integrator
+MAC and the feature-conditioning stage — in arbitrary-precision Python
+integers, and prints the expected outputs as Rust arrays. The Rust test
+hardcodes these vectors and asserts byte-identity in BOTH build profiles
+(default and --no-default-features), so the core/host refactor can never
+change a single output bit without CI noticing.
+
+Python's ``>>`` on negative ints is floor division by a power of two —
+exactly the arithmetic right shift the RTL (and Rust's ``>>`` on signed
+ints) performs — so every emulation below is bit-exact by construction.
+
+Usage: python3 python/gen_golden.py   (prints the Rust const bodies)
+"""
+
+import math
+
+# ---------------------------------------------------------------- Q13
+
+MAX_RAW, MIN_RAW = 4095, -4096
+FRAC = 10
+
+
+def sat(x):
+    return max(MIN_RAW, min(MAX_RAW, x))
+
+
+def shift_raw(x, n):
+    return x << n if n >= 0 else x >> (-n)
+
+
+def round_half_away(x):
+    """f64::round semantics for x >= 0."""
+    f = math.floor(x)
+    return f + 1 if x - f >= 0.5 else f
+
+
+def phi_q13(x):
+    # activation.rs::phi_q13: comparators, Q13 mul (truncate), >>2, sub.
+    if x >= 2 << FRAC:
+        return 1 << FRAC
+    if x <= -(2 << FRAC):
+        return -(1 << FRAC)
+    xa = sat(-x) if x < 0 else x          # Q13::abs (saturating)
+    sq = sat((x * xa) >> FRAC)            # Q13::mul
+    return sat(x - sat(shift_raw(sq, -2)))  # sub(shift(-2))
+
+
+def tanh_q13(x):
+    # activation.rs::tanh_q13 via the baked TANH_Q13 table.
+    mag = min(abs(x), MAX_RAW)
+    t = round_half_away(math.tanh(mag / (1 << FRAC)) * (1 << FRAC))
+    return -t if x < 0 else t
+
+
+ACT = {"phi": phi_q13, "tanh": tanh_q13}
+
+# ------------------------------------------------------------- SQNN
+
+def forward(layers, activation, output_activation, x):
+    """sqnn.rs::forward_q13_into, weights row-major (sign, [exps])."""
+    cur = list(x)
+    for li, (out_dim, in_dim, w, b) in enumerate(layers):
+        act = li + 1 < len(layers) or output_activation
+        nxt = []
+        for j in range(out_dim):
+            acc = b[j]  # wide accumulator
+            for i in range(in_dim):
+                sign, exps = w[j * in_dim + i]
+                if sign == 0:
+                    continue
+                wsum = sum(shift_raw(cur[i], e) for e in exps)
+                acc += -wsum if sign < 0 else wsum
+            v = sat(acc)
+            nxt.append(ACT[activation](v) if act else v)
+        cur = nxt
+    return cur
+
+
+# The phi network: [4, 3, 2], linear output layer, k = 3.
+NET_PHI = [
+    (3, 4,
+     [(1, [0]), (-1, [-1]), (1, [-2, -4]), (0, []),
+      (-1, [1]), (1, [0, -3]), (0, []), (1, [-2]),
+      (1, [-1]), (1, [-5]), (-1, [0, -2, -6]), (-1, [-3])],
+     [100, -250, 37]),
+    (2, 3,
+     [(1, [0, -2]), (-1, [-1, -3]), (1, [-4]),
+      (-1, [0]), (1, [-2]), (1, [1, -5])],
+     [-64, 512]),
+]
+X_PHI = [
+    [1024, -512, 2048, 300],
+    [4095, -4096, 4095, -4096],
+    [0, 0, 0, 0],
+    [-37, 1, 4095, -2000],
+    [123, -456, 789, -1012],
+]
+
+# The tanh network: [3, 3], activated output (exercises the table path).
+NET_TANH = [
+    (3, 3,
+     [(1, [1]), (-1, [-2]), (1, [0]),
+      (0, []), (1, [0, -1, -4]), (-1, [-2]),
+      (-1, [1, -6]), (1, [-3]), (1, [0])],
+     [-128, 640, 5]),
+]
+X_TANH = [
+    [512, -1024, 2000],
+    [4095, 4095, -4096],
+    [-100, 200, -300],
+]
+
+# ------------------------------------------------------------- rsqrt
+
+SEED_FRAC, LUT_SIZE, WORK_FRAC = 12, 64, 24
+LUT = [round_half_away((1.0 / math.sqrt(1.0 + 3.0 * (i + 0.5) / LUT_SIZE))
+                       * (1 << SEED_FRAC))
+       for i in range(LUT_SIZE)]
+
+
+def rsqrt_raw(x_raw, frac_in, frac_out, iters):
+    if x_raw <= 0:
+        return (2 ** 63 - 1) // 2
+    m, k = x_raw, 0
+    lo, hi = 1 << frac_in, 1 << (frac_in + 2)
+    while m < lo:
+        m <<= 2
+        k += 1
+    while m >= hi:
+        m >>= 2
+        k -= 1
+    idx = min((m - lo) * LUT_SIZE // (hi - lo), LUT_SIZE - 1)
+    y = LUT[idx] << (WORK_FRAC - SEED_FRAC)
+    for _ in range(iters):
+        ysq = (y * y) >> WORK_FRAC
+        t = (m * ysq) >> frac_in
+        y = (y * ((3 << WORK_FRAC) - t)) >> (WORK_FRAC + 1)
+    return shift_raw(y, k + frac_out - WORK_FRAC)
+
+
+RSQRT_IN = [1 << 20, 3 << 18, 5 << 21, 1234567, 7 << 20,
+            (1 << 20) * 2 + 12345, 999, 14 << 20, 1 << 26]
+
+# --------------------------------------------------------- integrator
+
+STATE_FRAC, CONST_FRAC, DT_FRAC = 20, 24, 14
+STATE_MAX, STATE_MIN = (1 << 25) - 1, -(1 << 25)
+
+
+def sat_state(x):
+    return max(STATE_MIN, min(STATE_MAX, x))
+
+
+def rshift_round(x, n):
+    return (x + (1 << (n - 1))) >> n
+
+
+def mac_step(pos, vel, f, c, dt):
+    dv = rshift_round(f * c, 10 + CONST_FRAC - STATE_FRAC)
+    vel = sat_state(vel + dv)
+    dr = rshift_round(vel * dt, DT_FRAC)
+    pos = sat_state(pos + dr)
+    return pos, vel
+
+
+MAC_C, MAC_DT = 174763, 4096  # arbitrary mass constant; dt = 0.25 at frac 14
+MAC_FORCES = [1024, -2048, 300, -1, 0, 4095, -4096, 77]
+
+
+def condition_raw24(raw24, center, shift):
+    q = shift_raw(raw24 - center, shift) >> (WORK_FRAC - FRAC)
+    return sat(q)
+
+
+COND_IN = [  # (raw24, center_raw24, shift)
+    (1 << 24, (1 << 24) - (1 << 20), 2),
+    (7 << 22, 1 << 23, 1),
+    (123456789, 100000000, 0),
+    (4 << 24, 0, 4),
+    (-(4 << 24), 0, 4),
+    (1 << 24, 0, -1),
+    (5555555, 7777777, 3),
+]
+
+# ------------------------------------------------------------ emit
+
+
+def rust_rows(vals, per_row=8, indent="    "):
+    lines = []
+    for i in range(0, len(vals), per_row):
+        lines.append(indent + ", ".join(str(v) for v in vals[i:i + per_row]) + ",")
+    return "\n".join(lines)
+
+
+def main():
+    print("// NET_PHI expected (per lane, 2 outputs):")
+    for x in X_PHI:
+        print(f"//   {x} -> {forward(NET_PHI, 'phi', False, x)}")
+    print("PHI_EXPECTED:")
+    print(rust_rows([v for x in X_PHI for v in forward(NET_PHI, 'phi', False, x)]))
+
+    print("// NET_TANH expected (per lane, 3 outputs):")
+    for x in X_TANH:
+        print(f"//   {x} -> {forward(NET_TANH, 'tanh', True, x)}")
+    print("TANH_EXPECTED:")
+    print(rust_rows([v for x in X_TANH for v in forward(NET_TANH, 'tanh', True, x)]))
+
+    print("RSQRT (in, out24_iters2, out10_iters1):")
+    for x in RSQRT_IN:
+        print(f"    ({x}, {rsqrt_raw(x, 20, 24, 2)}, {rsqrt_raw(x, 20, 10, 1)}),")
+
+    print("MAC trajectory (f, pos, vel) from rest:")
+    pos = vel = 0
+    for f in MAC_FORCES:
+        pos, vel = mac_step(pos, vel, f, MAC_C, MAC_DT)
+        print(f"    ({f}, {pos}, {vel}),")
+    print("MAC saturation (3 steps f=1<<20 c=1<<24 dt=1<<14):")
+    pos = vel = 0
+    for _ in range(3):
+        pos, vel = mac_step(pos, vel, 1 << 20, 1 << 24, 1 << 14)
+        print(f"    ({pos}, {vel}),")
+
+    print("CONDITION (raw24, center, shift, q13):")
+    for raw, c, s in COND_IN:
+        print(f"    ({raw}, {c}, {s}, {condition_raw24(raw, c, s)}),")
+
+    spots = [-4096, -2048, -2047, -1024, -333, -1, 0, 1, 777, 1024, 2047, 2048, 4095]
+    print("PHI spots (in, out):")
+    print("    " + ", ".join(f"({x}, {phi_q13(x)})" for x in spots))
+    print("TANH spots (in, out):")
+    print("    " + ", ".join(f"({x}, {tanh_q13(x)})" for x in spots))
+
+
+if __name__ == "__main__":
+    main()

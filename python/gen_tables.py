@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Regenerate the core-profile const tables.
+
+The embedded core profile (`cargo build --no-default-features`) cannot
+compute float seed tables at startup (no libm, no OnceLock), so two
+tables are baked into the source as consts:
+
+* ``rust/src/fpga/rsqrt.rs``   — ``RSQRT_SEED_LUT`` (64 entries, frac 12)
+* ``rust/src/nn/tanh_table.rs``— ``TANH_Q13`` (4096 entries, frac 10)
+
+Both are reproducible bit-for-bit from any faithfully-rounded libm: the
+closest any entry comes to a rounding tie is ~8e-5 ULP-of-the-target-grid
+(this script asserts the margin), while double tanh/sqrt are accurate to
+<1 ulp (~1e-16 relative). Host-side Rust tests recompute each table in
+float and assert exact equality, so CI proves the consts match the
+expressions they replaced.
+
+Usage: python3 python/gen_tables.py   (prints the formatted table bodies)
+"""
+
+import math
+
+TIE_MARGIN = 1e-6
+
+
+def round_half_away(x: float) -> int:
+    """f64::round semantics: round half away from zero (x >= 0 here)."""
+    f = math.floor(x)
+    return f + 1 if x - f >= 0.5 else f
+
+
+def check_tie(x: float, what: str) -> None:
+    frac = x - math.floor(x)
+    assert abs(frac - 0.5) > TIE_MARGIN, f"{what}: value {x} too close to a tie"
+
+
+def rsqrt_seed_lut() -> list[int]:
+    out = []
+    for i in range(64):
+        # m midpoint in [1, 4) — mirrors the original Rust expression
+        m = 1.0 + 3.0 * (i + 0.5) / 64.0
+        v = (1.0 / math.sqrt(m)) * float(1 << 12)
+        check_tie(v, f"rsqrt lut[{i}]")
+        out.append(round_half_away(v))
+    return out
+
+
+def tanh_q13() -> list[int]:
+    out = []
+    for i in range(4096):
+        v = math.tanh(i / 1024.0) * 1024.0
+        check_tie(v, f"tanh[{i}]")
+        out.append(round_half_away(v))
+    return out
+
+
+def fmt_rows(vals: list[int], per: int, width: int) -> str:
+    rows = []
+    for r in range(0, len(vals), per):
+        rows.append(
+            "    " + ", ".join(str(v).rjust(width) for v in vals[r : r + per]) + ","
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print("// RSQRT_SEED_LUT")
+    print(fmt_rows(rsqrt_seed_lut(), 8, 4))
+    print("// TANH_Q13")
+    print(fmt_rows(tanh_q13(), 12, 4))

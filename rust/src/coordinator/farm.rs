@@ -261,6 +261,41 @@ pub fn generic_group(
     shards: usize,
     dt_fs: f64,
 ) -> Result<SpeciesGroup> {
+    generic_group_impl(name, model, ref_coords, systems, n_nb, k, shards, dt_fs, None)
+}
+
+/// Build a bulk (periodic) species group: same descriptor path as
+/// [`generic_group`] but the neighbor ordering is minimum-imaged over the
+/// cubic `box_l` cell and every device runs with wrapped positions
+/// ([`MoleculeFpga::new_pbc`]) — silicon-class crystals on the same
+/// batched serving path as molecules.
+#[allow(clippy::too_many_arguments)]
+pub fn generic_group_pbc(
+    name: &str,
+    model: &Mlp,
+    ref_coords: &[Vec3],
+    systems: &[System],
+    n_nb: usize,
+    k: usize,
+    shards: usize,
+    dt_fs: f64,
+    box_l: f64,
+) -> Result<SpeciesGroup> {
+    generic_group_impl(name, model, ref_coords, systems, n_nb, k, shards, dt_fs, Some(box_l))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn generic_group_impl(
+    name: &str,
+    model: &Mlp,
+    ref_coords: &[Vec3],
+    systems: &[System],
+    n_nb: usize,
+    k: usize,
+    shards: usize,
+    dt_fs: f64,
+    box_l: Option<f64>,
+) -> Result<SpeciesGroup> {
     let n = ref_coords.len();
     anyhow::ensure!(
         n_nb >= 1 && n_nb < n,
@@ -275,7 +310,10 @@ pub fn generic_group(
     );
     let force_shift = model.force_shift()?;
     let nb: Vec<Vec<usize>> = (0..n)
-        .map(|i| features::reference_neighbors(ref_coords, i, n_nb))
+        .map(|i| match box_l {
+            Some(l) => features::reference_neighbors_pbc(ref_coords, i, n_nb, l),
+            None => features::reference_neighbors(ref_coords, i, n_nb),
+        })
         .collect();
     let cond = FeatureConditioner::new(4 * n_nb, &model.feature_center, &model.feature_scale)?;
     let mols = systems
@@ -286,7 +324,10 @@ pub fn generic_group(
                 "species {name:?}: system has {} atoms, reference {n}",
                 sys.len()
             );
-            let mut f = MoleculeFpga::new(sys, nb.clone(), cond.clone(), dt_fs)?;
+            let mut f = match box_l {
+                Some(l) => MoleculeFpga::new_pbc(sys, nb.clone(), cond.clone(), dt_fs, l)?,
+                None => MoleculeFpga::new(sys, nb.clone(), cond.clone(), dt_fs)?,
+            };
             f.force_shift = force_shift;
             Ok(Box::new(GenericServed { fpga: f }) as Box<dyn ServedMolecule>)
         })
@@ -993,6 +1034,70 @@ mod tests {
         let ledger = farm.finish().unwrap();
         assert_eq!(ledger.fpga_ops, fpga.ops);
         assert_eq!(ledger.chip_inferences, 300 * n as u64);
+    }
+
+    #[test]
+    fn silicon_pbc_group_matches_unbatched_reference() {
+        // The PBC satellite's acceptance: a bulk silicon cell served on
+        // the generic batched path (minimum-image descriptors, wrapped
+        // state) must be bit-identical to the same MoleculeFpga stepped
+        // with scalar per-lane Sqnn inference.
+        let (sw, coords) = crate::potentials::StillingerWeber::diamond_supercell(1);
+        let box_l = sw.box_l;
+        let n = coords.len();
+        let masses = vec![28.0855; n];
+        let n_nb = 4usize;
+        let model = toy_generic_model(n_nb);
+        let systems = random_molecule_systems(&coords, &masses, 3, 300.0, 17);
+        let group = generic_group_pbc(
+            "silicon", &model, &coords, &systems, n_nb, 3, 2, 0.5, box_l,
+        )
+        .unwrap();
+        let mut farm = MoleculeFarm::new(vec![group], 1, ParallelMode::Inline).unwrap();
+        farm.run(200).unwrap();
+
+        // Reference path: scalar inference lane by lane on system 0.
+        let net = Sqnn::from_mlp(&model, 3);
+        let nb: Vec<Vec<usize>> = (0..n)
+            .map(|i| features::reference_neighbors_pbc(&coords, i, n_nb, box_l))
+            .collect();
+        let cond =
+            FeatureConditioner::new(4 * n_nb, &model.feature_center, &model.feature_scale)
+                .unwrap();
+        let mut fpga = MoleculeFpga::new_pbc(&systems[0], nb, cond, 0.5, box_l).unwrap();
+        fpga.force_shift = model.force_shift().unwrap();
+        let in_dim = 4 * n_nb;
+        let batch = n;
+        let mut feats = vec![Q13::ZERO; in_dim * batch];
+        let mut outs = vec![Q13::ZERO; 3 * batch];
+        let mut lane = vec![Q13::ZERO; in_dim];
+        for _ in 0..200 {
+            fpga.extract_features_soa(&mut feats, batch, 0);
+            for b in 0..batch {
+                for (i, slot) in lane.iter_mut().enumerate() {
+                    *slot = feats[i * batch + b];
+                }
+                let y = net.forward_q13(&lane);
+                for (o, &v) in y.iter().enumerate() {
+                    outs[o * batch + b] = v;
+                }
+            }
+            fpga.integrate_soa(&outs, batch, 0);
+        }
+        let got = farm.positions().unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], fpga.positions(), "batched PBC farm diverged from scalar reference");
+        // Every served cell stays wrapped inside the box.
+        for cell in &got {
+            for p in cell {
+                for x in p.to_array() {
+                    assert!((0.0..box_l).contains(&x), "position {x} escaped [0, {box_l})");
+                }
+            }
+        }
+        let ledger = farm.finish().unwrap();
+        assert_eq!(ledger.molecule_steps, 3 * 200);
+        assert_eq!(ledger.chip_inferences, 3 * 200 * n as u64);
     }
 
     #[test]

@@ -1,0 +1,70 @@
+//! Typed errors of the **core** (embedded) layer.
+//!
+//! The core profile (`--no-default-features`) has no `anyhow`, so every
+//! fallible core API returns this small enum instead. The host layer
+//! converts transparently: under `std` the enum implements
+//! [`std::error::Error`], so `?` lifts a [`CoreError`] into
+//! `anyhow::Result` at the seam with no glue code.
+
+use core::fmt;
+
+use alloc::string::String;
+
+/// Error type of the float-free integer datapath.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoreError {
+    /// `Activation::from_name` saw a name outside the activation table.
+    UnknownActivation(String),
+    /// An SQNN layer exceeds the packed fast path's stack scratch
+    /// ([`crate::nn::sqnn::MAX_WIDTH`]).
+    LayerTooWide { width: usize, max: usize },
+    /// An SQNN was constructed with no layers.
+    EmptyNetwork,
+    /// Adjacent SQNN layers disagree on their shared dimension, or a
+    /// layer's weight/bias vectors do not match its declared shape.
+    LayerShapeMismatch { layer: usize },
+}
+
+impl fmt::Display for CoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CoreError::UnknownActivation(name) => {
+                write!(f, "unknown activation {name:?}")
+            }
+            CoreError::LayerTooWide { width, max } => {
+                write!(f, "layer width {width} exceeds the packed fast path ({max})")
+            }
+            CoreError::EmptyNetwork => write!(f, "SQNN needs at least one layer"),
+            CoreError::LayerShapeMismatch { layer } => {
+                write!(f, "SQNN layer {layer}: dimension/shape mismatch")
+            }
+        }
+    }
+}
+
+#[cfg(feature = "std")]
+impl std::error::Error for CoreError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = CoreError::UnknownActivation("relu".into());
+        assert!(e.to_string().contains("relu"));
+        let e = CoreError::LayerTooWide { width: 200, max: 128 };
+        assert!(e.to_string().contains("200") && e.to_string().contains("128"));
+        assert!(CoreError::EmptyNetwork.to_string().contains("layer"));
+        assert!(CoreError::LayerShapeMismatch { layer: 2 }.to_string().contains('2'));
+    }
+
+    #[test]
+    fn lifts_into_anyhow_at_the_seam() {
+        fn host() -> anyhow::Result<()> {
+            Err(CoreError::EmptyNetwork)?
+        }
+        let err = host().unwrap_err();
+        assert!(err.to_string().contains("SQNN"));
+    }
+}

@@ -7,7 +7,7 @@
 use anyhow::Result;
 
 use crate::analysis::rmse_vecs;
-use crate::nn::Sqnn;
+use crate::nn::ConditionedSqnn;
 use crate::util::json::{self, Value};
 
 use super::{load_dataset, load_model, Report};
@@ -39,7 +39,7 @@ pub fn compute() -> Result<Vec<SystemSweep>> {
             let m = load_model(&format!("{name}_qnn_k{k}"))?;
             // chip-level evaluation: Q13 features, shift-add MACs; the
             // output rescale is the FPGA's free power-of-two shift
-            let s = Sqnn::from_mlp(&m, k);
+            let s = ConditionedSqnn::from_mlp(&m, k);
             let scale = m.output_scale;
             let preds: Vec<Vec<f64>> = ds
                 .test_x

@@ -146,18 +146,32 @@ pub fn reference_neighbors_pbc(
 
 /// Periodic descriptor (minimum-image displacements).
 pub fn local_descriptor_pbc(pos: &[Vec3], atom: usize, nb_idx: &[usize], box_l: f64) -> Vec<f64> {
-    let mut out = Vec::with_capacity(4 * nb_idx.len());
+    let mut out = vec![0.0; 4 * nb_idx.len()];
+    local_descriptor_pbc_into(pos, atom, nb_idx, box_l, &mut out);
+    out
+}
+
+/// Allocation-free form of [`local_descriptor_pbc`] — the periodic
+/// counterpart of [`local_descriptor_into`], used by the generic
+/// molecule FPGA's serving hot path for bulk (PBC) systems.
+pub fn local_descriptor_pbc_into(
+    pos: &[Vec3],
+    atom: usize,
+    nb_idx: &[usize],
+    box_l: f64,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), 4 * nb_idx.len());
     let ri = pos[atom];
-    for &j in nb_idx {
+    for (k, &j) in nb_idx.iter().enumerate() {
         let d = (pos[j] - ri).min_image(box_l);
         let r2 = d.norm_sq();
         let r = r2.sqrt();
-        out.push(1.0 / r);
-        out.push(d.x / r2);
-        out.push(d.y / r2);
-        out.push(d.z / r2);
+        out[4 * k] = 1.0 / r;
+        out[4 * k + 1] = d.x / r2;
+        out[4 * k + 2] = d.y / r2;
+        out[4 * k + 3] = d.z / r2;
     }
-    out
 }
 
 #[cfg(test)]

@@ -17,6 +17,11 @@
 //! RTL): float→fixed conversion rounds to nearest (ties away from zero),
 //! datapath multiplies/shifts truncate toward −∞ (Verilog `>>>`), and all
 //! datapath results saturate symmetrically at the format limits.
+//!
+//! Core/host seam: the integer datapath (raw add/sub/mul/shift, `Q13`,
+//! [`shift_raw`]) compiles in the embedded core profile; the float
+//! encode/decode conveniences are host-only (`std`), keeping the core
+//! float-free.
 
 pub mod q13;
 pub use q13::Q13;
@@ -49,19 +54,23 @@ impl FxFormat {
     pub fn min_raw(&self) -> i64 {
         -(1i64 << (self.total_bits - 1))
     }
-    /// Value of one least-significant bit.
+    /// Value of one least-significant bit (host-side float view).
+    #[cfg(feature = "std")]
     pub fn lsb(&self) -> f64 {
         (2f64).powi(-(self.frac_bits as i32))
     }
     /// Largest representable value.
+    #[cfg(feature = "std")]
     pub fn max_value(&self) -> f64 {
         self.max_raw() as f64 * self.lsb()
     }
     /// Smallest representable value.
+    #[cfg(feature = "std")]
     pub fn min_value(&self) -> f64 {
         self.min_raw() as f64 * self.lsb()
     }
     /// Encode a float: round to nearest, saturate.
+    #[cfg(feature = "std")]
     pub fn encode(&self, x: f64) -> i64 {
         if x.is_nan() {
             return 0;
@@ -71,10 +80,12 @@ impl FxFormat {
         r.clamp(self.min_raw(), self.max_raw())
     }
     /// Decode a raw value to float.
+    #[cfg(feature = "std")]
     pub fn decode(&self, raw: i64) -> f64 {
         raw as f64 * self.lsb()
     }
     /// Quantize a float through this format (encode∘decode).
+    #[cfg(feature = "std")]
     pub fn quantize(&self, x: f64) -> f64 {
         self.decode(self.encode(x))
     }
@@ -92,9 +103,11 @@ pub struct Fix {
 }
 
 impl Fix {
+    #[cfg(feature = "std")]
     pub fn from_f64(x: f64, fmt: FxFormat) -> Self {
         Fix { raw: fmt.encode(x), fmt }
     }
+    #[cfg(feature = "std")]
     pub fn to_f64(self) -> f64 {
         self.fmt.decode(self.raw)
     }

@@ -33,7 +33,9 @@ impl Q13 {
     pub const MAX: Q13 = Q13(MAX_RAW);
     pub const MIN: Q13 = Q13(MIN_RAW);
 
-    /// Round-to-nearest, saturating conversion from f64.
+    /// Round-to-nearest, saturating conversion from f64 (host side; the
+    /// core profile works on raw Q13 only).
+    #[cfg(feature = "std")]
     #[inline]
     pub fn from_f64(x: f64) -> Q13 {
         if x.is_nan() {
@@ -49,6 +51,7 @@ impl Q13 {
         }
     }
 
+    #[cfg(feature = "std")]
     #[inline(always)]
     pub fn to_f64(self) -> f64 {
         self.0 as f64 * LSB

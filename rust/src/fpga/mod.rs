@@ -8,987 +8,24 @@
 //! RTL practice (a 13-bit state register cannot hold a 0.002 Å/step
 //! velocity increment) — while a `strict13` mode stores state in Q13 too,
 //! used by the ablation bench to demonstrate the resulting drift.
+//!
+//! Layering (the crate's core/host seam): the per-tick integer
+//! arithmetic — signal formats, saturation, the MAC step, conditioning,
+//! rsqrt — lives in the float-free [`qint`] and [`rsqrt`] submodules and
+//! builds under `--no-default-features`. The devices themselves
+//! (`WaterFpga`, `MoleculeFpga`, `FeatureConditioner`) are the
+//! `std`-only host layer: topology, float initialization/decoding and
+//! op accounting around that shared core.
 
+pub mod qint;
 pub mod rsqrt;
 
-use anyhow::Result;
+#[cfg(feature = "std")]
+mod host;
 
-use crate::features;
-use crate::fixedpoint::{q13, Q13};
-use crate::hw::power::OpCounts;
-use crate::md::System;
-use crate::util::units::ACC_CONV;
-use crate::util::Vec3;
+#[cfg(feature = "std")]
+pub use host::*;
 
-/// Working fraction of the rsqrt / conditioning pipeline.
-const fn rsqrt_work_frac() -> u32 {
-    24
-}
-
-/// Fraction bits of the integrator state (26-bit registers).
-pub const STATE_FRAC: u32 = 20;
-/// Saturation bound of the 26-bit state registers.
-const STATE_MAX: i64 = (1 << 25) - 1;
-const STATE_MIN: i64 = -(1 << 25);
-/// Fraction bits of the per-atom dt·ACC/m constants (set by the host at
-/// initialization — "CPU for initialization and control", Fig. 1).
-pub const CONST_FRAC: u32 = 24;
-/// Fraction bits of the dt constant.
-pub const DT_FRAC: u32 = 14;
-
-fn sat_state(x: i64) -> i64 {
-    x.clamp(STATE_MIN, STATE_MAX)
-}
-
-/// Encode a float into the 26-bit state format (frac 20, saturated) —
-/// the host CPU's initialization path, shared by the water and generic
-/// molecule FPGAs.
-fn enc_state(x: f64) -> i64 {
-    sat_state((x * (1i64 << STATE_FRAC) as f64).round() as i64)
-}
-
-/// Resolve per-feature power-of-two gains to wire shifts, validating the
-/// broadcast rule up front: length 0 = unit gain, length 1 = broadcast,
-/// length `dim` = per feature. Any other length is a hard error here —
-/// not an index-out-of-bounds panic deep in a broadcast arm (the old
-/// water path panicked on a 2-element scale).
-fn feature_shifts(dim: usize, scale: &[f64]) -> Result<Vec<i32>> {
-    anyhow::ensure!(
-        matches!(scale.len(), 0 | 1) || scale.len() == dim,
-        "feature scale length {} must be 0, 1, or {dim}",
-        scale.len()
-    );
-    (0..dim)
-        .map(|i| {
-            let s = match scale.len() {
-                0 => 1.0,
-                1 => scale[0],
-                _ => scale[i],
-            };
-            anyhow::ensure!(
-                s > 0.0 && s.log2().fract() == 0.0,
-                "feature scale {s} must be a power of two"
-            );
-            Ok(s.log2() as i32)
-        })
-        .collect()
-}
-
-/// Encode a physical feature center at the conditioning pipeline's
-/// frac-24 working precision.
-fn enc_center_raw24(c: f64) -> i64 {
-    (c * (1i64 << rsqrt_work_frac()) as f64).round() as i64
-}
-
-/// The conditioning stage on one frac-24 raw feature: (raw − center)
-/// << m, truncate to the Q13 bus, saturate — a constant subtract plus a
-/// wire shift in RTL. Shared by the water datapath and the generic
-/// [`FeatureConditioner`], so the two can never diverge.
-fn condition_raw24(raw24: i64, center_raw24: i64, shift: i32) -> Q13 {
-    let centered = raw24 - center_raw24;
-    let amplified = crate::fixedpoint::shift_raw(centered, shift);
-    let q = amplified >> (rsqrt_work_frac() - q13::FRAC);
-    Q13(q.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
-}
-
-/// Round-to-nearest right shift. The integrator MUST NOT truncate
-/// (arithmetic >> rounds toward −∞): a −½-LSB systematic bias on every
-/// velocity increment pumps net momentum into the system — the molecule's
-/// center of mass accelerates until the ±4 Å Q13 position bus saturates
-/// and the geometry collapses (found the hard way; see the
-/// `no_systematic_momentum_pumping` test).
-#[inline(always)]
-fn rshift_round(x: i64, n: u32) -> i64 {
-    (x + (1i64 << (n - 1))) >> n
-}
-
-/// Per-hydrogen output of the feature module: the Q13 feature triple and
-/// the Q13 unit vectors of the local bond frame (reused by the force
-/// reconstruction).
-#[derive(Debug, Clone, Copy)]
-pub struct HFeatures {
-    pub d: [Q13; 3],
-    pub u_ho: [Q13; 3],
-    pub u_hh: [Q13; 3],
-}
-
-/// The water-system FPGA: feature extraction + integration + state.
-#[derive(Debug, Clone)]
-pub struct WaterFpga {
-    /// Position/velocity state, raw 26-bit (frac 20), [atom][axis],
-    /// atoms ordered [O, H1, H2].
-    pos: [[i64; 3]; 3],
-    vel: [[i64; 3]; 3],
-    /// dt·ACC_CONV/m per atom, raw frac-24.
-    c_raw: [i64; 3],
-    /// dt, raw frac-14.
-    dt_raw: i64,
-    /// Strict 13-bit state (ablation mode).
-    pub strict13: bool,
-    /// Power-of-two force rescale applied at reconstruction: the chip
-    /// predicts F / 2^force_shift (so the Q13 output range covers the
-    /// force distribution); the FPGA undoes it with a free left shift.
-    pub force_shift: i32,
-    /// Feature conditioning (programmed by the host at init): the raw
-    /// inverse distances are centered by these frac-24 constants and
-    /// amplified by 2^feat_shift before truncation to the Q13 bus — a
-    /// constant subtract + wire shift in RTL. Indexed like the feature
-    /// triple (r_aO, r_ab, r_bO ⇒ per-pair constants by distance kind).
-    feat_center_raw: [i64; 3],
-    feat_shift: [i32; 3],
-    /// Operation counters (energy model).
-    pub ops: OpCounts,
-    pub steps: u64,
-}
-
-impl WaterFpga {
-    /// Initialize from a float system ([O, H1, H2]) — the host CPU's
-    /// initialization path.
-    pub fn new(sys: &System, dt_fs: f64) -> Self {
-        assert_eq!(sys.len(), 3, "water FPGA expects [O, H1, H2]");
-        let mut pos = [[0i64; 3]; 3];
-        let mut vel = [[0i64; 3]; 3];
-        for i in 0..3 {
-            let p = sys.pos[i].to_array();
-            let v = sys.vel[i].to_array();
-            for a in 0..3 {
-                pos[i][a] = enc_state(p[a]);
-                vel[i][a] = enc_state(v[a]);
-            }
-        }
-        let mut c_raw = [0i64; 3];
-        for i in 0..3 {
-            let c = dt_fs * ACC_CONV / sys.masses[i];
-            c_raw[i] = (c * (1i64 << CONST_FRAC) as f64).round() as i64;
-        }
-        WaterFpga {
-            pos,
-            vel,
-            c_raw,
-            dt_raw: (dt_fs * (1i64 << DT_FRAC) as f64).round() as i64,
-            strict13: false,
-            force_shift: 0,
-            feat_center_raw: [0; 3],
-            feat_shift: [0; 3],
-            ops: OpCounts::default(),
-            steps: 0,
-        }
-    }
-
-    /// Program the feature-conditioning constants (host init path).
-    /// `center` is the per-feature physical center, `scale` the
-    /// power-of-two gain (as trained/exported by the model). Lengths are
-    /// validated up front (center: 0 or 3; scale: 0, 1, or 3; gains must
-    /// be powers of two) and bad inputs are a proper error — the old
-    /// broadcast arm indexed past a 2-element scale and panicked.
-    pub fn program_feature_conditioning(&mut self, center: &[f64], scale: &[f64]) -> Result<()> {
-        if center.is_empty() {
-            self.feat_center_raw = [0; 3];
-            self.feat_shift = [0; 3];
-            return Ok(());
-        }
-        anyhow::ensure!(
-            center.len() == 3,
-            "water feature center length {} must be 0 or 3",
-            center.len()
-        );
-        let shifts = feature_shifts(3, scale)?;
-        for (slot, &c) in self.feat_center_raw.iter_mut().zip(center) {
-            *slot = enc_center_raw24(c);
-        }
-        self.feat_shift.copy_from_slice(&shifts);
-        Ok(())
-    }
-
-    /// Control-plane velocity rescale (the host CPU's weak-coupling
-    /// thermostat, Fig. 1's "CPU for initialization and control"):
-    /// multiply the velocity state by a frac-24 constant.
-    pub fn scale_velocities(&mut self, lambda: f64) {
-        let lam = (lambda * (1i64 << CONST_FRAC) as f64).round() as i64;
-        for i in 0..3 {
-            for a in 0..3 {
-                self.vel[i][a] = sat_state(rshift_round(self.vel[i][a] * lam, CONST_FRAC));
-            }
-        }
-        self.ops.mults += 9;
-    }
-
-    /// Decode current positions to float (for analysis taps).
-    pub fn positions(&self) -> Vec<Vec3> {
-        (0..3)
-            .map(|i| {
-                Vec3::new(
-                    self.pos[i][0] as f64 / (1i64 << STATE_FRAC) as f64,
-                    self.pos[i][1] as f64 / (1i64 << STATE_FRAC) as f64,
-                    self.pos[i][2] as f64 / (1i64 << STATE_FRAC) as f64,
-                )
-            })
-            .collect()
-    }
-
-    pub fn velocities(&self) -> Vec<Vec3> {
-        (0..3)
-            .map(|i| {
-                Vec3::new(
-                    self.vel[i][0] as f64 / (1i64 << STATE_FRAC) as f64,
-                    self.vel[i][1] as f64 / (1i64 << STATE_FRAC) as f64,
-                    self.vel[i][2] as f64 / (1i64 << STATE_FRAC) as f64,
-                )
-            })
-            .collect()
-    }
-
-    /// Position of atom `i` on the 13-bit inter-module bus (truncated).
-    fn pos_q13(&self, i: usize, a: usize) -> Q13 {
-        let raw = self.pos[i][a] >> (STATE_FRAC - q13::FRAC);
-        Q13(raw.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
-    }
-
-    /// Quantize state through Q13 (strict13 ablation: the state registers
-    /// themselves are 13-bit).
-    fn apply_strict13(&mut self) {
-        if !self.strict13 {
-            return;
-        }
-        let round = |raw: &mut i64| {
-            let q = (*raw >> (STATE_FRAC - q13::FRAC))
-                .clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64);
-            *raw = q << (STATE_FRAC - q13::FRAC);
-        };
-        for i in 0..3 {
-            for a in 0..3 {
-                round(&mut self.pos[i][a]);
-                round(&mut self.vel[i][a]);
-            }
-        }
-    }
-
-    /// Feature-extraction module: Q13 features and frames for both
-    /// hydrogens. Distances are computed from the 13-bit bus view of the
-    /// positions (module (i) consumes 13-bit signals); the inverse
-    /// distances pass through the conditioning stage (constant subtract
-    /// + 2^m gain at frac-24 precision) before truncation to the Q13 bus.
-    pub fn extract_features(&mut self) -> [HFeatures; 2] {
-        let mut out = [HFeatures { d: [Q13::ZERO; 3], u_ho: [Q13::ZERO; 3], u_hh: [Q13::ZERO; 3] }; 2];
-        for (hi, h) in [1usize, 2].iter().enumerate() {
-            let other = 3 - h;
-            let (inv_ho, u_ho) = self.inv_dist_and_unit(*h, 0);
-            let (inv_hh, u_hh) = self.inv_dist_and_unit(*h, other);
-            let (inv_oo, _) = self.inv_dist_and_unit(other, 0); // r_bO
-            out[hi] = HFeatures {
-                d: [
-                    self.condition(inv_ho, 0),
-                    self.condition(inv_hh, 1),
-                    self.condition(inv_oo, 2),
-                ],
-                u_ho,
-                u_hh,
-            };
-        }
-        self.ops.shifts += 6 + 6; // rsqrt normalizations + gain shifts
-        self.ops.adds += 6 * 3 + 6; // diffs + accumulations + centering
-        self.ops.mults += 6 * 3 + 6 * 4; // squares + Newton multiplies (×2 iter)
-        self.ops.sram_reads += 6; // LUT reads
-        out
-    }
-
-    /// Conditioning stage on one inverse distance (frac-24 raw in,
-    /// Q13 out): (inv − c) << m, truncate, saturate.
-    fn condition(&self, inv_raw24: i64, idx: usize) -> Q13 {
-        condition_raw24(inv_raw24, self.feat_center_raw[idx], self.feat_shift[idx])
-    }
-
-    /// 1/|r_j − r_i| as high-precision raw (frac 24) plus the Q13 unit
-    /// vector (r_j − r_i)/r.
-    fn inv_dist_and_unit(&self, i: usize, j: usize) -> (i64, [Q13; 3]) {
-        let mut d = [Q13::ZERO; 3];
-        let mut r2_raw: i64 = 0; // frac 20
-        for a in 0..3 {
-            let diff = self.pos_q13(j, a).sub(self.pos_q13(i, a));
-            d[a] = diff;
-            r2_raw += (diff.0 as i64) * (diff.0 as i64); // frac 20
-        }
-        let inv24 = rsqrt::rsqrt_raw(r2_raw, STATE_FRAC, rsqrt_work_frac(), 2);
-        let inv_q13 = Q13(
-            (inv24 >> (rsqrt_work_frac() - q13::FRAC))
-                .clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32,
-        );
-        let mut u = [Q13::ZERO; 3];
-        for a in 0..3 {
-            u[a] = d[a].mul(inv_q13);
-        }
-        (inv24, u)
-    }
-
-    /// Force reconstruction + Newton's-third-law oxygen force +
-    /// integration (module (iii), Eqs. (2)–(3)). `c` are the two chips'
-    /// local-frame outputs [(c1, c2); 2], frames from `extract_features`.
-    pub fn integrate(&mut self, frames: &[HFeatures; 2], c: [[Q13; 2]; 2]) {
-        // Reconstruct Cartesian hydrogen forces on the 13-bit datapath.
-        // Note the wide (i64) accumulation before the rescale shift: the
-        // rescaled force feeds the 26-bit-constant multiply below, so no
-        // 13-bit saturation applies between reconstruction and use —
-        // matching an RTL that fuses reconstruct→rescale→MAC.
-        let mut f = [[0i64; 3]; 3]; // raw frac-10, wide
-        for hi in 0..2 {
-            for a in 0..3 {
-                let fa = frames[hi].u_ho[a].mul(c[hi][0]).0 as i64
-                    + frames[hi].u_hh[a].mul(c[hi][1]).0 as i64;
-                // Sign-aware wire shift: a model with output_scale < 1
-                // programs a *negative* force_shift (arithmetic right
-                // shift), which a raw `<<` would turn into an
-                // overflowing-shift panic.
-                f[1 + hi][a] = crate::fixedpoint::shift_raw(fa, self.force_shift);
-            }
-        }
-        // Oxygen: F_O = −(F_H1 + F_H2).
-        for a in 0..3 {
-            f[0][a] = -(f[1][a] + f[2][a]);
-        }
-        self.ops.mults += 12;
-        self.ops.adds += 12;
-
-        // Integrate. v += F·c_i (13×26-bit multiply, renormalized);
-        // r += v·dt.
-        for i in 0..3 {
-            for a in 0..3 {
-                // F raw frac 10 × c raw frac 24 → frac 34 → state frac 20,
-                // rounded (not truncated — see rshift_round).
-                let dv = rshift_round(f[i][a] * self.c_raw[i], 10 + CONST_FRAC - STATE_FRAC);
-                self.vel[i][a] = sat_state(self.vel[i][a] + dv);
-                // v frac 20 × dt frac 14 → frac 34 → frac 20.
-                let dr = rshift_round(self.vel[i][a] * self.dt_raw, DT_FRAC);
-                self.pos[i][a] = sat_state(self.pos[i][a] + dr);
-            }
-        }
-        self.ops.mults += 18;
-        self.ops.adds += 18;
-        self.ops.reg_writes_bits += 18 * 26;
-        self.steps += 1;
-        self.apply_strict13();
-    }
-}
-
-/// A zeroed feature frame — initial value of the per-molecule frame
-/// scratch the farm's water serving path keeps between its extract and
-/// integrate stages (`coordinator::farm`).
-pub const ZERO_FRAME: HFeatures =
-    HFeatures { d: [Q13::ZERO; 3], u_ho: [Q13::ZERO; 3], u_hh: [Q13::ZERO; 3] };
-
-/// Float→Q13 feature-conditioning stage of the generic-molecule path —
-/// the exact integer stage of [`WaterFpga::program_feature_conditioning`]
-/// ((raw − center) << m at frac-24, truncate to the Q13 bus), applied to
-/// descriptors the FPGA computes in its float front-end. Lengths follow
-/// the same broadcast rule (center: 0 or dim; scale: 0, 1, or dim) and
-/// are validated at construction.
-#[derive(Debug, Clone)]
-pub struct FeatureConditioner {
-    /// Per-feature centers at frac-24 (all zero when unprogrammed).
-    center_raw: Vec<i64>,
-    /// Per-feature wire shifts (2^m gains).
-    shift: Vec<i32>,
-}
-
-impl FeatureConditioner {
-    pub fn new(dim: usize, center: &[f64], scale: &[f64]) -> Result<FeatureConditioner> {
-        anyhow::ensure!(dim > 0, "conditioner needs at least one feature");
-        anyhow::ensure!(
-            center.is_empty() || center.len() == dim,
-            "feature center length {} must be 0 or {dim}",
-            center.len()
-        );
-        if center.is_empty() {
-            // Unprogrammed: identity centering and unit gain, matching
-            // the water FPGA's reset state (scale is ignored there too).
-            return Ok(FeatureConditioner { center_raw: vec![0; dim], shift: vec![0; dim] });
-        }
-        Ok(FeatureConditioner {
-            center_raw: center.iter().map(|&c| enc_center_raw24(c)).collect(),
-            shift: feature_shifts(dim, scale)?,
-        })
-    }
-
-    /// Conditioned descriptor width (features per lane).
-    pub fn dim(&self) -> usize {
-        self.center_raw.len()
-    }
-
-    /// Condition one raw feature onto the Q13 bus: encode at the
-    /// pipeline's frac-24 working precision, then the shared integer
-    /// subtract-shift-truncate stage.
-    pub fn q13(&self, i: usize, raw: f64) -> Q13 {
-        condition_raw24(enc_center_raw24(raw), self.center_raw[i], self.shift[i])
-    }
-}
-
-/// The generic-molecule FPGA: the water pipeline's integration datapath
-/// generalized to N atoms, fronted by the `features::local_descriptor`
-/// path (4·n_nb features per atom) and the [`FeatureConditioner`].
-///
-/// Signal plan (DESIGN.md §Substitutions): positions and velocities live
-/// in the same 26-bit state registers as [`WaterFpga`]; the descriptor
-/// front-end consumes the truncated 13-bit bus view of the positions and
-/// evaluates the DeePMD-style `(1/r, x/r², y/r², z/r²)` neighbor block
-/// in the float rsqrt pipeline (the conditioning stage then truncates
-/// each feature to the Q13 chip bus). The chip predicts the Cartesian
-/// per-atom force `F / 2^force_shift` directly (3 outputs per atom lane,
-/// as the Table-I datasets are labeled), so integration needs no local
-/// frame reconstruction and no N3L pass — each atom's lane carries its
-/// own force.
-#[derive(Debug, Clone)]
-pub struct MoleculeFpga {
-    /// 26-bit (frac 20) position/velocity state, [atom][axis].
-    pos: Vec<[i64; 3]>,
-    vel: Vec<[i64; 3]>,
-    /// dt·ACC_CONV/m per atom, raw frac-24.
-    c_raw: Vec<i64>,
-    /// dt, raw frac-14.
-    dt_raw: i64,
-    /// Power-of-two force rescale undone at integration (see
-    /// [`WaterFpga::force_shift`]).
-    pub force_shift: i32,
-    /// Fixed reference-topology neighbor ordering, `n_nb` per atom.
-    nb: Vec<Vec<usize>>,
-    cond: FeatureConditioner,
-    /// Scratch: decoded bus positions and one atom's raw descriptor
-    /// (owned here so extraction allocates nothing).
-    pos_f: Vec<Vec3>,
-    feat_f: Vec<f64>,
-    pub ops: OpCounts,
-    pub steps: u64,
-}
-
-impl MoleculeFpga {
-    /// Initialize from a float system, a per-atom neighbor ordering
-    /// (`n_nb` entries each, e.g. `features::reference_neighbors`), and
-    /// a programmed conditioning stage of width `4·n_nb`.
-    pub fn new(
-        sys: &System,
-        nb: Vec<Vec<usize>>,
-        cond: FeatureConditioner,
-        dt_fs: f64,
-    ) -> Result<MoleculeFpga> {
-        let n = sys.len();
-        anyhow::ensure!(n >= 2, "molecule FPGA needs at least two atoms");
-        anyhow::ensure!(nb.len() == n, "neighbor lists: {} for {n} atoms", nb.len());
-        let n_nb = nb[0].len();
-        anyhow::ensure!(n_nb >= 1, "descriptor needs at least one neighbor");
-        for (i, l) in nb.iter().enumerate() {
-            anyhow::ensure!(
-                l.len() == n_nb,
-                "atom {i}: ragged neighbor list ({} vs {n_nb}) — lanes must share one width",
-                l.len()
-            );
-            for &j in l {
-                anyhow::ensure!(j < n && j != i, "atom {i}: bad neighbor index {j}");
-            }
-        }
-        anyhow::ensure!(
-            cond.dim() == 4 * n_nb,
-            "conditioner width {} != descriptor width {}",
-            cond.dim(),
-            4 * n_nb
-        );
-        let mut pos = vec![[0i64; 3]; n];
-        let mut vel = vec![[0i64; 3]; n];
-        for i in 0..n {
-            let p = sys.pos[i].to_array();
-            let v = sys.vel[i].to_array();
-            for a in 0..3 {
-                pos[i][a] = enc_state(p[a]);
-                vel[i][a] = enc_state(v[a]);
-            }
-        }
-        let c_raw = sys
-            .masses
-            .iter()
-            .map(|&m| ((dt_fs * ACC_CONV / m) * (1i64 << CONST_FRAC) as f64).round() as i64)
-            .collect();
-        Ok(MoleculeFpga {
-            pos,
-            vel,
-            c_raw,
-            dt_raw: (dt_fs * (1i64 << DT_FRAC) as f64).round() as i64,
-            force_shift: 0,
-            nb,
-            cond,
-            pos_f: vec![Vec3::ZERO; n],
-            feat_f: vec![0.0; 4 * n_nb],
-            ops: OpCounts::default(),
-            steps: 0,
-        })
-    }
-
-    pub fn n_atoms(&self) -> usize {
-        self.pos.len()
-    }
-
-    pub fn n_nb(&self) -> usize {
-        self.nb[0].len()
-    }
-
-    /// Conditioned descriptor width per atom lane (the chip `in_dim`).
-    pub fn in_dim(&self) -> usize {
-        self.cond.dim()
-    }
-
-    /// Decode current positions to float (analysis taps).
-    pub fn positions(&self) -> Vec<Vec3> {
-        self.pos.iter().map(|p| Self::dec_state(p)).collect()
-    }
-
-    pub fn velocities(&self) -> Vec<Vec3> {
-        self.vel.iter().map(|v| Self::dec_state(v)).collect()
-    }
-
-    fn dec_state(r: &[i64; 3]) -> Vec3 {
-        let s = (1i64 << STATE_FRAC) as f64;
-        Vec3::new(r[0] as f64 / s, r[1] as f64 / s, r[2] as f64 / s)
-    }
-
-    /// Position of atom `i` as seen on the truncated 13-bit inter-module
-    /// bus — the view the descriptor front-end consumes, matching the
-    /// water feature module.
-    fn bus_pos(&self, i: usize) -> Vec3 {
-        let d = |a: usize| {
-            let raw = self.pos[i][a] >> (STATE_FRAC - q13::FRAC);
-            raw.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as f64 * q13::LSB
-        };
-        Vec3::new(d(0), d(1), d(2))
-    }
-
-    /// Extract every atom's conditioned Q13 descriptor into an SoA
-    /// feature block: feature `i` of this molecule's atom `a` lands at
-    /// `feats[i * batch + lane0 + a]` (one chip lane per atom). The
-    /// block may be shared with other molecules of a farm shard —
-    /// `batch` is the shard's total lane count and `lane0` this
-    /// molecule's first lane. Allocation-free.
-    pub fn extract_features_soa(&mut self, feats: &mut [Q13], batch: usize, lane0: usize) {
-        let n = self.pos.len();
-        let in_dim = self.cond.dim();
-        assert_eq!(feats.len(), in_dim * batch, "SoA feature block size");
-        assert!(lane0 + n <= batch, "molecule lanes exceed the batch");
-        for i in 0..n {
-            let p = self.bus_pos(i);
-            self.pos_f[i] = p;
-        }
-        for atom in 0..n {
-            features::local_descriptor_into(&self.pos_f, atom, &self.nb[atom], &mut self.feat_f);
-            for (fi, &raw) in self.feat_f.iter().enumerate() {
-                feats[fi * batch + lane0 + atom] = self.cond.q13(fi, raw);
-            }
-        }
-        // Energy model, per neighbor pair: 3 coordinate diffs + 2
-        // accumulations (adds), 3 squares + 4 Newton multiplies + 4
-        // feature multiplies (mults), one rsqrt LUT read; per feature:
-        // one centering subtract and one gain shift.
-        let pairs = (n * self.n_nb()) as u64;
-        self.ops.adds += 5 * pairs + 4 * pairs;
-        self.ops.mults += 11 * pairs;
-        self.ops.shifts += 4 * pairs;
-        self.ops.sram_reads += pairs;
-    }
-
-    /// Consume the chip's SoA outputs (output `o` of atom `a` at
-    /// `c[o * batch + lane0 + a]`, 3 Cartesian force components per atom
-    /// lane, each `F / 2^force_shift`) and advance every atom one
-    /// semi-implicit Euler step on the exact water MAC datapath
-    /// (round-to-nearest renormalization — see [`rshift_round`]).
-    pub fn integrate_soa(&mut self, c: &[Q13], batch: usize, lane0: usize) {
-        let n = self.pos.len();
-        assert_eq!(c.len(), 3 * batch, "SoA force block size");
-        assert!(lane0 + n <= batch, "molecule lanes exceed the batch");
-        for i in 0..n {
-            for a in 0..3 {
-                // Force raw frac-10, rescaled by the free (sign-aware)
-                // wire shift — see the matching note in
-                // [`WaterFpga::integrate`].
-                let f = crate::fixedpoint::shift_raw(c[a * batch + lane0 + i].0 as i64, self.force_shift);
-                // F frac 10 × c frac 24 → frac 34 → state frac 20.
-                let dv = rshift_round(f * self.c_raw[i], 10 + CONST_FRAC - STATE_FRAC);
-                self.vel[i][a] = sat_state(self.vel[i][a] + dv);
-                // v frac 20 × dt frac 14 → frac 34 → frac 20.
-                let dr = rshift_round(self.vel[i][a] * self.dt_raw, DT_FRAC);
-                self.pos[i][a] = sat_state(self.pos[i][a] + dr);
-            }
-        }
-        let n = n as u64;
-        self.ops.shifts += 3 * n;
-        self.ops.mults += 6 * n;
-        self.ops.adds += 6 * n;
-        self.ops.reg_writes_bits += 6 * n * 26;
-        self.steps += 1;
-    }
-
-    /// Modelled FPGA cycles of one step of this molecule (feature +
-    /// integration stages; transfer/control windows are accounted per
-    /// shard tick): per neighbor pair one distance pipeline (diff,
-    /// square, accumulate ≈ 4 cycles) plus one rsqrt (LUT + 2 Newton
-    /// stages ≈ 6 cycles, shared across the pair's 4 features); per atom
-    /// the integrator's 3-axis MAC + state update (≈ 2 cycles each) —
-    /// the same per-stage model `hw::timing::StepCycles::water` uses.
-    pub fn cycles_per_step(&self) -> u64 {
-        let n = self.pos.len() as u64;
-        let pairs = n * self.n_nb() as u64;
-        10 * pairs + 6 * n + 6
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::features;
-    use crate::potentials::WaterPes;
-    use crate::md::ForceField;
-
-    fn eq_system() -> System {
-        let pes = WaterPes::dft_surrogate();
-        System::new(pes.equilibrium(), WaterPes::masses())
-    }
-
-    #[test]
-    fn features_match_float_reference_within_lsb() {
-        let sys = eq_system();
-        let mut fpga = WaterFpga::new(&sys, 0.25);
-        let feats = fpga.extract_features();
-        for (hi, h) in [1usize, 2].iter().enumerate() {
-            let want = features::water_features(&sys.pos, *h);
-            for a in 0..3 {
-                let got = feats[hi].d[a].to_f64();
-                assert!(
-                    (got - want[a]).abs() < 6.0 * q13::LSB,
-                    "h{h} feature {a}: {got} vs {want:?}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn unit_vectors_are_unit_norm() {
-        let sys = eq_system();
-        let mut fpga = WaterFpga::new(&sys, 0.25);
-        let feats = fpga.extract_features();
-        for f in &feats {
-            for u in [&f.u_ho, &f.u_hh] {
-                let n: f64 = u.iter().map(|q| q.to_f64() * q.to_f64()).sum();
-                assert!((n.sqrt() - 1.0).abs() < 0.01, "norm {}", n.sqrt());
-            }
-        }
-    }
-
-    #[test]
-    fn integration_matches_float_euler_closely() {
-        // Drive the FPGA integrator with *exact* PES forces (projected to
-        // local frames, quantized like the chip interface) and compare a
-        // short trajectory against the float semi-implicit Euler.
-        let pes = WaterPes::dft_surrogate();
-        let mut sys = eq_system();
-        sys.pos[1] += Vec3::new(0.02, -0.01, 0.015);
-        sys.vel[1] = Vec3::new(0.004, 0.002, -0.003);
-
-        let dt = 0.25;
-        let mut fpga = WaterFpga::new(&sys, dt);
-        let mut float_sys = sys.clone();
-        let mut forces = vec![Vec3::ZERO; 3];
-        pes.compute(&float_sys.pos, &mut forces);
-
-        for _ in 0..200 {
-            // fixed-point path
-            let frames = fpga.extract_features();
-            let pos_fx = fpga.positions();
-            let mut f_fx = vec![Vec3::ZERO; 3];
-            pes.compute(&pos_fx, &mut f_fx);
-            let mut c = [[Q13::ZERO; 2]; 2];
-            for hi in 0..2 {
-                let loc = features::water_force_to_local(&pos_fx, 1 + hi, f_fx[1 + hi]);
-                c[hi] = [Q13::from_f64(loc[0]), Q13::from_f64(loc[1])];
-            }
-            fpga.integrate(&frames, c);
-            // float path
-            crate::md::euler_step(&mut float_sys, pes, dt, &mut forces);
-        }
-        for i in 0..3 {
-            let d = (fpga.positions()[i] - float_sys.pos[i]).norm();
-            assert!(d < 0.02, "atom {i} diverged by {d} Å after 50 fs");
-        }
-    }
-
-    #[test]
-    fn strict13_drifts_more_than_wide_state() {
-        // Ablation: 13-bit state registers lose the sub-LSB increments
-        // and the trajectory degrades measurably vs the 26-bit state.
-        let pes = WaterPes::dft_surrogate();
-        let mut sys = eq_system();
-        sys.vel[1] = Vec3::new(0.01, 0.0, 0.0);
-        sys.zero_momentum();
-        let dt = 0.25;
-
-        let run = |strict: bool| -> f64 {
-            let mut fpga = WaterFpga::new(&sys, dt);
-            fpga.strict13 = strict;
-            let mut float_sys = sys.clone();
-            let mut forces = vec![Vec3::ZERO; 3];
-            pes.compute(&float_sys.pos, &mut forces);
-            for _ in 0..400 {
-                let frames = fpga.extract_features();
-                let pos_fx = fpga.positions();
-                let mut f_fx = vec![Vec3::ZERO; 3];
-                pes.compute(&pos_fx, &mut f_fx);
-                let mut c = [[Q13::ZERO; 2]; 2];
-                for hi in 0..2 {
-                    let loc = features::water_force_to_local(&pos_fx, 1 + hi, f_fx[1 + hi]);
-                    c[hi] = [Q13::from_f64(loc[0]), Q13::from_f64(loc[1])];
-                }
-                fpga.integrate(&frames, c);
-                crate::md::euler_step(&mut float_sys, pes, dt, &mut forces);
-            }
-            (0..3)
-                .map(|i| (fpga.positions()[i] - float_sys.pos[i]).norm())
-                .fold(0.0, f64::max)
-        };
-        let wide = run(false);
-        let strict = run(true);
-        assert!(strict > 2.0 * wide, "strict13 {strict} vs wide {wide}");
-    }
-
-    #[test]
-    fn no_systematic_momentum_pumping() {
-        // Regression for an RTL-class bug: truncating shifts in the
-        // integrator bias every dv by −½ LSB, so the center of mass
-        // accelerates without bound. With round-to-nearest the COM must
-        // stay put (sub-LSB) over a long zero-net-force run.
-        let pes = WaterPes::dft_surrogate();
-        let mut sys = eq_system();
-        sys.vel[1] = Vec3::new(0.01, -0.006, 0.004);
-        sys.vel[2] = Vec3::new(-0.008, 0.005, -0.002);
-        sys.zero_momentum();
-        let mut fpga = WaterFpga::new(&sys, 0.25);
-        let masses = [15.9994, 1.00794, 1.00794];
-        let com0 = {
-            let p = fpga.positions();
-            (p[0] * masses[0] + p[1] * masses[1] + p[2] * masses[2]) / 18.015
-        };
-        for _ in 0..20_000 {
-            let frames = fpga.extract_features();
-            let pos_fx = fpga.positions();
-            let mut f_fx = vec![Vec3::ZERO; 3];
-            pes.compute(&pos_fx, &mut f_fx);
-            let mut c = [[Q13::ZERO; 2]; 2];
-            for hi in 0..2 {
-                let loc = crate::features::water_force_to_local(&pos_fx, 1 + hi, f_fx[1 + hi]);
-                c[hi] = [Q13::from_f64(loc[0]), Q13::from_f64(loc[1])];
-            }
-            fpga.integrate(&frames, c);
-        }
-        let com1 = {
-            let p = fpga.positions();
-            (p[0] * masses[0] + p[1] * masses[1] + p[2] * masses[2]) / 18.015
-        };
-        let drift = (com1 - com0).norm();
-        assert!(drift < 0.05, "COM drifted {drift} Å over 5 ps — momentum pumping");
-    }
-
-    #[test]
-    fn negative_force_shift_is_a_right_shift_not_a_panic() {
-        // output_scale = 0.5 programs force_shift = −1: the rescale must
-        // be the paper's sign-aware P(x, n) wire shift, not a raw `<<`
-        // (which panics on negative shift amounts in debug builds).
-        let sys = eq_system();
-        let mut fpga = WaterFpga::new(&sys, 0.25);
-        fpga.force_shift = -1;
-        let frames = fpga.extract_features();
-        fpga.integrate(&frames, [[Q13(100), Q13(-50)]; 2]);
-        assert!(fpga.positions()[1].norm().is_finite());
-
-        let mol = crate::potentials::ff::ethanol();
-        let msys = System::new(mol.coords.clone(), mol.masses());
-        let nb: Vec<Vec<usize>> = (0..msys.len())
-            .map(|i| features::reference_neighbors(&mol.coords, i, 4))
-            .collect();
-        let cond = FeatureConditioner::new(16, &[], &[]).unwrap();
-        let mut g = MoleculeFpga::new(&msys, nb, cond, 0.25).unwrap();
-        g.force_shift = -1;
-        let n = g.n_atoms();
-        let c = vec![Q13(101); 3 * n];
-        g.integrate_soa(&c, n, 0);
-        assert_eq!(g.steps, 1);
-        assert!(g.positions()[0].norm().is_finite());
-    }
-
-    #[test]
-    fn op_counters_grow() {
-        let sys = eq_system();
-        let mut fpga = WaterFpga::new(&sys, 0.25);
-        let frames = fpga.extract_features();
-        let before = fpga.ops;
-        fpga.integrate(&frames, [[Q13::ZERO; 2]; 2]);
-        assert!(fpga.ops.mults > before.mults);
-        assert!(fpga.ops.adds > before.adds);
-        assert_eq!(fpga.steps, 1);
-    }
-
-    #[test]
-    fn conditioning_validates_scale_lengths() {
-        // Regression: scale.len() == 2 used to panic with an
-        // index-out-of-bounds in the broadcast arm; every length is now
-        // validated up front. Lengths 0 (unit), 1 (broadcast) and 3
-        // (per-feature) are accepted, anything else is a proper error.
-        let sys = eq_system();
-        let mut fpga = WaterFpga::new(&sys, 0.25);
-        let center = [1.0, 0.7, 1.0];
-        fpga.program_feature_conditioning(&center, &[]).unwrap();
-        assert_eq!(fpga.feat_shift, [0, 0, 0]);
-        fpga.program_feature_conditioning(&center, &[4.0]).unwrap();
-        assert_eq!(fpga.feat_shift, [2, 2, 2]);
-        fpga.program_feature_conditioning(&center, &[1.0, 2.0, 4.0]).unwrap();
-        assert_eq!(fpga.feat_shift, [0, 1, 2]);
-        let err = fpga.program_feature_conditioning(&center, &[2.0, 2.0]);
-        assert!(err.is_err(), "2-element scale must be rejected, not panic");
-        assert!(err.unwrap_err().to_string().contains("length 2"));
-        // non-power-of-two and non-positive gains are rejected too
-        assert!(fpga.program_feature_conditioning(&center, &[3.0]).is_err());
-        assert!(fpga.program_feature_conditioning(&center, &[-2.0]).is_err());
-        // bad center length is an error, not an assert
-        assert!(fpga.program_feature_conditioning(&[1.0, 0.7], &[]).is_err());
-        // empty center resets the stage and ignores scale (unprogrammed)
-        fpga.program_feature_conditioning(&[], &[2.0, 2.0]).unwrap();
-        assert_eq!(fpga.feat_shift, [0, 0, 0]);
-        assert_eq!(fpga.feat_center_raw, [0, 0, 0]);
-    }
-
-    #[test]
-    fn feature_conditioner_matches_water_stage() {
-        // The generic float→Q13 conditioner must reproduce the water
-        // FPGA's integer conditioning stage exactly when fed the same
-        // frac-24 raw values.
-        let sys = eq_system();
-        let mut fpga = WaterFpga::new(&sys, 0.25);
-        let center = [0.9, 0.6, 0.95];
-        let scale = [2.0, 4.0, 2.0];
-        fpga.program_feature_conditioning(&center, &scale).unwrap();
-        let cond = FeatureConditioner::new(3, &center, &scale).unwrap();
-        for step in 0..200 {
-            let raw = 0.25 + 0.007 * step as f64; // covers the feature range
-            let raw24 = enc_center_raw24(raw);
-            for i in 0..3 {
-                assert_eq!(cond.q13(i, raw), fpga.condition(raw24, i), "feature {i} raw {raw}");
-            }
-        }
-        // broadcast rule mirrors the water path
-        assert!(FeatureConditioner::new(3, &center, &[2.0, 2.0]).is_err());
-        let unit = FeatureConditioner::new(4, &[], &[]).unwrap();
-        assert_eq!(unit.dim(), 4);
-        assert_eq!(unit.q13(0, 1.0), Q13::from_f64(1.0));
-    }
-
-    #[test]
-    fn molecule_fpga_rejects_bad_topology() {
-        let mol = crate::potentials::ff::ethanol();
-        let sys = System::new(mol.coords.clone(), mol.masses());
-        let n = sys.len();
-        let nb: Vec<Vec<usize>> = (0..n)
-            .map(|i| features::reference_neighbors(&mol.coords, i, 4))
-            .collect();
-        let cond = FeatureConditioner::new(16, &[], &[]).unwrap();
-        assert!(MoleculeFpga::new(&sys, nb.clone(), cond.clone(), 0.25).is_ok());
-        // ragged neighbor lists
-        let mut ragged = nb.clone();
-        ragged[2].pop();
-        assert!(MoleculeFpga::new(&sys, ragged, cond.clone(), 0.25).is_err());
-        // conditioner width mismatch
-        let narrow = FeatureConditioner::new(8, &[], &[]).unwrap();
-        assert!(MoleculeFpga::new(&sys, nb.clone(), narrow, 0.25).is_err());
-        // self-neighbor
-        let mut selfish = nb.clone();
-        selfish[0][0] = 0;
-        assert!(MoleculeFpga::new(&sys, selfish, cond.clone(), 0.25).is_err());
-        // missing lists
-        assert!(MoleculeFpga::new(&sys, nb[..n - 1].to_vec(), cond, 0.25).is_err());
-    }
-
-    #[test]
-    fn molecule_fpga_features_match_descriptor_reference() {
-        // The SoA extraction must equal `local_descriptor` on the bus
-        // view of the positions, conditioned feature by feature.
-        let mol = crate::potentials::ff::ethanol();
-        let sys = System::new(mol.coords.clone(), mol.masses());
-        let n = sys.len();
-        let n_nb = 4usize;
-        let nb: Vec<Vec<usize>> = (0..n)
-            .map(|i| features::reference_neighbors(&mol.coords, i, n_nb))
-            .collect();
-        let center = vec![0.4; 16];
-        let scale = vec![2.0; 16];
-        let cond = FeatureConditioner::new(16, &center, &scale).unwrap();
-        let mut fpga = MoleculeFpga::new(&sys, nb.clone(), cond.clone(), 0.25).unwrap();
-        let batch = n + 3; // molecule embedded mid-batch
-        let lane0 = 2usize;
-        let mut feats = vec![Q13::ZERO; 16 * batch];
-        fpga.extract_features_soa(&mut feats, batch, lane0);
-        // reference: descriptor on the decoded bus positions
-        let bus: Vec<Vec3> = (0..n).map(|i| fpga.bus_pos(i)).collect();
-        for atom in 0..n {
-            let want = features::local_descriptor(&bus, atom, &nb[atom]);
-            for (fi, &raw) in want.iter().enumerate() {
-                assert_eq!(
-                    feats[fi * batch + lane0 + atom],
-                    cond.q13(fi, raw),
-                    "atom {atom} feature {fi}"
-                );
-            }
-        }
-        assert!(fpga.ops.mults > 0 && fpga.ops.adds > 0);
-    }
-
-    #[test]
-    fn molecule_fpga_integration_tracks_float_euler() {
-        // Drive the generic integrator with exact FF forces quantized
-        // like the chip interface; it must track float semi-implicit
-        // Euler closely over a short run (same tolerance class as the
-        // water test).
-        let mol = crate::potentials::ff::ethanol();
-        let ffield = crate::potentials::MoleculeFF { mol };
-        let mut sys = System::new(ffield.mol.coords.clone(), ffield.mol.masses());
-        sys.pos[3] += Vec3::new(0.02, -0.015, 0.01);
-        let n = sys.len();
-        let dt = 0.25;
-        let nb: Vec<Vec<usize>> = (0..n)
-            .map(|i| features::reference_neighbors(&ffield.mol.coords, i, 4))
-            .collect();
-        let cond = FeatureConditioner::new(16, &[], &[]).unwrap();
-        let mut fpga = MoleculeFpga::new(&sys, nb, cond, dt).unwrap();
-        let mut float_sys = sys.clone();
-        let mut forces = vec![Vec3::ZERO; n];
-        ffield.compute(&float_sys.pos, &mut forces);
-        let batch = n;
-        let mut c = vec![Q13::ZERO; 3 * batch];
-        for _ in 0..200 {
-            let pos_fx = fpga.positions();
-            let mut f_fx = vec![Vec3::ZERO; n];
-            ffield.compute(&pos_fx, &mut f_fx);
-            for i in 0..n {
-                let f = f_fx[i].to_array();
-                for a in 0..3 {
-                    c[a * batch + i] = Q13::from_f64(f[a]);
-                }
-            }
-            fpga.integrate_soa(&c, batch, 0);
-            crate::md::euler_step(&mut float_sys, &ffield, dt, &mut forces);
-        }
-        for i in 0..n {
-            let d = (fpga.positions()[i] - float_sys.pos[i]).norm();
-            assert!(d < 0.02, "atom {i} diverged by {d} Å");
-        }
-        assert_eq!(fpga.steps, 200);
-    }
-
-    #[test]
-    fn state_saturates_instead_of_wrapping() {
-        let mut sys = eq_system();
-        sys.vel[1] = Vec3::new(1e6, 0.0, 0.0); // absurd velocity
-        let fpga = WaterFpga::new(&sys, 0.25);
-        // encoded state must be clamped, not wrapped negative
-        let v = fpga.velocities()[1];
-        assert!(v.x > 0.0 && v.x <= 32.0, "v.x = {}", v.x);
-    }
-}
+// Signal-format constants have always been addressable at `fpga::`;
+// they are defined in the core profile's `qint` now.
+pub use qint::{CONST_FRAC, DT_FRAC, STATE_FRAC};

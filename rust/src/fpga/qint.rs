@@ -1,0 +1,145 @@
+//! The FPGA's integer arithmetic, core profile: signal formats, the
+//! 26-bit state registers, the semi-implicit-Euler MAC step, and the
+//! feature-conditioning stage — everything module (iii) computes per
+//! tick, with no float anywhere.
+//!
+//! The host layer (`fpga::WaterFpga` / `fpga::MoleculeFpga`, `std` only)
+//! owns topology, float initialization/decoding, and op accounting; it
+//! drives these functions so the two serving paths can never diverge
+//! from each other — or from an embedded target compiled against the
+//! core profile.
+
+use crate::fixedpoint::{q13, shift_raw, Q13};
+
+/// Fraction bits of the integrator state (26-bit registers).
+pub const STATE_FRAC: u32 = 20;
+/// Saturation bounds of the 26-bit state registers.
+pub const STATE_MAX: i64 = (1 << 25) - 1;
+pub const STATE_MIN: i64 = -(1 << 25);
+/// Fraction bits of the per-atom dt·ACC/m constants (set by the host at
+/// initialization — "CPU for initialization and control", Fig. 1).
+pub const CONST_FRAC: u32 = 24;
+/// Fraction bits of the dt constant.
+pub const DT_FRAC: u32 = 14;
+/// Working fraction of the rsqrt / conditioning pipeline.
+pub const RSQRT_WORK_FRAC: u32 = 24;
+
+/// Saturate to the 26-bit state range.
+#[inline(always)]
+pub fn sat_state(x: i64) -> i64 {
+    x.clamp(STATE_MIN, STATE_MAX)
+}
+
+/// Round-to-nearest right shift. The integrator MUST NOT truncate
+/// (arithmetic >> rounds toward −∞): a −½-LSB systematic bias on every
+/// velocity increment pumps net momentum into the system — the molecule's
+/// center of mass accelerates until the ±4 Å Q13 position bus saturates
+/// and the geometry collapses (found the hard way; see the
+/// `no_systematic_momentum_pumping` test in `fpga`).
+#[inline(always)]
+pub fn rshift_round(x: i64, n: u32) -> i64 {
+    (x + (1i64 << (n - 1))) >> n
+}
+
+/// One axis of the semi-implicit Euler MAC (module (iii), Eqs. (2)–(3)):
+///
+/// ```text
+/// v += F·c      F raw frac 10 × c raw frac 24 → frac 34 → state frac 20
+/// r += v·dt     v frac 20 × dt raw frac 14    → frac 34 → frac 20
+/// ```
+///
+/// with round-to-nearest renormalization (see [`rshift_round`]) and
+/// 26-bit saturation on both state updates. `f_raw10` is the *rescaled*
+/// force (the free 2^force_shift wire shift happens before this MAC).
+/// Every integrator in the repo — water, generic molecule, and the core
+/// profile's golden vectors — is this exact function.
+#[inline(always)]
+pub fn mac_step(pos: &mut i64, vel: &mut i64, f_raw10: i64, c_raw: i64, dt_raw: i64) {
+    let dv = rshift_round(f_raw10 * c_raw, 10 + CONST_FRAC - STATE_FRAC);
+    *vel = sat_state(*vel + dv);
+    let dr = rshift_round(*vel * dt_raw, DT_FRAC);
+    *pos = sat_state(*pos + dr);
+}
+
+/// The conditioning stage on one frac-24 raw feature: (raw − center)
+/// << m, truncate to the Q13 bus, saturate — a constant subtract plus a
+/// wire shift in RTL. Shared by the water datapath and the generic
+/// `fpga::FeatureConditioner`, so the two can never diverge.
+#[inline]
+pub fn condition_raw24(raw24: i64, center_raw24: i64, shift: i32) -> Q13 {
+    let centered = raw24 - center_raw24;
+    let amplified = shift_raw(centered, shift);
+    let q = amplified >> (RSQRT_WORK_FRAC - q13::FRAC);
+    Q13(q.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
+}
+
+/// Truncate a 26-bit state register onto the 13-bit inter-module bus
+/// (frac 20 → frac 10), saturating to the Q13 rails.
+#[inline(always)]
+pub fn bus_q13(state_raw: i64) -> Q13 {
+    let raw = state_raw >> (STATE_FRAC - q13::FRAC);
+    Q13(raw.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rshift_round_rounds_to_nearest() {
+        // n = 4: ties round up (the hardware adds the half-LSB then
+        // floors), negatives must not bias toward −∞.
+        assert_eq!(rshift_round(7, 4), 0); // 7/16 → 0
+        assert_eq!(rshift_round(8, 4), 1); // 8/16 → 1 (tie up)
+        assert_eq!(rshift_round(-7, 4), 0);
+        assert_eq!(rshift_round(-8, 4), 0); // −8/16 → 0 (tie up)
+        assert_eq!(rshift_round(-9, 4), -1);
+        assert_eq!(rshift_round(24, 4), 2); // 24/16 → 2 (tie up from 1.5)
+    }
+
+    #[test]
+    fn sat_state_clamps_both_rails() {
+        assert_eq!(sat_state(STATE_MAX + 1), STATE_MAX);
+        assert_eq!(sat_state(STATE_MIN - 1), STATE_MIN);
+        assert_eq!(sat_state(12345), 12345);
+    }
+
+    #[test]
+    fn mac_step_matches_hand_computation() {
+        // F = 1.0 (raw 1024 at frac 10), c = 2^-4 (frac 24), dt = 1.0
+        // (frac 14), from rest at the origin:
+        // dv = round(1024·2^20 / 2^14) = 2^16 (frac 20) = 1/16
+        // dr = round(2^16·2^14 / 2^14) = 2^16 → pos = 1/16 on frac 20.
+        let (mut pos, mut vel) = (0i64, 0i64);
+        mac_step(&mut pos, &mut vel, 1024, 1i64 << 20, 1i64 << 14);
+        assert_eq!(vel, 1i64 << 16);
+        assert_eq!(pos, 1i64 << 16);
+        // saturation: a huge force pins velocity to the rail, position
+        // follows at dt·v_max
+        let (mut pos, mut vel) = (0i64, 0i64);
+        mac_step(&mut pos, &mut vel, 1i64 << 40, 1i64 << 24, 1i64 << 14);
+        assert_eq!(vel, STATE_MAX);
+        assert_eq!(pos, STATE_MAX);
+    }
+
+    #[test]
+    fn condition_raw24_centers_shifts_and_saturates() {
+        // (raw − center) = 2^-4 at frac 24, gain 2^2 → 2^-2 → Q13 raw 256.
+        let c = condition_raw24(1i64 << 24, (1i64 << 24) - (1i64 << 20), 2);
+        assert_eq!(c, Q13(1 << 8));
+        // gain pushes past the rail → saturate, both signs
+        assert_eq!(condition_raw24(4 << 24, 0, 4), Q13::MAX);
+        assert_eq!(condition_raw24(-(4 << 24), 0, 4), Q13::MIN);
+        // negative shift is the paper's P(x, −n) arithmetic right shift
+        assert_eq!(condition_raw24(1 << 24, 0, -1), Q13(1 << 9));
+    }
+
+    #[test]
+    fn bus_q13_truncates_and_clamps() {
+        assert_eq!(bus_q13(1i64 << 20), Q13(1 << 10)); // 1.0
+        assert_eq!(bus_q13(STATE_MAX), Q13::MAX); // 32 Å clamps to the bus rail
+        assert_eq!(bus_q13(STATE_MIN), Q13::MIN);
+        // truncation is toward −∞ (arithmetic shift), like the wire
+        assert_eq!(bus_q13(-1), Q13(-1));
+    }
+}

@@ -5,8 +5,13 @@
 //! 64-entry seed table for 1/√m, refine with one Newton–Raphson step
 //! (y ← y·(3 − m·y²)/2), denormalize. All integer arithmetic; matches
 //! `1/sqrt` to within ~1 Q13 LSB over the feature range.
-
-use std::sync::OnceLock;
+//!
+//! The seed table is a baked const (like the ROM it models), so the unit
+//! is available in the float-free core profile — no startup float math,
+//! no `OnceLock`. Regenerate with `python/gen_tables.py`; a `std`-gated
+//! test below recomputes every entry in float and asserts exact equality
+//! (the generator checks each value is far from a rounding tie, so the
+//! const is reproducible from any faithfully-rounded libm).
 
 use crate::fixedpoint::{q13, shift_raw, Q13};
 
@@ -14,18 +19,18 @@ use crate::fixedpoint::{q13, shift_raw, Q13};
 const SEED_FRAC: u32 = 12;
 const LUT_SIZE: usize = 64;
 
-fn lut() -> &'static [i64; LUT_SIZE] {
-    static LUT: OnceLock<[i64; LUT_SIZE]> = OnceLock::new();
-    LUT.get_or_init(|| {
-        let mut t = [0i64; LUT_SIZE];
-        for (i, slot) in t.iter_mut().enumerate() {
-            // m midpoint in [1, 4)
-            let m = 1.0 + 3.0 * (i as f64 + 0.5) / LUT_SIZE as f64;
-            *slot = ((1.0 / m.sqrt()) * (1i64 << SEED_FRAC) as f64).round() as i64;
-        }
-        t
-    })
-}
+/// Seed ROM: `round((1/sqrt(m_i)) · 2^12)` for the 64 interval midpoints
+/// `m_i = 1 + 3(i + 0.5)/64` of [1, 4).
+const RSQRT_SEED_LUT: [i64; LUT_SIZE] = [
+    4049, 3959, 3875, 3796, 3722, 3652, 3586, 3523,
+    3464, 3407, 3353, 3302, 3252, 3205, 3160, 3117,
+    3076, 3036, 2998, 2961, 2925, 2891, 2858, 2825,
+    2794, 2764, 2735, 2707, 2680, 2653, 2628, 2603,
+    2578, 2555, 2532, 2510, 2488, 2466, 2446, 2426,
+    2406, 2387, 2368, 2350, 2332, 2314, 2297, 2280,
+    2264, 2248, 2232, 2217, 2202, 2187, 2172, 2158,
+    2144, 2131, 2117, 2104, 2091, 2079, 2066, 2054,
+];
 
 /// Working precision of the Newton refinement (fraction bits).
 const WORK_FRAC: u32 = 24;
@@ -54,7 +59,7 @@ pub fn rsqrt_raw(x_raw: i64, frac_in: u32, frac_out: u32, newton_iters: u32) -> 
     }
     // Seed from the LUT, widened to the working precision.
     let idx = (((m_raw - lo) as u128 * LUT_SIZE as u128) / ((hi - lo) as u128)) as usize;
-    let mut y = lut()[idx.min(LUT_SIZE - 1)] << (WORK_FRAC - SEED_FRAC); // frac WORK
+    let mut y = RSQRT_SEED_LUT[idx.min(LUT_SIZE - 1)] << (WORK_FRAC - SEED_FRAC); // frac WORK
 
     // Newton: y ← y·(3 − m·y²)/2, all in frac WORK.
     for _ in 0..newton_iters {
@@ -79,6 +84,17 @@ pub fn rsqrt_q13(x_raw: i64, frac: u32) -> Q13 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn seed_lut_matches_float_expression_exactly() {
+        // The baked const must equal the float expression it replaced
+        // (the old OnceLock initializer), entry for entry.
+        for (i, &slot) in RSQRT_SEED_LUT.iter().enumerate() {
+            let m = 1.0 + 3.0 * (i as f64 + 0.5) / LUT_SIZE as f64;
+            let want = ((1.0 / m.sqrt()) * (1i64 << SEED_FRAC) as f64).round() as i64;
+            assert_eq!(slot, want, "lut[{i}]");
+        }
+    }
 
     fn check_range(lo: f64, hi: f64, tol_lsb: f64) {
         let frac = 20u32;

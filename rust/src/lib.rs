@@ -19,37 +19,88 @@
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index
 //! (E1–E10 map to the paper's Figs. 3–10 and Tables I–III).
+//!
+//! ## Core/host seam (feature flags)
+//!
+//! The paper's thesis is that the exact integer SQNN datapath runs on
+//! low-end hardware. The crate is therefore split into a **core layer**
+//! that compiles for embedded targets and a **host layer** that needs an
+//! operating system:
+//!
+//! | profile | cargo flags | contents | guarantees |
+//! |---|---|---|---|
+//! | host (default) | `--features std` (default) | everything below plus float conditioning, model loading/JSON, device simulators, farm/coordinator, MD engine, experiments, benches | full crate |
+//! | core | `--no-default-features` | [`fixedpoint`] (Q13 + `shift_raw`), [`quant`]'s integer shift-apply, [`nn::activation`] (`phi_q13`, `tanh_q13`), [`nn::sqnn`] scalar + weight-stationary batch kernels, [`fpga::rsqrt`], [`fpga::qint`] (26-bit integrator arithmetic), [`error::CoreError`] | `no_std` + `alloc`; float-free (no f64 in any kernel); `anyhow`-free (typed [`error::CoreError`]); no `std`-only sync primitives (const tables instead of `OnceLock`) |
+//!
+//! The split is behavior-preserving by construction: the core kernels are
+//! the *same code* in both profiles (only float convenience wrappers and
+//! host glue are gated), and `rust/tests/core_golden.rs` pins the kernels
+//! to shared golden vectors so the two profiles can never diverge by a
+//! single bit.
+//!
+//! Always-compiled (core) modules: [`error`], [`fixedpoint`], [`quant`],
+//! [`nn`] (integer subset), [`fpga`] (`rsqrt`/`qint` subset).
+//! Host-only modules: [`util`], [`linalg`], [`hw`], [`asic`], [`md`],
+//! [`potentials`], [`features`], [`datasets`], [`analysis`], [`dft`],
+//! [`coordinator`], [`runtime`], [`benchkit`], [`testkit`], [`exp`].
 
-pub mod util;
-pub mod linalg;
+#![cfg_attr(not(feature = "std"), no_std)]
+
+// The core profile is alloc-only (Vec/String for network storage); under
+// `std` this is the same allocator the rest of the crate uses.
+extern crate alloc;
+
+pub mod error;
 pub mod fixedpoint;
 pub mod quant;
 pub mod nn;
-pub mod hw;
-pub mod asic;
 pub mod fpga;
+
+#[cfg(feature = "std")]
+pub mod util;
+#[cfg(feature = "std")]
+pub mod linalg;
+#[cfg(feature = "std")]
+pub mod hw;
+#[cfg(feature = "std")]
+pub mod asic;
+#[cfg(feature = "std")]
 pub mod md;
+#[cfg(feature = "std")]
 pub mod potentials;
+#[cfg(feature = "std")]
 pub mod features;
+#[cfg(feature = "std")]
 pub mod datasets;
+#[cfg(feature = "std")]
 pub mod analysis;
+#[cfg(feature = "std")]
 pub mod dft;
+#[cfg(feature = "std")]
 pub mod coordinator;
+#[cfg(feature = "std")]
 pub mod runtime;
+#[cfg(feature = "std")]
 pub mod benchkit;
+#[cfg(feature = "std")]
 pub mod testkit;
+#[cfg(feature = "std")]
 pub mod exp;
 
-/// Crate-wide result type.
+/// Crate-wide result type (host layer). Core APIs return
+/// `Result<T, error::CoreError>` instead.
+#[cfg(feature = "std")]
 pub type Result<T> = anyhow::Result<T>;
 
 /// Canonical location of build artifacts (AOT HLO, trained models,
 /// generated datasets) relative to the repository root.
+#[cfg(feature = "std")]
 pub const ARTIFACTS_DIR: &str = "artifacts";
 
 /// Resolve a path under the artifacts directory, honouring the
 /// `NVNMD_ARTIFACTS` environment variable so tests and benches work from
 /// any working directory.
+#[cfg(feature = "std")]
 pub fn artifact_path(rel: &str) -> std::path::PathBuf {
     let base = std::env::var("NVNMD_ARTIFACTS")
         .unwrap_or_else(|_| ARTIFACTS_DIR.to_string());

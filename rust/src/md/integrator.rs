@@ -5,6 +5,11 @@
 //! * [`euler_step`] — the paper's semi-implicit Euler (Eqs. (2)–(3)),
 //!   which is what the FPGA integration module implements:
 //!   `v(t) = v(t−dt) + F(t)/m·dt`, then `r(t+dt) = r(t) + v(t)·dt`.
+//!
+//! These are the *float references*. The fixed-point integrator the
+//! devices actually run — the 26-bit MAC with round-to-nearest
+//! renormalization — is `fpga::qint::mac_step` in the float-free core
+//! profile; the `fpga` tests hold the two within drift tolerances.
 
 use super::{ForceField, System};
 use crate::util::units::ACC_CONV;

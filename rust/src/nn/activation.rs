@@ -10,8 +10,17 @@
 //! φ is C¹ (the quadratic meets the clamps with zero slope at ±2), needs
 //! one multiply and one shift-by-2, and tracks tanh closely enough that
 //! swapping it in costs no measurable accuracy (paper Table I; our E3).
+//!
+//! Core/host seam: the activation table ([`Activation`], `from_name`) and
+//! the exact Q13 datapaths ([`phi_q13`], [`tanh_q13`]) are core — pure
+//! integer logic with typed [`CoreError`]s. The float references
+//! (`apply`, `phi`, the CORDIC model) are host-only (`std`).
 
+use alloc::string::ToString;
+
+use crate::error::CoreError;
 use crate::fixedpoint::Q13;
+use crate::nn::tanh_table::TANH_Q13;
 
 /// Which nonlinearity an MLP uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,6 +30,7 @@ pub enum Activation {
 }
 
 impl Activation {
+    #[cfg(feature = "std")]
     pub fn apply(self, x: f64) -> f64 {
         match self {
             Activation::Tanh => x.tanh(),
@@ -28,6 +38,7 @@ impl Activation {
         }
     }
     /// Derivative (for reference-training gradients in tests).
+    #[cfg(feature = "std")]
     pub fn grad(self, x: f64) -> f64 {
         match self {
             Activation::Tanh => {
@@ -43,16 +54,19 @@ impl Activation {
             Activation::Phi => "phi",
         }
     }
-    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+    /// Inverse of [`Self::name`] — pure table logic, so it returns the
+    /// core's typed error (the host's `anyhow` contexts lift it via `?`).
+    pub fn from_name(name: &str) -> Result<Self, CoreError> {
         match name {
             "tanh" => Ok(Activation::Tanh),
             "phi" => Ok(Activation::Phi),
-            other => anyhow::bail!("unknown activation {other:?}"),
+            other => Err(CoreError::UnknownActivation(other.to_string())),
         }
     }
 }
 
 /// The paper's φ(x), float version (Eq. 4).
+#[cfg(feature = "std")]
 pub fn phi(x: f64) -> f64 {
     if x >= 2.0 {
         1.0
@@ -64,6 +78,7 @@ pub fn phi(x: f64) -> f64 {
 }
 
 /// dφ/dx = 1 − |x|/2 inside (−2, 2), 0 outside.
+#[cfg(feature = "std")]
 pub fn phi_grad(x: f64) -> f64 {
     if x.abs() >= 2.0 {
         0.0
@@ -72,21 +87,37 @@ pub fn phi_grad(x: f64) -> f64 {
     }
 }
 
+/// φ's clamp threshold 2.0 on the Q13 grid.
+const TWO_Q13: Q13 = Q13(2 << 10);
+
 /// Bit-accurate AU (activation unit) datapath of Fig. 7: two range
 /// comparators/selectors, one multiplier, one shift-right-by-2, one
 /// subtractor — all in Q(1,2,10).
 pub fn phi_q13(x: Q13) -> Q13 {
-    let two = Q13::from_f64(2.0);
     let one = Q13::ONE;
-    if x >= two {
+    if x >= TWO_Q13 {
         one
-    } else if x <= two.neg() {
+    } else if x <= TWO_Q13.neg() {
         one.neg()
     } else {
         // x − (x·|x|)>>2
         let sq = x.mul(x.abs());
         x.sub(sq.shift(-2))
     }
+}
+
+/// Bit-accurate Q13 tanh via the baked [`TANH_Q13`] table and odd
+/// symmetry — the core-profile datapath of a tanh SQNN (used only in
+/// software ablations; the taped-out AU is φ).
+///
+/// Bit-compatible with the float round-trip it replaced
+/// (`Q13::from_f64(x.to_f64().tanh())`) for **every** raw input,
+/// including `Q13::MIN`: tanh(−4.0) and tanh(−3.999) both round to
+/// −1023/1024, so clamping |MIN| to MAX before the lookup is exact.
+pub fn tanh_q13(x: Q13) -> Q13 {
+    let mag = x.0.unsigned_abs().min(crate::fixedpoint::q13::MAX_RAW as u32) as usize;
+    let t = TANH_Q13[mag] as i32;
+    Q13(if x.0 < 0 { -t } else { t })
 }
 
 /// Fixed-point CORDIC hyperbolic tanh, the circuit the paper compares φ
@@ -101,6 +132,7 @@ pub fn phi_q13(x: Q13) -> Q13 {
 /// reference — the hardware comparison uses the native range, as the
 /// paper's transistor count (50 418) corresponds to the plain iterative
 /// core.
+#[cfg(feature = "std")]
 pub fn tanh_cordic(z: f64, iters: u32, frac_bits: u32) -> f64 {
     // Work in integer fixed point with `frac_bits` fraction bits.
     let one = 1i64 << frac_bits;
@@ -138,6 +170,7 @@ pub fn tanh_cordic(z: f64, iters: u32, frac_bits: u32) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixedpoint::q13;
     use crate::util::rng::Pcg;
 
     #[test]
@@ -190,6 +223,16 @@ mod tests {
     }
 
     #[test]
+    fn from_name_roundtrips_and_rejects() {
+        for a in [Activation::Tanh, Activation::Phi] {
+            assert_eq!(Activation::from_name(a.name()).unwrap(), a);
+        }
+        let err = Activation::from_name("relu").unwrap_err();
+        assert_eq!(err, CoreError::UnknownActivation("relu".into()));
+        assert!(err.to_string().contains("relu"));
+    }
+
+    #[test]
     fn phi_q13_matches_float_within_2_lsb() {
         let mut rng = Pcg::new(3);
         for _ in 0..20_000 {
@@ -209,6 +252,35 @@ mod tests {
         assert_eq!(phi_q13(Q13::from_f64(3.0)), Q13::ONE);
         assert_eq!(phi_q13(Q13::from_f64(-3.0)), Q13::ONE.neg());
         assert_eq!(phi_q13(Q13::from_f64(2.0)), Q13::ONE);
+    }
+
+    #[test]
+    fn tanh_table_matches_float_roundtrip_exactly() {
+        // The baked table must equal the float expression it replaced on
+        // EVERY raw Q13 input — this is what makes the const-table swap a
+        // no-op bit-wise. (gen_tables.py asserts every entry is far from
+        // a rounding tie, so this holds for any faithfully-rounded libm.)
+        for raw in q13::MIN_RAW..=q13::MAX_RAW {
+            let q = Q13(raw);
+            let want = Q13::from_f64(q.to_f64().tanh());
+            assert_eq!(tanh_q13(q), want, "raw={raw}");
+        }
+    }
+
+    #[test]
+    fn tanh_q13_is_odd_monotone_and_bounded() {
+        let mut prev = i32::MIN;
+        for raw in q13::MIN_RAW..=q13::MAX_RAW {
+            let t = tanh_q13(Q13(raw));
+            assert!(t.0.abs() <= 1023, "output must stay inside (−1, 1)");
+            assert!(t.0 >= prev, "monotone at raw={raw}");
+            prev = t.0;
+            if raw >= 0 {
+                assert_eq!(tanh_q13(Q13(-raw)).0, -t.0, "odd symmetry at {raw}");
+            }
+        }
+        assert_eq!(tanh_q13(Q13::ZERO), Q13::ZERO);
+        assert_eq!(tanh_q13(Q13::MIN), tanh_q13(Q13::MAX).neg());
     }
 
     #[test]

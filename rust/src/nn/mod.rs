@@ -10,13 +10,25 @@
 //!   the hardware baseline of Fig. 5.
 //! * **SQNN** — weights quantized as sums of ≤K powers of two, shift–add
 //!   datapath; the network the ASIC implements.
+//!
+//! Core/host seam: [`activation`] (integer subset) and [`sqnn`]'s Q13
+//! kernels are core; [`mlp`] (float training/JSON) and [`fqnn`] are
+//! host-only, as is the float glue around `Sqnn`
+//! ([`sqnn::ConditionedSqnn`], `Sqnn::from_mlp`).
 
 pub mod activation;
-pub mod mlp;
-pub mod fqnn;
+pub mod tanh_table;
 pub mod sqnn;
+#[cfg(feature = "std")]
+pub mod mlp;
+#[cfg(feature = "std")]
+pub mod fqnn;
 
 pub use activation::Activation;
-pub use mlp::Mlp;
-pub use fqnn::Fqnn;
 pub use sqnn::Sqnn;
+#[cfg(feature = "std")]
+pub use mlp::Mlp;
+#[cfg(feature = "std")]
+pub use fqnn::Fqnn;
+#[cfg(feature = "std")]
+pub use sqnn::ConditionedSqnn;

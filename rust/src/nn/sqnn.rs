@@ -2,13 +2,28 @@
 //! sums of ≤K powers of two, evaluated by a shift–accumulate datapath in
 //! Q(1,2,10). This is the bit-accurate software model of the ASIC MLP
 //! chip (Fig. 7); `asic::MlpChip` wraps it with the cycle/energy model.
+//!
+//! Core/host seam: [`Sqnn`] itself is core — pure integer storage
+//! (quantized weights, raw Q13 biases) plus the scalar and
+//! weight-stationary batch kernels, constructible on-device from
+//! pre-quantized layers via [`Sqnn::from_layers`]. The float glue lives
+//! host-side: [`Sqnn::from_mlp`] (quantizing a trained float model),
+//! [`Sqnn::dequantized_mlp`], and [`ConditionedSqnn`] — the
+//! feature-conditioning wrapper that models the FPGA stage in float.
 
-use anyhow::Result;
+use alloc::string::String;
+use alloc::vec;
+use alloc::vec::Vec;
 
-use crate::fixedpoint::{Q13, q13};
-use crate::nn::activation::phi_q13;
-use crate::quant::{quantize_matrix, ShiftWeight};
-use super::{Activation, Mlp};
+use crate::error::CoreError;
+use crate::fixedpoint::{q13, Q13};
+use crate::nn::activation::{phi_q13, tanh_q13};
+use crate::quant::ShiftWeight;
+use super::Activation;
+#[cfg(feature = "std")]
+use super::Mlp;
+#[cfg(feature = "std")]
+use crate::quant::quantize_matrix;
 
 /// One SQNN layer: quantized weights (row-major out×in) and Q13 biases.
 #[derive(Debug, Clone)]
@@ -61,17 +76,56 @@ pub struct Sqnn {
     pub output_activation: bool,
     /// K used for quantization.
     pub k: usize,
-    /// Feature conditioning constants (the FPGA stage; see `nn::Mlp`).
-    pub feature_center: Vec<f64>,
-    pub feature_scale: Vec<f64>,
     /// Flattened hot-path layout (kept in sync with `layers`).
     packed: Vec<PackedLayer>,
 }
 
 impl Sqnn {
-    /// Quantize a trained float model with K shift terms per weight.
-    /// (When the float model came from QAT its weights are already exact
-    /// sums of ≤K powers of two and this is lossless.)
+    /// Core constructor: assemble a network from pre-quantized layers
+    /// (what an embedded target would be programmed with — the shift
+    /// parameters arrive from the host, never computed on-device).
+    /// Validates the layer chain and the packed-fast-path width bound
+    /// with typed errors.
+    pub fn from_layers(
+        name: &str,
+        layers: Vec<SqnnLayer>,
+        activation: Activation,
+        output_activation: bool,
+        k: usize,
+    ) -> Result<Self, CoreError> {
+        if layers.is_empty() {
+            return Err(CoreError::EmptyNetwork);
+        }
+        for (li, l) in layers.iter().enumerate() {
+            if l.w.len() != l.out_dim * l.in_dim || l.b.len() != l.out_dim {
+                return Err(CoreError::LayerShapeMismatch { layer: li });
+            }
+            if li + 1 < layers.len() && l.out_dim != layers[li + 1].in_dim {
+                return Err(CoreError::LayerShapeMismatch { layer: li + 1 });
+            }
+            let width = l.in_dim.max(l.out_dim);
+            if width > MAX_WIDTH {
+                return Err(CoreError::LayerTooWide { width, max: MAX_WIDTH });
+            }
+        }
+        let mut s = Sqnn {
+            name: String::from(name),
+            layers,
+            activation,
+            output_activation,
+            k,
+            packed: Vec::new(),
+        };
+        s.pack();
+        Ok(s)
+    }
+
+    /// Quantize a trained float model with K shift terms per weight —
+    /// the host initialization path. (When the float model came from QAT
+    /// its weights are already exact sums of ≤K powers of two and this is
+    /// lossless.) Feature conditioning is NOT carried here — wrap the
+    /// result in a [`ConditionedSqnn`] for the float serving convenience.
+    #[cfg(feature = "std")]
     pub fn from_mlp(m: &Mlp, k: usize) -> Self {
         let layers: Vec<SqnnLayer> = m
             .layers
@@ -83,21 +137,12 @@ impl Sqnn {
                 b: l.b.iter().map(|&x| Q13::from_f64(x)).collect(),
             })
             .collect();
-        let mut s = Sqnn {
-            name: m.name.clone(),
-            layers,
-            activation: m.activation,
-            output_activation: m.output_activation,
-            k,
-            feature_center: m.feature_center.clone(),
-            feature_scale: m.feature_scale.clone(),
-            packed: Vec::new(),
-        };
-        s.pack();
-        s
+        Sqnn::from_layers(&m.name, layers, m.activation, m.output_activation, k)
+            .expect("float model shape already validated by Mlp")
     }
 
-    /// Build the flattened hot-path layout from `layers`.
+    /// Build the flattened hot-path layout from `layers` (widths already
+    /// validated by the constructors).
     fn pack(&mut self) {
         let n_layers = self.layers.len();
         let output_activation = self.output_activation;
@@ -106,10 +151,6 @@ impl Sqnn {
             .iter()
             .enumerate()
             .map(|(li, l)| {
-                assert!(
-                    l.in_dim <= MAX_WIDTH && l.out_dim <= MAX_WIDTH,
-                    "layer wider than the packed fast path ({MAX_WIDTH})"
-                );
                 let mut sign = Vec::with_capacity(l.w.len());
                 let mut n_terms = Vec::with_capacity(l.w.len());
                 let mut exps = Vec::new();
@@ -142,6 +183,18 @@ impl Sqnn {
     }
     pub fn out_dim(&self) -> usize {
         self.layers.last().unwrap().out_dim
+    }
+
+    /// The AU datapath: φ for the taped-out chip, the baked Q13 tanh
+    /// table for the software-ablation tanh SQNN. Both are exact integer
+    /// paths — no float anywhere in the kernel (the tanh arm used to
+    /// round-trip through `f64::tanh`; see `nn::tanh_table`).
+    #[inline(always)]
+    fn activate(&self, v: Q13) -> Q13 {
+        match self.activation {
+            Activation::Phi => phi_q13(v),
+            Activation::Tanh => tanh_q13(v),
+        }
     }
 
     /// Bit-accurate forward pass on Q13 inputs.
@@ -198,12 +251,7 @@ impl Sqnn {
                 }
                 let mut v = Q13(acc.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32);
                 if layer.activation {
-                    v = match self.activation {
-                        Activation::Phi => phi_q13(v),
-                        // The chip's AU is φ; a tanh SQNN (used only in
-                        // software ablations) quantizes float tanh.
-                        Activation::Tanh => Q13::from_f64(v.to_f64().tanh()),
-                    };
+                    v = self.activate(v);
                 }
                 next[j] = v.0;
             }
@@ -233,8 +281,8 @@ impl Sqnn {
     /// reassociated accumulation order cannot change any bit.
     ///
     /// This convenience form allocates a fresh [`BatchScratch`] per
-    /// call; the serving hot path ([`crate::asic::MlpChip`], and through
-    /// it the molecule farm) holds its own scratch and calls
+    /// call; the serving hot path (`asic::MlpChip`, and through it the
+    /// molecule farm) holds its own scratch and calls
     /// [`Self::forward_q13_batch_with`] so a steady-state tick allocates
     /// nothing.
     pub fn forward_q13_batch_into(&self, xs: &[Q13], batch: usize, out: &mut [Q13]) {
@@ -320,10 +368,7 @@ impl Sqnn {
                 for (slot, &a) in dst.iter_mut().zip(acc.iter()) {
                     let mut v = Q13(a.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32);
                     if layer.activation {
-                        v = match self.activation {
-                            Activation::Phi => phi_q13(v),
-                            Activation::Tanh => Q13::from_f64(v.to_f64().tanh()),
-                        };
+                        v = self.activate(v);
                     }
                     *slot = v.0;
                 }
@@ -362,16 +407,66 @@ impl Sqnn {
                 acc += layer.b[j].0 as i64;
                 let mut v = Q13(acc.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32);
                 if li < last || self.output_activation {
-                    v = match self.activation {
-                        Activation::Phi => phi_q13(v),
-                        Activation::Tanh => Q13::from_f64(v.to_f64().tanh()),
-                    };
+                    v = self.activate(v);
                 }
                 next.push(v);
             }
             cur = next;
         }
         cur
+    }
+
+    /// Total number of active shift terms (hardware SUs actually used).
+    pub fn total_shift_terms(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.iter().map(|w| w.terms()).sum::<usize>())
+            .sum()
+    }
+
+    /// The dequantized float weights (what the L2 JAX kernel multiplies
+    /// by) — used to cross-check the Python/Rust pipelines. Conditioning
+    /// constants are not part of the core network; use
+    /// [`ConditionedSqnn::dequantized_mlp`] to carry them over.
+    #[cfg(feature = "std")]
+    pub fn dequantized_mlp(&self) -> crate::Result<Mlp> {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| crate::nn::mlp::Dense {
+                out_dim: l.out_dim,
+                in_dim: l.in_dim,
+                w: l.w.iter().map(|w| w.value()).collect(),
+                b: l.b.iter().map(|b| b.to_f64()).collect(),
+            })
+            .collect();
+        Mlp::from_layers(&self.name, layers, self.activation, self.output_activation)
+    }
+}
+
+/// Host-side serving wrapper: a core [`Sqnn`] plus the float feature
+/// conditioning of the FPGA stage (center/scale as trained/exported by
+/// the model). This is the float glue that used to live on `Sqnn`
+/// itself — moved across the seam so the core network stays float-free.
+#[cfg(feature = "std")]
+#[derive(Debug, Clone)]
+pub struct ConditionedSqnn {
+    pub net: Sqnn,
+    /// Feature conditioning constants (the FPGA stage; see `nn::Mlp`).
+    pub feature_center: Vec<f64>,
+    pub feature_scale: Vec<f64>,
+}
+
+#[cfg(feature = "std")]
+impl ConditionedSqnn {
+    /// Quantize a trained float model and carry its conditioning
+    /// constants (the old `Sqnn::from_mlp` semantics).
+    pub fn from_mlp(m: &Mlp, k: usize) -> Self {
+        ConditionedSqnn {
+            net: Sqnn::from_mlp(m, k),
+            feature_center: m.feature_center.clone(),
+            feature_scale: m.feature_scale.clone(),
+        }
     }
 
     /// Float-in/float-out convenience wrapper on *raw* features: applies
@@ -396,31 +491,12 @@ impl Sqnn {
                 .collect()
         };
         let q: Vec<Q13> = cond.iter().map(|&v| Q13::from_f64(v)).collect();
-        self.forward_q13(&q).into_iter().map(|v| v.to_f64()).collect()
+        self.net.forward_q13(&q).into_iter().map(|v| v.to_f64()).collect()
     }
 
-    /// Total number of active shift terms (hardware SUs actually used).
-    pub fn total_shift_terms(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| l.w.iter().map(|w| w.terms()).sum::<usize>())
-            .sum()
-    }
-
-    /// The dequantized float weights (what the L2 JAX kernel multiplies
-    /// by) — used to cross-check the Python/Rust pipelines.
-    pub fn dequantized_mlp(&self) -> Result<Mlp> {
-        let layers = self
-            .layers
-            .iter()
-            .map(|l| crate::nn::mlp::Dense {
-                out_dim: l.out_dim,
-                in_dim: l.in_dim,
-                w: l.w.iter().map(|w| w.value()).collect(),
-                b: l.b.iter().map(|b| b.to_f64()).collect(),
-            })
-            .collect();
-        let mut m = Mlp::from_layers(&self.name, layers, self.activation, self.output_activation)?;
+    /// Dequantized float view including the conditioning constants.
+    pub fn dequantized_mlp(&self) -> crate::Result<Mlp> {
+        let mut m = self.net.dequantized_mlp()?;
         m.feature_center = self.feature_center.clone();
         m.feature_scale = self.feature_scale.clone();
         Ok(m)
@@ -446,7 +522,7 @@ mod tests {
     #[test]
     fn matches_dequantized_float_within_datapath_error() {
         let m = trained_like_model();
-        let s = Sqnn::from_mlp(&m, 3);
+        let s = ConditionedSqnn::from_mlp(&m, 3);
         let deq = s.dequantized_mlp().unwrap();
         let mut rng = Pcg::new(4);
         for _ in 0..2_000 {
@@ -505,6 +581,75 @@ mod tests {
             let nweights: usize = m.layers.iter().map(|l| l.w.len()).sum();
             assert!(s.total_shift_terms() <= k * nweights);
             assert!(s.total_shift_terms() > 0);
+        }
+    }
+
+    #[test]
+    fn core_constructor_validates_with_typed_errors() {
+        use crate::error::CoreError;
+        let layer = |out_dim: usize, in_dim: usize| SqnnLayer {
+            out_dim,
+            in_dim,
+            w: vec![ShiftWeight::zero(); out_dim * in_dim],
+            b: vec![Q13::ZERO; out_dim],
+        };
+        assert_eq!(
+            Sqnn::from_layers("e", vec![], Activation::Phi, false, 3).unwrap_err(),
+            CoreError::EmptyNetwork
+        );
+        // chain mismatch: 3→2 then 3→1
+        assert_eq!(
+            Sqnn::from_layers(
+                "c",
+                vec![layer(2, 3), layer(1, 3)],
+                Activation::Phi,
+                false,
+                3
+            )
+            .unwrap_err(),
+            CoreError::LayerShapeMismatch { layer: 1 }
+        );
+        // over-wide layer
+        assert_eq!(
+            Sqnn::from_layers("w", vec![layer(MAX_WIDTH + 1, 3)], Activation::Phi, false, 3)
+                .unwrap_err(),
+            CoreError::LayerTooWide { width: MAX_WIDTH + 1, max: MAX_WIDTH }
+        );
+        // malformed weight vector
+        let mut bad = layer(2, 3);
+        bad.w.pop();
+        assert_eq!(
+            Sqnn::from_layers("s", vec![bad], Activation::Phi, false, 3).unwrap_err(),
+            CoreError::LayerShapeMismatch { layer: 0 }
+        );
+        // and a good one round-trips through the same path as from_mlp
+        let ok = Sqnn::from_layers("ok", vec![layer(2, 3)], Activation::Phi, false, 3).unwrap();
+        assert_eq!(ok.arch(), vec![3, 2]);
+        assert_eq!(ok.name, "ok");
+    }
+
+    #[test]
+    fn tanh_network_runs_the_integer_table_path() {
+        // A tanh SQNN (software ablation) must produce the same bits as
+        // the float-tanh round-trip it replaced, on scalar, packed, and
+        // batch kernels alike.
+        let mut rng = Pcg::new(77);
+        let mut m = Mlp::init_random("t", &[3, 4, 2], Activation::Tanh, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.7;
+            }
+        }
+        let s = Sqnn::from_mlp(&m, 3);
+        for _ in 0..500 {
+            let x: Vec<Q13> = (0..3).map(|_| Q13::from_f64(rng.range(-4.0, 4.0))).collect();
+            let got = s.forward_q13(&x);
+            let want = s.forward_q13_reference(&x);
+            assert_eq!(got, want);
+            // float-tanh round-trip reference for the first layer's AU
+            for v in &got {
+                assert!(v.0.abs() <= 1023, "tanh output must stay in (−1, 1)");
+            }
         }
     }
 
@@ -596,7 +741,7 @@ mod tests {
     #[test]
     fn saturating_behaviour_on_extreme_inputs() {
         let m = trained_like_model();
-        let s = Sqnn::from_mlp(&m, 3);
+        let s = ConditionedSqnn::from_mlp(&m, 3);
         let y = s.forward(&[1000.0, -1000.0, 1000.0]);
         for v in y {
             assert!(v.abs() <= 4.0);

@@ -14,6 +14,13 @@
 //! residual and the recursion stops early with that step's error. A
 //! property test asserts `|w − w_q| ≤ |w|·3^{−terms}` and monotone
 //! non-increasing error in K.
+//!
+//! Core/host seam: [`ShiftWeight`] and its integer shift-apply are core
+//! (the stored format and the datapath); the float→shift quantizer and
+//! the dequantized float views are host-only (`std`) — quantization is
+//! host initialization work, never on-device.
+
+use alloc::vec::Vec;
 
 use crate::fixedpoint::shift_raw;
 
@@ -41,7 +48,8 @@ impl ShiftWeight {
         ShiftWeight { sign: 0, exps: Vec::new() }
     }
 
-    /// Reconstructed float value `s·Σ 2^{n_k}`.
+    /// Reconstructed float value `s·Σ 2^{n_k}` (host side).
+    #[cfg(feature = "std")]
     pub fn value(&self) -> f64 {
         let mag: f64 = self.exps.iter().map(|&n| (2f64).powi(n)).sum();
         self.sign as f64 * mag
@@ -74,6 +82,7 @@ impl ShiftWeight {
 
 /// The basis function Q(w) of Eq. (8): the power of two with exponent
 /// ⌈log₂(|w|/1.5)⌉, returned as that exponent. `w` must be > 0.
+#[cfg(feature = "std")]
 pub fn basis_exponent(w: f64) -> i32 {
     debug_assert!(w > 0.0);
     let y = w / 1.5;
@@ -91,6 +100,7 @@ pub fn basis_exponent(w: f64) -> i32 {
 /// Quantize a float weight with at most `k` power-of-two terms
 /// (Eqs. 5–8). Exponents are clamped to the hardware range
 /// [`EXP_MIN`, `EXP_MAX`]; residuals below 2^EXP_MIN are dropped.
+#[cfg(feature = "std")]
 pub fn quantize_weight(w: f64, k: usize) -> ShiftWeight {
     if w == 0.0 || !w.is_finite() {
         return ShiftWeight::zero();
@@ -114,12 +124,14 @@ pub fn quantize_weight(w: f64, k: usize) -> ShiftWeight {
 }
 
 /// Quantize a full weight matrix (row-major `rows × cols`).
+#[cfg(feature = "std")]
 pub fn quantize_matrix(w: &[f64], k: usize) -> Vec<ShiftWeight> {
     w.iter().map(|&x| quantize_weight(x, k)).collect()
 }
 
 /// Dequantized float view of a quantized matrix (for QAT equivalence and
 /// the L2 kernel, which reconstructs `w_q` rather than shifting).
+#[cfg(feature = "std")]
 pub fn dequantize(ws: &[ShiftWeight]) -> Vec<f64> {
     ws.iter().map(|w| w.value()).collect()
 }
@@ -128,6 +140,7 @@ pub fn dequantize(ws: &[ShiftWeight]) -> Vec<f64> {
 /// terms: 3⁻ᵐ. (Overshoot at step m clips the residual to zero with an
 /// error ≤ residual/3 ≤ |w|·3⁻ᵐ; undershoot continues with residual
 /// ≤ |w|·3⁻ᵐ.)
+#[cfg(feature = "std")]
 pub fn error_bound(m: usize) -> f64 {
     (3f64).powi(-(m as i32))
 }

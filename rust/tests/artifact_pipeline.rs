@@ -5,7 +5,7 @@
 //! fresh checkout.
 
 use nvnmd::features;
-use nvnmd::nn::{Mlp, Sqnn};
+use nvnmd::nn::{ConditionedSqnn, Mlp, Sqnn};
 use nvnmd::quant;
 use nvnmd::runtime::{HloForceModel, Runtime, Tensor};
 use nvnmd::coordinator::vn::HForceModel;
@@ -204,12 +204,12 @@ fn quant_vectors_artifact_is_self_consistent() {
 fn chip_and_float_agree_on_equilibrium_features() {
     require_artifacts!();
     let m = Mlp::load(&nvnmd::artifact_path("models/water_qnn_k3.json")).unwrap();
-    let s = Sqnn::from_mlp(&m, m.quant_k.max(3));
+    let s = ConditionedSqnn::from_mlp(&m, m.quant_k.max(3));
     let pes = nvnmd::potentials::WaterPes::dft_surrogate();
     let pos = pes.equilibrium();
     for h in [1usize, 2] {
         let feats = features::water_features(&pos, h);
-        // Sqnn::forward applies the same conditioning stage as the FPGA
+        // ConditionedSqnn::forward applies the same conditioning stage as the FPGA
         let chip_out = s.forward(&feats);
         let float_out = m.forward(&feats);
         for (c, f) in chip_out.iter().zip(&float_out) {

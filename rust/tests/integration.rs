@@ -9,7 +9,7 @@ use nvnmd::datasets;
 use nvnmd::features;
 use nvnmd::fixedpoint::Q13;
 use nvnmd::md::{initialize_velocities, ForceField, System};
-use nvnmd::nn::{Activation, Mlp, Sqnn};
+use nvnmd::nn::{Activation, ConditionedSqnn, Mlp};
 use nvnmd::potentials::WaterPes;
 use nvnmd::testkit;
 use nvnmd::util::rng::Pcg;
@@ -101,7 +101,7 @@ fn end_to_end_tiny_pipeline_data_train_chip_md() {
     let (m, test_x, test_y) = train_tiny_water_model(120, 60);
 
     // quantized chip accuracy vs float
-    let s = Sqnn::from_mlp(&m, 3);
+    let s = ConditionedSqnn::from_mlp(&m, 3);
     let mut err_q = 0.0;
     let mut err_zero = 0.0;
     let mut n = 0;
