@@ -114,6 +114,55 @@ X_TANH = [
     [-100, 200, -300],
 ]
 
+# The shift-program edge network: [3, 4, 2], linear output. Exercises
+# the compiler's corner cases — an all-zero-weight output row (empty
+# program, bias only), a nonzero but term-free weight, and a layer
+# whose every exponent is negative (pure truncating right shifts).
+# Fed through the SWAR batch kernel at batch 13 = one full 8-lane tile
+# plus a 5-lane ragged tail.
+NET_EDGE = [
+    (4, 3,
+     [(1, [0]), (-1, [-2, -5]), (0, []),
+      (0, []), (0, []), (0, []),
+      (1, [2]), (1, [-1]), (-1, [0, -3, -7]),
+      (-1, [-4]), (1, [1, 0]), (1, [])],
+     [33, 700, -1200, 5]),
+    (2, 4,
+     [(1, [-1, -3]), (-1, [-2]), (1, [-5]), (-1, [-1]),
+      (-1, [-6]), (1, [-1]), (1, [-2, -4]), (1, [-8])],
+     [-77, 256]),
+]
+X_EDGE = [
+    [4095, -4096, 4095],
+    [-4096, 4095, -4096],
+    [0, 0, 0],
+    [1, -1, 1],
+    [1024, 512, -256],
+    [-1023, 77, 2048],
+    [333, -333, 333],
+    [2048, -2048, 1024],
+    [-512, 256, -128],
+    [4095, 4095, 4095],
+    [-4096, -4096, -4096],
+    [123, -456, 789],
+    [-1012, 345, -678],
+]
+
+
+def program_stats(layers):
+    """Mirror of Sqnn::shift_program_stats (pack-time compiler shape)."""
+    weights = zero = single = ops = 0
+    for (_out_dim, _in_dim, w, _b) in layers:
+        for sign, exps in w:
+            weights += 1
+            if sign == 0:
+                zero += 1
+            else:
+                if len(exps) == 1:
+                    single += 1
+                ops += len(exps)
+    return weights, zero, single, ops
+
 # ------------------------------------------------------------- rsqrt
 
 SEED_FRAC, LUT_SIZE, WORK_FRAC = 12, 64, 24
@@ -208,6 +257,16 @@ def main():
         print(f"//   {x} -> {forward(NET_TANH, 'tanh', True, x)}")
     print("TANH_EXPECTED:")
     print(rust_rows([v for x in X_TANH for v in forward(NET_TANH, 'tanh', True, x)]))
+
+    print("// NET_EDGE expected (per lane, 2 outputs):")
+    for x in X_EDGE:
+        print(f"//   {x} -> {forward(NET_EDGE, 'phi', False, x)}")
+    print("EDGE_EXPECTED:")
+    print(rust_rows([v for x in X_EDGE for v in forward(NET_EDGE, 'phi', False, x)]))
+
+    print("PROGRAM STATS (weights, zero, single_term, ops):")
+    for name, net in [("phi", NET_PHI), ("tanh", NET_TANH), ("edge", NET_EDGE)]:
+        print(f"    {name}: {program_stats(net)}")
 
     print("RSQRT (in, out24_iters2, out10_iters1):")
     for x in RSQRT_IN:

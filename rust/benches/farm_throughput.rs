@@ -1,6 +1,9 @@
 //! Farm serving-path throughput: molecule-steps/second of the batched,
 //! sharded [`WaterFarm`] — the measured counterpart of the §VI A₂
-//! (intra-ASIC parallelization) projection — plus the mixed-species
+//! (intra-ASIC parallelization) projection. Every shard's MLP stage
+//! runs the SWAR shift-program batch kernel (`nn::sqnn`), so these
+//! numbers track the end-to-end serving effect of the kernel work that
+//! `hotpath_micro`'s `batch_sweep` isolates — plus the mixed-species
 //! [`MoleculeFarm`] (water + ethanol-class molecules, each shard
 //! programmed with its own species model) reporting molecule-steps/s
 //! **per species**. Emits host throughput for inline vs threaded shard

@@ -14,6 +14,7 @@ use nvnmd::md::{initialize_velocities, System};
 use nvnmd::nn::Sqnn;
 use nvnmd::potentials::WaterPes;
 use nvnmd::runtime::{Runtime, Tensor};
+use nvnmd::util::json::{self, Value};
 use nvnmd::util::rng::Pcg;
 
 fn initial() -> System {
@@ -55,9 +56,18 @@ fn main() {
     // chip drives it. Each measurement runs a whole SoA batch, so
     // ns/inference = median / batch — recorded as notes for the §Perf
     // iteration log.
+    //
+    // Old-vs-new sweep: `sqnn_forward_batch{B}` is the serving path
+    // (the SWAR shift-program kernel — same JSON key as the historical
+    // §Perf series), `sqnn_reference_batch{B}` the pre-program kernel
+    // kept as the reference datapath. The per-batch rows land in the
+    // `batch_sweep` section of the JSON artifact so the ≥2× batch-64
+    // claim is a recorded number, not prose.
     let mut batch_stats = Vec::new();
+    let mut sweep_rows: Vec<Value> = Vec::new();
     let mut scratch = nvnmd::nn::sqnn::BatchScratch::default();
-    for batch in [8usize, 64] {
+    let mut ref_scratch = nvnmd::nn::sqnn::BatchScratch::default();
+    for batch in [1usize, 8, 16, 64] {
         let mut xs = vec![Q13::ZERO; net.in_dim() * batch];
         for (i, slot) in xs.iter_mut().enumerate() {
             *slot = Q13::from_f64(0.55 + 0.01 * (i % 23) as f64);
@@ -67,17 +77,37 @@ fn main() {
             net.forward_q13_batch_with(&xs, batch, &mut out, &mut scratch);
             out[0].0
         });
-        batch_stats.push((batch, st));
+        let rf = b.measure(&format!("sqnn_reference_batch{batch}"), || {
+            net.forward_q13_batch_reference(&xs, batch, &mut out, &mut ref_scratch);
+            out[0].0
+        });
+        let swar_per_inf = st.median_ns / batch as f64;
+        let ref_per_inf = rf.median_ns / batch as f64;
+        sweep_rows.push(json::obj(vec![
+            ("batch", json::num(batch as f64)),
+            ("swar_ns_per_inference", json::num(swar_per_inf)),
+            ("reference_ns_per_inference", json::num(ref_per_inf)),
+            ("speedup_vs_reference", json::num(ref_per_inf / swar_per_inf)),
+        ]));
+        batch_stats.push((batch, st, rf));
     }
+    b.attach(
+        "batch_sweep",
+        Value::Arr(sweep_rows),
+    );
     b.note("sqnn_scalar_ns_per_inference", format!("{:.1}", scalar.median_ns));
     b.note("sqnn_scalar_into_ns_per_inference", format!("{:.1}", scalar_into.median_ns));
-    for (batch, st) in &batch_stats {
+    for (batch, st, rf) in &batch_stats {
         b.note(
             &format!("sqnn_batch{batch}_ns_per_inference"),
             format!("{:.1}", st.median_ns / *batch as f64),
         );
+        b.note(
+            &format!("sqnn_batch{batch}_speedup_vs_reference"),
+            format!("{:.2}x", rf.median_ns / st.median_ns),
+        );
     }
-    if let Some((batch, st)) = batch_stats.last() {
+    if let Some((batch, st, _)) = batch_stats.last() {
         let per_inf = st.median_ns / *batch as f64;
         let vs_scalar = scalar.median_ns / per_inf;
         let vs_into = scalar_into.median_ns / per_inf;
@@ -91,6 +121,37 @@ fn main() {
             "sqnn_batch_speedup_vs_scalar_into",
             format!("batch{batch}: {vs_into:.2}x faster than the alloc-free scalar path"),
         );
+    }
+
+    // The same sweep on a wide ethanol-class model (32→16→16→3): the
+    // water MLP is only 3 wide, so this is where the 8-lane tiles and
+    // the fused single-term instructions have room to show up.
+    {
+        let wide = nvnmd::exp::molecule_model_or_fallback("ethanol");
+        let wnet = Sqnn::from_mlp(&wide, 3);
+        let mut wide_rows: Vec<Value> = Vec::new();
+        for batch in [8usize, 64] {
+            let mut xs = vec![Q13::ZERO; wnet.in_dim() * batch];
+            for (i, slot) in xs.iter_mut().enumerate() {
+                *slot = Q13::from_f64(0.3 + 0.007 * (i % 41) as f64);
+            }
+            let mut out = vec![Q13::ZERO; wnet.out_dim() * batch];
+            let st = b.measure(&format!("sqnn_wide_forward_batch{batch}"), || {
+                wnet.forward_q13_batch_with(&xs, batch, &mut out, &mut scratch);
+                out[0].0
+            });
+            let rf = b.measure(&format!("sqnn_wide_reference_batch{batch}"), || {
+                wnet.forward_q13_batch_reference(&xs, batch, &mut out, &mut ref_scratch);
+                out[0].0
+            });
+            wide_rows.push(json::obj(vec![
+                ("batch", json::num(batch as f64)),
+                ("swar_ns_per_inference", json::num(st.median_ns / batch as f64)),
+                ("reference_ns_per_inference", json::num(rf.median_ns / batch as f64)),
+                ("speedup_vs_reference", json::num(rf.median_ns / st.median_ns)),
+            ]));
+        }
+        b.attach("batch_sweep_wide", Value::Arr(wide_rows));
     }
 
     // L3b: chip inference with cycle/energy accounting.

@@ -195,11 +195,16 @@ impl MlpChip {
 
     /// Batched inference on an SoA batch (feature `i` of lane `b` at
     /// `xs[i*batch + b]`, output `o` of lane `b` at `out[o*batch + b]`):
-    /// the weight-stationary kernel (`Sqnn::forward_q13_batch_with`,
+    /// the weight-stationary **SWAR shift-program kernel**
+    /// (`Sqnn::forward_q13_batch_with` — 8-lane accumulator tiles
+    /// streaming each layer's precompiled instruction stream,
     /// bit-identical per lane to the scalar datapath) run against the
     /// chip-owned scratch (allocation-free in steady state), plus the
     /// lane-model cycle accounting and per-inference op/energy
-    /// accounting.
+    /// accounting. The SWAR tile is the software analogue of the lane
+    /// model's replicated shift–add array: `cfg.lanes` models silicon
+    /// parallelism in cycles, the tile delivers the same parallelism in
+    /// host SIMD.
     pub fn infer_batch_into(&mut self, xs: &[Q13], batch: usize, out: &mut [Q13]) -> Result<()> {
         let net = self
             .net
@@ -297,7 +302,9 @@ mod tests {
         let mut chip = water_like_chip();
         let net = chip.network().unwrap().clone();
         let mut rng = Pcg::new(17);
-        for batch in [1usize, 5, 32] {
+        // 13 and 67 straddle the SWAR tile width (full tiles + ragged
+        // tails); 1 and 5 are tail-only; 32 is tile-only.
+        for batch in [1usize, 5, 13, 32, 67] {
             let lanes: Vec<Vec<Q13>> = (0..batch)
                 .map(|_| (0..3).map(|_| Q13::from_f64(rng.range(-2.0, 2.0))).collect())
                 .collect();

@@ -21,9 +21,11 @@
 //!    triples; generic molecules: the `fpga::MoleculeFpga` 4·n_nb
 //!    descriptor path);
 //! 2. `MlpChip::infer_batch_into` — one weight-stationary batched
-//!    inference over all shard lanes, with the `ChipConfig::lanes`
-//!    intra-ASIC parallelism model (§VI A₂) accounting ⌈B/lanes⌉
-//!    pipeline waves;
+//!    inference over all shard lanes via the SWAR shift-program kernel
+//!    (`nn::sqnn`: precompiled per-layer instruction streams executed
+//!    over 8-lane accumulator tiles, bit-identical to the scalar
+//!    datapath), with the `ChipConfig::lanes` intra-ASIC parallelism
+//!    model (§VI A₂) accounting ⌈B/lanes⌉ pipeline waves;
 //! 3. integrate — force reconstruction (+ Newton's third law where the
 //!    species needs it) and integration per molecule.
 //!

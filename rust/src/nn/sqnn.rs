@@ -3,6 +3,45 @@
 //! Q(1,2,10). This is the bit-accurate software model of the ASIC MLP
 //! chip (Fig. 7); `asic::MlpChip` wraps it with the cycle/energy model.
 //!
+//! ## Shift programs (pack-time compilation)
+//!
+//! The chip's weight memory is distributed and static: every weight is a
+//! sign plus ≤K shift exponents, wired into its shift unit once at
+//! programming time. The software model mirrors that at pack time by
+//! **compiling each layer into a shift program** — a linear instruction
+//! stream of [`ShiftOp`]s (`{src, sh, neg}`: read input row `src`, shift
+//! by `sh`, add or subtract into the accumulator), with per-neuron
+//! extents (`op_ends`). The compilation folds away all the per-weight
+//! indirection the hot loop used to pay:
+//!
+//! * zero weights (`sign == 0`) emit **no** instruction at all;
+//! * a single-term weight — the dominant case in trained Q13 models —
+//!   is exactly **one** fused instruction (no term-count load, no
+//!   exponent-slice bounds check);
+//! * multi-term weights unroll into consecutive instructions sharing
+//!   `src`/`neg`, so the kernel never walks a nested `exps` slice.
+//!
+//! ## The SWAR batch kernel
+//!
+//! [`Sqnn::forward_q13_batch_with`] executes the shift program over the
+//! SoA lane planes in fixed-width tiles of [`SWAR_LANES`] lanes: a
+//! `[i64; SWAR_LANES]` register-resident accumulator tile per output
+//! neuron, one instruction applied to the whole tile before the next is
+//! decoded. The tile loops are plain indexed loops over fixed-size
+//! arrays so LLVM autovectorizes them (no `std::simd`, no intrinsics —
+//! the kernel compiles unchanged in the `no_std` core profile); the
+//! ragged tail (`batch % SWAR_LANES`) runs the same code monomorphized
+//! at tile width 1. The tile is the software picture of the ASIC's
+//! replicated parallel shift–add array (§VI A₂): lanes advance in
+//! lock-step through one statically-programmed instruction stream.
+//!
+//! **Bit-identity contract:** the lane accumulators are exact `i64` and
+//! nothing saturates mid-sum, so neither the tiling nor the per-term
+//! (instead of per-weight) accumulation order can change a single output
+//! bit. The pre-program kernel is kept as
+//! [`Sqnn::forward_q13_batch_reference`] and the property tests +
+//! `tests/core_golden.rs` (both build profiles) pin the equivalence.
+//!
 //! Core/host seam: [`Sqnn`] itself is core — pure integer storage
 //! (quantized weights, raw Q13 biases) plus the scalar and
 //! weight-stationary batch kernels, constructible on-device from
@@ -34,18 +73,40 @@ pub struct SqnnLayer {
     pub b: Vec<Q13>,
 }
 
-/// Hot-path layer layout: the shift parameters flattened into dense
-/// arrays (no per-weight heap indirection). §Perf: this packing takes
-/// the water-MLP forward from ~156 ns to well under 100 ns.
+/// One compiled shift-program instruction: apply `±(x[src] << sh)` (or
+/// an arithmetic right shift for negative `sh`) to the accumulator tile.
+/// A single-term weight is exactly one of these; a K-term weight is K
+/// consecutive ones sharing `src`/`neg`; a zero weight is none.
+#[derive(Debug, Clone, Copy)]
+struct ShiftOp {
+    /// Source input row of the SoA plane.
+    src: u32,
+    /// Shift exponent: ≥ 0 left shift, < 0 truncating arithmetic right
+    /// shift (the RTL's `P(x, n)`, Eq. 11).
+    sh: i8,
+    /// Subtract instead of add (the weight's sign selector).
+    neg: bool,
+}
+
+/// Hot-path layer layout: the per-layer **shift program** (see the
+/// module doc) plus the legacy dense shift-parameter arrays that the
+/// reference batch datapath still walks. §Perf: the original packing
+/// took the water-MLP forward from ~156 ns to well under 100 ns; the
+/// shift program removes the remaining per-weight decode entirely.
 #[derive(Debug, Clone)]
 struct PackedLayer {
     out_dim: usize,
     in_dim: usize,
-    /// Per weight (row-major out×in): −1/0/+1.
+    /// Compiled shift program, all neurons concatenated.
+    ops: Vec<ShiftOp>,
+    /// Per output neuron: exclusive end index into `ops` (neuron `j`
+    /// runs `ops[op_ends[j-1]..op_ends[j]]`, starting at 0).
+    op_ends: Vec<u32>,
+    /// Reference datapath only — per weight (row-major out×in): −1/0/+1.
     sign: Vec<i8>,
-    /// Per weight: number of active terms.
+    /// Reference datapath only — per weight: number of active terms.
     n_terms: Vec<u8>,
-    /// All active exponents, flattened in weight order.
+    /// Reference datapath only — active exponents, in weight order.
     exps: Vec<i8>,
     /// Q13 bias raws.
     bias: Vec<i32>,
@@ -55,10 +116,32 @@ struct PackedLayer {
 /// Maximum layer width of the packed fast path (stack scratch size).
 pub const MAX_WIDTH: usize = 128;
 
-/// Reusable scratch of the batch kernel: the two ping-pong activation
-/// planes and the lane accumulators. Own one per serving shard/chip and
-/// pass it to [`Sqnn::forward_q13_batch_with`] so steady-state batched
-/// inference allocates nothing (buffers grow to the high-water
+/// SWAR tile width of the batch kernel: lanes are processed in chunks of
+/// this many `i64` accumulators (two AVX2 / one AVX-512 register's
+/// worth), the ragged tail at tile width 1.
+pub const SWAR_LANES: usize = 8;
+
+/// Aggregate shape of a network's compiled shift programs — exposed so
+/// the golden-vector suite can pin the compiler itself, not just the
+/// kernel outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShiftProgramStats {
+    /// Total weights across all layers (incl. zero weights).
+    pub weights: usize,
+    /// Weights with `sign == 0` — compiled to nothing.
+    pub zero_weights: usize,
+    /// Nonzero single-term weights — the fused one-instruction case.
+    pub single_term_weights: usize,
+    /// Total instructions (= active shift terms).
+    pub ops: usize,
+}
+
+/// Reusable scratch of the batch kernels: the two ping-pong activation
+/// planes, plus the lane-accumulator vector only the reference kernel
+/// still uses (the SWAR kernel's accumulator tiles live in registers).
+/// Own one per serving shard/chip and pass it to
+/// [`Sqnn::forward_q13_batch_with`] so steady-state batched inference
+/// allocates nothing (buffers grow to the high-water
 /// `max_layer_width × batch` and are reused).
 #[derive(Debug, Clone, Default)]
 pub struct BatchScratch {
@@ -142,7 +225,9 @@ impl Sqnn {
     }
 
     /// Build the flattened hot-path layout from `layers` (widths already
-    /// validated by the constructors).
+    /// validated by the constructors): compile each layer's shift
+    /// program and keep the dense shift-parameter arrays for the
+    /// reference datapath.
     fn pack(&mut self) {
         let n_layers = self.layers.len();
         let output_activation = self.output_activation;
@@ -154,14 +239,31 @@ impl Sqnn {
                 let mut sign = Vec::with_capacity(l.w.len());
                 let mut n_terms = Vec::with_capacity(l.w.len());
                 let mut exps = Vec::new();
-                for w in &l.w {
-                    sign.push(w.sign);
-                    n_terms.push(w.terms() as u8);
-                    exps.extend(w.exps.iter().map(|&e| e as i8));
+                let mut ops = Vec::new();
+                let mut op_ends = Vec::with_capacity(l.out_dim);
+                for j in 0..l.out_dim {
+                    for i in 0..l.in_dim {
+                        let w = &l.w[j * l.in_dim + i];
+                        sign.push(w.sign);
+                        n_terms.push(w.terms() as u8);
+                        exps.extend(w.exps.iter().map(|&e| e as i8));
+                        if w.sign == 0 {
+                            continue;
+                        }
+                        let neg = w.sign < 0;
+                        ops.extend(w.exps.iter().map(|&e| ShiftOp {
+                            src: i as u32,
+                            sh: e as i8,
+                            neg,
+                        }));
+                    }
+                    op_ends.push(ops.len() as u32);
                 }
                 PackedLayer {
                     out_dim: l.out_dim,
                     in_dim: l.in_dim,
+                    ops,
+                    op_ends,
                     sign,
                     n_terms,
                     exps,
@@ -170,6 +272,31 @@ impl Sqnn {
                 }
             })
             .collect();
+    }
+
+    /// Shape of the compiled shift programs, aggregated over all layers.
+    pub fn shift_program_stats(&self) -> ShiftProgramStats {
+        let mut s = ShiftProgramStats {
+            weights: 0,
+            zero_weights: 0,
+            single_term_weights: 0,
+            ops: 0,
+        };
+        for l in &self.layers {
+            for w in &l.w {
+                s.weights += 1;
+                if w.sign == 0 {
+                    s.zero_weights += 1;
+                } else {
+                    if w.terms() == 1 {
+                        s.single_term_weights += 1;
+                    }
+                    s.ops += w.terms();
+                }
+            }
+        }
+        debug_assert_eq!(s.ops, self.packed.iter().map(|l| l.ops.len()).sum::<usize>());
+        s
     }
 
     pub fn arch(&self) -> Vec<usize> {
@@ -212,7 +339,8 @@ impl Sqnn {
 
     /// Allocation-free forward: writes the outputs into `out` (must be
     /// exactly `out_dim()` long). Same bit-exact datapath as
-    /// [`Self::forward_q13`].
+    /// [`Self::forward_q13`] — runs the compiled shift program at tile
+    /// width 1 over stack scratch.
     pub fn forward_q13_into(&self, x: &[Q13], out: &mut [Q13]) {
         let mut buf_a = [0i32; MAX_WIDTH];
         let mut buf_b = [0i32; MAX_WIDTH];
@@ -229,32 +357,7 @@ impl Sqnn {
             } else {
                 (&buf_b[..], &mut buf_a[..])
             };
-            let mut term_idx = 0usize;
-            let mut w_idx = 0usize;
-            for j in 0..layer.out_dim {
-                let mut acc: i64 = layer.bias[j] as i64;
-                for xi in cur.iter().take(layer.in_dim) {
-                    let sign = layer.sign[w_idx];
-                    let nt = layer.n_terms[w_idx] as usize;
-                    w_idx += 1;
-                    if sign == 0 {
-                        debug_assert_eq!(nt, 0);
-                        continue;
-                    }
-                    let xv = *xi as i64;
-                    let mut wsum: i64 = 0;
-                    for &e in &layer.exps[term_idx..term_idx + nt] {
-                        wsum += if e >= 0 { xv << e } else { xv >> (-e) };
-                    }
-                    term_idx += nt;
-                    acc += if sign < 0 { -wsum } else { wsum };
-                }
-                let mut v = Q13(acc.clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32);
-                if layer.activation {
-                    v = self.activate(v);
-                }
-                next[j] = v.0;
-            }
+            self.run_program_tile::<1>(layer, cur, next, 1, 0);
             out_dim = layer.out_dim;
             cur_is_a = !cur_is_a;
         }
@@ -264,21 +367,83 @@ impl Sqnn {
         }
     }
 
+    /// Execute one layer's shift program on a tile of `L` consecutive
+    /// lanes starting at lane `base` of an SoA plane of width `batch`.
+    ///
+    /// The accumulator tile is a fixed-size `[i64; L]` so it stays in
+    /// registers across the whole instruction stream of a neuron, and
+    /// every per-instruction loop runs over fixed-size array views —
+    /// the shape LLVM autovectorizes without `std::simd` or intrinsics
+    /// (shift amount and direction are loop-invariant per instruction,
+    /// so each compiles to a splat shift + add/sub over the tile).
+    #[inline]
+    fn run_program_tile<const L: usize>(
+        &self,
+        layer: &PackedLayer,
+        cur: &[i32],
+        next: &mut [i32],
+        batch: usize,
+        base: usize,
+    ) {
+        let mut start = 0usize;
+        for (j, &end) in layer.op_ends.iter().enumerate() {
+            let end = end as usize;
+            let mut acc = [layer.bias[j] as i64; L];
+            for op in &layer.ops[start..end] {
+                let at = op.src as usize * batch + base;
+                let row: &[i32; L] = cur[at..at + L].try_into().unwrap();
+                if op.sh >= 0 {
+                    let s = op.sh as u32;
+                    if op.neg {
+                        for l in 0..L {
+                            acc[l] -= (row[l] as i64) << s;
+                        }
+                    } else {
+                        for l in 0..L {
+                            acc[l] += (row[l] as i64) << s;
+                        }
+                    }
+                } else {
+                    let s = (-(op.sh as i32)) as u32;
+                    if op.neg {
+                        for l in 0..L {
+                            acc[l] -= (row[l] as i64) >> s;
+                        }
+                    } else {
+                        for l in 0..L {
+                            acc[l] += (row[l] as i64) >> s;
+                        }
+                    }
+                }
+            }
+            start = end;
+            let at = j * batch + base;
+            let dst: &mut [i32; L] = (&mut next[at..at + L]).try_into().unwrap();
+            for l in 0..L {
+                let mut v = Q13(acc[l].clamp(q13::MIN_RAW as i64, q13::MAX_RAW as i64) as i32);
+                if layer.activation {
+                    v = self.activate(v);
+                }
+                dst[l] = v.0;
+            }
+        }
+    }
+
     /// Weight-stationary batched forward on an SoA batch (the
     /// molecule-farm serving kernel).
     ///
     /// Layout: feature `i` of lane `b` lives at `xs[i * batch + b]`, and
-    /// output `o` of lane `b` at `out[o * batch + b]`. Each packed weight
-    /// (sign / n_terms / exps) is decoded **once** and its
-    /// shift–accumulate applied to all `batch` lane accumulators before
-    /// the walk moves to the next weight — the scalar path re-walks the
-    /// packed arrays per sample, so the decode cost here is amortized
-    /// over the whole batch (§Perf: the A₂ intra-ASIC-parallelism story
-    /// needs many inferences per cycle to be cheap on the simulator too).
+    /// output `o` of lane `b` at `out[o * batch + b]`. The layer's
+    /// precompiled shift program is streamed **once** per
+    /// [`SWAR_LANES`]-wide lane tile, each instruction applied to the
+    /// whole register-resident accumulator tile before the next is
+    /// decoded (§Perf: the A₂ intra-ASIC-parallelism story needs many
+    /// inferences per cycle to be cheap on the simulator too).
     ///
-    /// Bit-identical per lane to [`Self::forward_q13_reference`]: the
-    /// lane accumulators are exact i64 (no mid-sum saturation), so the
-    /// reassociated accumulation order cannot change any bit.
+    /// Bit-identical per lane to [`Self::forward_q13_reference`] and to
+    /// [`Self::forward_q13_batch_reference`]: the lane accumulators are
+    /// exact i64 (no mid-sum saturation), so neither the tiling nor the
+    /// reassociated accumulation order can change any bit.
     ///
     /// This convenience form allocates a fresh [`BatchScratch`] per
     /// call; the serving hot path (`asic::MlpChip`, and through it the
@@ -292,7 +457,72 @@ impl Sqnn {
 
     /// The batch kernel proper: same datapath as
     /// [`Self::forward_q13_batch_into`], with caller-owned scratch.
+    ///
+    /// This is the SWAR shift-program kernel (see the module doc): the
+    /// batch is walked in [`SWAR_LANES`]-wide tiles whose `[i64; 8]`
+    /// accumulators stay in registers while the layer's compiled
+    /// instruction stream runs; the ragged tail (`batch % SWAR_LANES`)
+    /// runs the same code at tile width 1. Bit-identical per lane to
+    /// [`Self::forward_q13_batch_reference`] and to the scalar
+    /// [`Self::forward_q13_reference`].
     pub fn forward_q13_batch_with(
+        &self,
+        xs: &[Q13],
+        batch: usize,
+        out: &mut [Q13],
+        scratch: &mut BatchScratch,
+    ) {
+        assert_eq!(xs.len(), self.in_dim() * batch, "SoA input length");
+        assert_eq!(out.len(), self.out_dim() * batch, "SoA output length");
+        if batch == 0 {
+            return;
+        }
+        let maxw = self
+            .packed
+            .iter()
+            .map(|l| l.out_dim.max(l.in_dim))
+            .max()
+            .unwrap_or(0);
+        let BatchScratch { plane_a, plane_b, .. } = scratch;
+        plane_a.resize(maxw * batch, 0);
+        plane_b.resize(maxw * batch, 0);
+        for (slot, v) in plane_a.iter_mut().zip(xs) {
+            *slot = v.0;
+        }
+        let mut cur_is_a = true;
+        let mut width = self.in_dim();
+        for layer in &self.packed {
+            let (cur, next) = if cur_is_a {
+                (&plane_a[..], &mut plane_b[..])
+            } else {
+                (&plane_b[..], &mut plane_a[..])
+            };
+            let mut base = 0usize;
+            while base + SWAR_LANES <= batch {
+                self.run_program_tile::<SWAR_LANES>(layer, cur, next, batch, base);
+                base += SWAR_LANES;
+            }
+            while base < batch {
+                self.run_program_tile::<1>(layer, cur, next, batch, base);
+                base += 1;
+            }
+            width = layer.out_dim;
+            cur_is_a = !cur_is_a;
+        }
+        let res = if cur_is_a { &plane_a[..] } else { &plane_b[..] };
+        for (slot, &r) in out.iter_mut().zip(&res[..width * batch]) {
+            *slot = Q13(r);
+        }
+    }
+
+    /// The pre-shift-program batch kernel, kept verbatim as the
+    /// **reference datapath** for the SWAR kernel's bit-identity
+    /// property tests: it re-decodes every packed weight
+    /// (sign / n_terms / exps slice) per output neuron and accumulates
+    /// each weight's shift-sum before applying the sign — an
+    /// independently-structured evaluation of the same exact integer
+    /// math. Not on any serving path.
+    pub fn forward_q13_batch_reference(
         &self,
         xs: &[Q13],
         batch: usize,
@@ -736,6 +966,122 @@ mod tests {
         let mut out: Vec<Q13> = Vec::new();
         s.forward_q13_batch_into(&[], 0, &mut out);
         assert!(out.is_empty());
+        let mut scratch = BatchScratch::default();
+        s.forward_q13_batch_reference(&[], 0, &mut out, &mut scratch);
+        assert!(out.is_empty());
+    }
+
+    /// Run one SoA batch through both batch kernels and the scalar
+    /// reference and assert all three agree bit for bit on every lane.
+    fn assert_kernels_agree(s: &Sqnn, xs: &[Q13], batch: usize, ctx: &str) {
+        let mut swar = vec![Q13::ZERO; s.out_dim() * batch];
+        let mut refr = vec![Q13::ZERO; s.out_dim() * batch];
+        let mut scratch_a = BatchScratch::default();
+        let mut scratch_b = BatchScratch::default();
+        s.forward_q13_batch_with(xs, batch, &mut swar, &mut scratch_a);
+        s.forward_q13_batch_reference(xs, batch, &mut refr, &mut scratch_b);
+        assert_eq!(swar, refr, "{ctx}: SWAR vs reference batch kernel");
+        for b in 0..batch {
+            let lane: Vec<Q13> = (0..s.in_dim()).map(|i| xs[i * batch + b]).collect();
+            let want = s.forward_q13_reference(&lane);
+            for (o, &w) in want.iter().enumerate() {
+                assert_eq!(swar[o * batch + b], w, "{ctx}: lane {b} out {o} vs scalar");
+            }
+        }
+    }
+
+    #[test]
+    fn swar_kernel_bit_identical_across_all_batch_sizes() {
+        // The tentpole invariant, fuzzed over every batch size 0..=67:
+        // full 8-lane tiles, every ragged tail 1..=7, and the
+        // one-past-a-tile sizes (9, 17, 65...) all reproduce both
+        // reference datapaths bit for bit. Lane 0 is forced to the Q13
+        // rails so saturation is always exercised.
+        let mut rng = Pcg::new(31337);
+        for arch in [&[3usize, 3, 3, 2][..], &[8, 16, 16, 3]] {
+            let mut m = Mlp::init_random("sw", arch, Activation::Phi, &mut rng);
+            for l in &mut m.layers {
+                for w in &mut l.w {
+                    *w *= 0.6;
+                }
+            }
+            let s = Sqnn::from_mlp(&m, 3);
+            for batch in 0..=67usize {
+                let mut xs = vec![Q13::ZERO; arch[0] * batch];
+                for i in 0..arch[0] {
+                    for b in 0..batch {
+                        xs[i * batch + b] = if b == 0 {
+                            if rng.below(2) == 0 { Q13::MAX } else { Q13::MIN }
+                        } else {
+                            Q13::from_f64(rng.range(-6.0, 6.0))
+                        };
+                    }
+                }
+                assert_kernels_agree(&s, &xs, batch, &format!("arch={arch:?} batch={batch}"));
+            }
+        }
+    }
+
+    #[test]
+    fn swar_kernel_handles_zero_rows_and_negative_exponent_layers() {
+        // Compiler edge cases: an output neuron whose weights are all
+        // zero (its shift program is empty — bias only), a weight that
+        // is nonzero but term-free, and a layer whose every exponent is
+        // negative (pure truncating right shifts). Batches straddle the
+        // tile width.
+        let w = |sign: i8, exps: &[i32]| ShiftWeight { sign, exps: exps.to_vec() };
+        let layers = vec![
+            SqnnLayer {
+                out_dim: 4,
+                in_dim: 3,
+                w: vec![
+                    w(1, &[0]), w(-1, &[-2, -5]), w(0, &[]),
+                    w(0, &[]), w(0, &[]), w(0, &[]), // all-zero row
+                    w(1, &[2]), w(1, &[-1]), w(-1, &[0, -3, -7]),
+                    w(-1, &[-4]), w(1, &[1, 0]), w(1, &[]), // term-free nonzero
+                ],
+                b: vec![Q13(33), Q13(700), Q13(-1200), Q13(5)],
+            },
+            SqnnLayer {
+                out_dim: 2,
+                in_dim: 4,
+                // every exponent negative
+                w: vec![
+                    w(1, &[-1, -3]), w(-1, &[-2]), w(1, &[-5]), w(-1, &[-1]),
+                    w(-1, &[-6]), w(1, &[-1]), w(1, &[-2, -4]), w(1, &[-8]),
+                ],
+                b: vec![Q13(-77), Q13(256)],
+            },
+        ];
+        let s = Sqnn::from_layers("edge", layers, Activation::Phi, false, 3).unwrap();
+        let stats = s.shift_program_stats();
+        assert_eq!(stats.weights, 20);
+        assert_eq!(stats.zero_weights, 4);
+        // nonzero single-exponent weights: 1 in row 0, 2 in row 2,
+        // 1 in row 3, 6 in layer 2 (the term-free w(1, []) is not one)
+        assert_eq!(stats.single_term_weights, 10);
+        assert_eq!(stats.ops, 21);
+        let mut rng = Pcg::new(99);
+        for batch in [1usize, 5, 7, 8, 9, 13, 16, 63, 64, 67] {
+            let mut xs = vec![Q13::ZERO; 3 * batch];
+            for slot in xs.iter_mut() {
+                *slot = Q13::from_f64(rng.range(-6.0, 6.0));
+            }
+            assert_kernels_agree(&s, &xs, batch, &format!("edge net batch={batch}"));
+        }
+        // The all-zero row really is bias-only: observe the first layer
+        // alone (activated output) — neuron 1 must be phi(bias)
+        // regardless of input.
+        let one = Sqnn::from_layers(
+            "edge-l1",
+            vec![s.layers[0].clone()],
+            Activation::Phi,
+            true,
+            3,
+        )
+        .unwrap();
+        let y = one.forward_q13(&[Q13::MAX, Q13::MIN, Q13::MAX]);
+        assert_eq!(y[1], phi_q13(Q13(700)));
     }
 
     #[test]
