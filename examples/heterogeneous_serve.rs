@@ -28,7 +28,7 @@ fn main() -> Result<()> {
                 c
             })
             .collect();
-        let mut pool = ChipPool::spawn(chips);
+        let mut pool = ChipPool::spawn(chips)?;
 
         // Synthesize a request stream: batches of feature rows.
         let mut rng = Pcg::new(99);

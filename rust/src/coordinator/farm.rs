@@ -38,25 +38,91 @@
 //!
 //! [`WaterFarm`] is the water instantiation of the generic farm and
 //! keeps the pre-refactor behavior bit for bit.
+//!
+//! **Supervision.** The farm is fault-tolerant at two granularities.
+//! Per *shard*: a panicking shard job (inline or threaded — the threaded
+//! transport's `catch_unwind` and an inline `catch_unwind` behave
+//! identically) marks that shard **dead**; its species degrades while
+//! every other shard keeps serving. Per *molecule*: a divergence monitor
+//! reads the datapath's own health signals — 26-bit state-saturation
+//! events from the integrator MAC (`qint::mac_step_counted`), Q13 rail
+//! hits on the chip's output lanes, and a position-jump watchdog
+//! (minimum-imaged under PBC) — and **quarantines** a diverging molecule:
+//! its lanes are removed from the shard batch and its state frozen,
+//! while the survivors' trajectories stay bit-identical (the SWAR batch
+//! kernel is bit-exact per lane at any batch size). Every decision is a
+//! deterministic function of per-molecule state, so quarantine verdicts
+//! are identical across backends and shard layouts; faults are recorded
+//! in [`FarmLedger`]. Deterministic fault *injection* (compiled in under
+//! `cfg(any(test, feature = "faults"))`) drives every recovery path from
+//! tests via [`crate::testkit::faults::FaultPlan`].
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::asic::{ChipConfig, MlpChip};
 use crate::features;
-use crate::fixedpoint::Q13;
+use crate::fixedpoint::{q13, Q13};
 use crate::fpga::{FeatureConditioner, HFeatures, MoleculeFpga, WaterFpga, ZERO_FRAME};
 use crate::hw::power::OpCounts;
 use crate::hw::timing::StepCycles;
 use crate::md::{initialize_velocities, System};
 use crate::nn::Mlp;
 use crate::potentials::WaterPes;
+#[cfg(any(test, feature = "faults"))]
+use crate::testkit::faults::FaultPlan;
 use crate::util::rng::Pcg;
 use crate::util::Vec3;
 
-use super::pool::WorkerPool;
+use super::pool::{panic_message, PoolError, WorkerPool};
 use super::ParallelMode;
+
+/// Divergence-monitor thresholds of the farm's per-molecule health
+/// monitor. The defaults are conservative: they never fire on a healthy
+/// trajectory (every signal below is *identically zero* there), only on
+/// hard numeric divergence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthPolicy {
+    /// Master switch; `false` turns all monitoring off (the rail/
+    /// saturation counters still aggregate into the ledger).
+    pub enabled: bool,
+    /// Quarantine once a molecule's cumulative 26-bit state-clamp count
+    /// reaches this (0 disables). A healthy trajectory never clamps —
+    /// the state range is ±32 Å — so the default of 1 is exact.
+    pub sat_event_limit: u64,
+    /// Quarantine when any atom moves farther than this (Å, minimum-
+    /// imaged under PBC) within one watchdog window (0.0 disables).
+    pub max_jump_ang: f64,
+    /// Position-watchdog window in ticks (the jump check runs every
+    /// `jump_stride` ticks, off the hot path).
+    pub jump_stride: u32,
+    /// Quarantine after this many *consecutive* ticks in which **every**
+    /// chip output lane of the molecule sat on a Q13 rail (0 disables).
+    pub rail_tick_limit: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            enabled: true,
+            sat_event_limit: 1,
+            max_jump_ang: 1.0,
+            jump_stride: 4,
+            rail_tick_limit: 32,
+        }
+    }
+}
+
+/// Supervision wiring of a farm: the health policy plus (in test/fault
+/// builds) the deterministic fault plan.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FarmSupervision {
+    pub health: HealthPolicy,
+    #[cfg(any(test, feature = "faults"))]
+    pub faults: Option<FaultPlan>,
+}
 
 /// Farm construction knobs.
 #[derive(Debug, Clone, Copy)]
@@ -71,11 +137,25 @@ pub struct FarmConfig {
     pub dt_fs: f64,
     /// Shard execution backend.
     pub mode: ParallelMode,
+    /// Divergence-monitor thresholds.
+    pub health: HealthPolicy,
+    /// Deterministic fault plan (test/fault builds only).
+    #[cfg(any(test, feature = "faults"))]
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for FarmConfig {
     fn default() -> Self {
-        FarmConfig { shards: 1, lanes: 1, k: 3, dt_fs: 0.25, mode: ParallelMode::Inline }
+        FarmConfig {
+            shards: 1,
+            lanes: 1,
+            k: 3,
+            dt_fs: 0.25,
+            mode: ParallelMode::Inline,
+            health: HealthPolicy::default(),
+            #[cfg(any(test, feature = "faults"))]
+            faults: None,
+        }
     }
 }
 
@@ -107,6 +187,21 @@ pub trait ServedMolecule: Send {
     fn ops(&self) -> OpCounts;
     /// Steps integrated so far.
     fn steps(&self) -> u64;
+    /// Cumulative 26-bit state-clamp events of the integrator datapath
+    /// (the divergence monitor's primary signal; 0 = healthy or not
+    /// instrumented).
+    fn sat_events(&self) -> u64 {
+        0
+    }
+    /// Periodic box side, if the species is bulk — the position-jump
+    /// watchdog minimum-images its displacements with it.
+    fn box_l(&self) -> Option<f64> {
+        None
+    }
+    /// Fault injection: force the device into rail saturation (no-op by
+    /// default, so external `ServedMolecule` impls are unaffected).
+    #[cfg(any(test, feature = "faults"))]
+    fn inject_saturation(&mut self) {}
 }
 
 /// The water species: one [`WaterFpga`] per molecule, two hydrogen
@@ -154,6 +249,13 @@ impl ServedMolecule for WaterServed {
     fn steps(&self) -> u64 {
         self.fpga.steps
     }
+    fn sat_events(&self) -> u64 {
+        self.fpga.sat_events
+    }
+    #[cfg(any(test, feature = "faults"))]
+    fn inject_saturation(&mut self) {
+        self.fpga.inject_rail_saturation();
+    }
 }
 
 /// A generic Table-I molecule: one [`MoleculeFpga`] per molecule, one
@@ -187,6 +289,16 @@ impl ServedMolecule for GenericServed {
     }
     fn steps(&self) -> u64 {
         self.fpga.steps
+    }
+    fn sat_events(&self) -> u64 {
+        self.fpga.sat_events
+    }
+    fn box_l(&self) -> Option<f64> {
+        self.fpga.box_l()
+    }
+    #[cfg(any(test, feature = "faults"))]
+    fn inject_saturation(&mut self) {
+        self.fpga.inject_rail_saturation();
     }
 }
 
@@ -337,24 +449,125 @@ fn generic_group_impl(
     SpeciesGroup::new(name, model.clone(), k, shards, mols)
 }
 
+/// Why the divergence monitor quarantined a molecule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuarantineReason {
+    /// The 26-bit integrator state clamped ([`HealthPolicy::sat_event_limit`]).
+    SaturationEvents,
+    /// An atom jumped farther than [`HealthPolicy::max_jump_ang`] within
+    /// one watchdog window.
+    PositionJump,
+    /// Every chip output lane sat on a Q13 rail for
+    /// [`HealthPolicy::rail_tick_limit`] consecutive ticks.
+    RailPinned,
+}
+
+impl core::fmt::Display for QuarantineReason {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            QuarantineReason::SaturationEvents => write!(f, "26-bit state saturation"),
+            QuarantineReason::PositionJump => write!(f, "position jump"),
+            QuarantineReason::RailPinned => write!(f, "Q13 output rails pinned"),
+        }
+    }
+}
+
+/// One quarantine decision, recorded in the ledger. `molecule` is the
+/// farm-wide construction-order index (the same index
+/// [`MoleculeFarm::positions`] uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuarantineRecord {
+    pub molecule: usize,
+    pub species: usize,
+    /// Farm tick at which the molecule was pulled from its batch.
+    pub tick: u64,
+    pub reason: QuarantineReason,
+}
+
+/// A shard the farm lost (recovered panic or lost reply): the shard's
+/// remaining molecules freeze at their last completed tick while every
+/// other shard keeps serving.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardLoss {
+    pub shard: usize,
+    pub species: usize,
+    /// Farm tick at which the shard died.
+    pub tick: u64,
+    /// Panic message / transport fault description.
+    pub detail: String,
+}
+
+/// Per-tick report a shard hands back to the farm supervisor.
+#[derive(Debug, Clone, Copy)]
+struct ShardTick {
+    /// Molecules quarantined on this shard so far (cumulative).
+    quarantined: u32,
+}
+
+/// Per-molecule divergence-monitor state.
+struct MoleculeMonitor {
+    /// Chip output lanes of this molecule seen on a Q13 rail, cumulative.
+    rail_hits: u64,
+    /// Consecutive ticks with *all* lanes railed.
+    rail_consec: u32,
+    /// Positions at the last watchdog check.
+    prev_pos: Vec<Vec3>,
+}
+
+/// Largest per-atom displacement between two snapshots, minimum-imaged
+/// when a periodic box is given (a wrap across a face is not a jump).
+fn max_jump(prev: &[Vec3], cur: &[Vec3], box_l: Option<f64>) -> f64 {
+    let mi = |d: f64| match box_l {
+        Some(l) => d - l * (d / l).round(),
+        None => d,
+    };
+    prev.iter()
+        .zip(cur)
+        .map(|(p, c)| {
+            let d = *c - *p;
+            let (dx, dy, dz) = (mi(d.x), mi(d.y), mi(d.z));
+            (dx * dx + dy * dy + dz * dz).sqrt()
+        })
+        .fold(0.0, f64::max)
+}
+
 /// One shard: a slice of one species' molecules, its batched chip
 /// (programmed with that species' own `Sqnn`), and the scratch buffers
-/// of the hot loop (owned here so a tick allocates nothing).
+/// of the hot loop (owned here so a tick allocates nothing). The shard
+/// also runs the per-molecule divergence monitor: every health decision
+/// is a deterministic function of molecule-local state, so verdicts are
+/// identical across backends and shard layouts.
 struct FarmShard {
+    id: usize,
     /// Index into the farm's species table.
     species: usize,
     mols: Vec<Box<dyn ServedMolecule>>,
-    /// First lane of each molecule in the shard's SoA batch.
+    /// Farm-wide construction-order index of each molecule.
+    mol_ids: Vec<usize>,
+    /// Molecules still in the batch (quarantine clears the flag).
+    active: Vec<bool>,
+    /// Divergence-monitor state per molecule.
+    mon: Vec<MoleculeMonitor>,
+    /// First lane of each *active* molecule in the shard's SoA batch.
     lane0: Vec<usize>,
-    /// Total chip lanes (Σ molecule lanes).
+    /// Total chip lanes (Σ active molecule lanes).
     batch: usize,
     chip: MlpChip,
+    in_dim: usize,
+    out_dim: usize,
     feats: Vec<Q13>,
     outs: Vec<Q13>,
-    /// Modelled hardware cycles of one tick of this shard.
+    /// Modelled hardware cycles of one tick at the *current* batch.
     tick_cycles: u64,
+    /// Accumulated modelled cycles (the per-tick budget shrinks when a
+    /// molecule is quarantined, so this is no longer ticks × budget).
+    cycles: u64,
     ticks: u64,
     wall: Duration,
+    health: HealthPolicy,
+    quarantined: Vec<QuarantineRecord>,
+    #[cfg(any(test, feature = "faults"))]
+    faults: Option<FaultPlan>,
 }
 
 impl FarmShard {
@@ -362,10 +575,13 @@ impl FarmShard {
         id: usize,
         species: usize,
         mols: Vec<Box<dyn ServedMolecule>>,
+        mol_ids: Vec<usize>,
         model: &Mlp,
         k: usize,
         lanes: usize,
+        sup: &FarmSupervision,
     ) -> Result<FarmShard> {
+        debug_assert_eq!(mols.len(), mol_ids.len());
         let mut chip = MlpChip::new(id, ChipConfig { lanes, ..ChipConfig::default() });
         chip.program(model, k);
         let mut lane0 = Vec::with_capacity(mols.len());
@@ -374,47 +590,192 @@ impl FarmShard {
             lane0.push(batch);
             batch += m.lanes();
         }
-        let tick_cycles = Self::tick_cycle_budget(&mols, &chip, batch);
+        let active = vec![true; mols.len()];
+        let tick_cycles = Self::tick_cycle_budget(&mols, &active, &chip, batch);
+        let mon = mols
+            .iter()
+            .map(|m| MoleculeMonitor {
+                rail_hits: 0,
+                rail_consec: 0,
+                prev_pos: m.positions(),
+            })
+            .collect();
         Ok(FarmShard {
+            id,
             species,
+            mol_ids,
+            active,
+            mon,
             lane0,
             batch,
+            in_dim: model.in_dim(),
+            out_dim: model.out_dim(),
             feats: vec![Q13::ZERO; model.in_dim() * batch],
             outs: vec![Q13::ZERO; model.out_dim() * batch],
             mols,
             chip,
             tick_cycles,
+            cycles: 0,
             ticks: 0,
             wall: Duration::ZERO,
+            health: sup.health,
+            quarantined: Vec::new(),
+            #[cfg(any(test, feature = "faults"))]
+            faults: sup.faults,
         })
     }
 
-    /// Modelled cycles of one shard tick: the FPGA streams its molecules
-    /// through feature extraction and integration sequentially, shares
-    /// one transfer/control window per tick, and the chip's lane model
-    /// covers the batched MLP stage (⌈batch/lanes⌉ pipeline waves).
-    fn tick_cycle_budget(mols: &[Box<dyn ServedMolecule>], chip: &MlpChip, batch: usize) -> u64 {
+    /// Modelled cycles of one shard tick: the FPGA streams its active
+    /// molecules through feature extraction and integration
+    /// sequentially, shares one transfer/control window per tick, and
+    /// the chip's lane model covers the batched MLP stage
+    /// (⌈batch/lanes⌉ pipeline waves).
+    fn tick_cycle_budget(
+        mols: &[Box<dyn ServedMolecule>],
+        active: &[bool],
+        chip: &MlpChip,
+        batch: usize,
+    ) -> u64 {
         let b = StepCycles::water();
-        mols.iter().map(|m| m.fpga_cycles_per_tick()).sum::<u64>()
+        mols.iter()
+            .zip(active)
+            .filter(|(_, &a)| a)
+            .map(|(m, _)| m.fpga_cycles_per_tick())
+            .sum::<u64>()
             + b.to_chip
             + b.from_chip
             + b.control
             + chip.batch_latency_cycles(batch)
     }
 
-    /// One MD step for every molecule in the shard.
-    fn tick(&mut self) -> Result<()> {
+    /// One MD step for every active molecule in the shard, followed by
+    /// the divergence monitor.
+    fn tick(&mut self) -> Result<ShardTick> {
         let t0 = Instant::now();
-        for (m, mol) in self.mols.iter_mut().enumerate() {
-            mol.extract(&mut self.feats, self.batch, self.lane0[m]);
+        let tick_idx = self.ticks;
+        let budget = self.tick_cycles;
+        #[cfg(any(test, feature = "faults"))]
+        if let Some(plan) = self.faults {
+            if plan.panics_at(self.id, tick_idx) {
+                panic!("injected fault: shard {} panics at tick {tick_idx}", self.id);
+            }
+            for m in 0..self.mols.len() {
+                if self.active[m] && plan.saturates_at(self.mol_ids[m], tick_idx) {
+                    self.mols[m].inject_saturation();
+                }
+            }
         }
-        self.chip.infer_batch_into(&self.feats, self.batch, &mut self.outs)?;
-        for (m, mol) in self.mols.iter_mut().enumerate() {
-            mol.integrate(&self.outs, self.batch, self.lane0[m]);
+        if self.batch > 0 {
+            for m in 0..self.mols.len() {
+                if self.active[m] {
+                    self.mols[m].extract(&mut self.feats, self.batch, self.lane0[m]);
+                }
+            }
+            self.chip.infer_batch_into(&self.feats, self.batch, &mut self.outs)?;
+            if self.health.enabled {
+                self.scan_rails();
+            }
+            for m in 0..self.mols.len() {
+                if self.active[m] {
+                    self.mols[m].integrate(&self.outs, self.batch, self.lane0[m]);
+                }
+            }
         }
         self.ticks += 1;
+        if self.health.enabled {
+            self.check_health(tick_idx);
+        }
+        self.cycles += budget;
         self.wall += t0.elapsed();
-        Ok(())
+        Ok(ShardTick { quarantined: self.quarantined.len() as u32 })
+    }
+
+    /// Count each active molecule's output lanes sitting on a Q13 rail
+    /// this tick (runs on the chip's SoA output block, before
+    /// integration consumes it).
+    fn scan_rails(&mut self) {
+        for m in 0..self.mols.len() {
+            if !self.active[m] {
+                continue;
+            }
+            let lanes = self.mols[m].lanes();
+            let mut railed = 0u32;
+            for l in 0..lanes {
+                let lane = self.lane0[m] + l;
+                let hit = (0..self.out_dim).any(|o| {
+                    let q = self.outs[o * self.batch + lane].0;
+                    q == q13::MAX_RAW || q == q13::MIN_RAW
+                });
+                railed += u32::from(hit);
+            }
+            self.mon[m].rail_hits += railed as u64;
+            if railed as usize == lanes {
+                self.mon[m].rail_consec += 1;
+            } else {
+                self.mon[m].rail_consec = 0;
+            }
+        }
+    }
+
+    /// The divergence monitor: quarantine any active molecule whose
+    /// health signals crossed the policy thresholds during `tick_idx`.
+    fn check_health(&mut self, tick_idx: u64) {
+        let p = self.health;
+        let watchdog_due = p.jump_stride > 0 && (tick_idx + 1) % p.jump_stride as u64 == 0;
+        let mut changed = false;
+        for m in 0..self.mols.len() {
+            if !self.active[m] {
+                continue;
+            }
+            let mut reason = None;
+            if p.sat_event_limit > 0 && self.mols[m].sat_events() >= p.sat_event_limit {
+                reason = Some(QuarantineReason::SaturationEvents);
+            }
+            if reason.is_none() && p.rail_tick_limit > 0 && self.mon[m].rail_consec >= p.rail_tick_limit
+            {
+                reason = Some(QuarantineReason::RailPinned);
+            }
+            if reason.is_none() && watchdog_due && p.max_jump_ang > 0.0 {
+                let cur = self.mols[m].positions();
+                let jump = max_jump(&self.mon[m].prev_pos, &cur, self.mols[m].box_l());
+                self.mon[m].prev_pos = cur;
+                if jump > p.max_jump_ang {
+                    reason = Some(QuarantineReason::PositionJump);
+                }
+            }
+            if let Some(reason) = reason {
+                self.active[m] = false;
+                self.quarantined.push(QuarantineRecord {
+                    molecule: self.mol_ids[m],
+                    species: self.species,
+                    tick: tick_idx,
+                    reason,
+                });
+                changed = true;
+            }
+        }
+        if changed {
+            self.rebuild_lanes();
+        }
+    }
+
+    /// Re-pack the SoA batch over the surviving molecules. The SWAR
+    /// batch kernel is bit-exact per lane at any batch size, so removing
+    /// lanes cannot change a survivor's trajectory by a single bit.
+    fn rebuild_lanes(&mut self) {
+        let mut batch = 0usize;
+        for m in 0..self.mols.len() {
+            if self.active[m] {
+                self.lane0[m] = batch;
+                batch += self.mols[m].lanes();
+            }
+        }
+        self.batch = batch;
+        self.feats.clear();
+        self.feats.resize(self.in_dim * batch, Q13::ZERO);
+        self.outs.clear();
+        self.outs.resize(self.out_dim * batch, Q13::ZERO);
+        self.tick_cycles = Self::tick_cycle_budget(&self.mols, &self.active, &self.chip, batch);
     }
 
     fn positions(&self) -> Vec<Vec<Vec3>> {
@@ -434,9 +795,15 @@ pub struct SpeciesLedger {
     pub n_molecules: usize,
     /// Total atoms across the species' molecules.
     pub n_atoms: usize,
-    /// Molecule-steps of this species: `ticks × n_molecules`.
+    /// Molecule-steps of this species: Σ steps actually integrated
+    /// (`ticks × n_molecules` on a fault-free run; less when molecules
+    /// were quarantined or a shard died).
     pub molecule_steps: u64,
     pub chip_inferences: u64,
+    /// Molecules the divergence monitor pulled from this species' batches.
+    pub molecules_quarantined: u64,
+    /// 26-bit integrator clamps summed over the species' molecules.
+    pub saturation_events: u64,
     /// Host wall-clock each of the species' shards spent in its tick
     /// body.
     pub shard_walls: Vec<Duration>,
@@ -465,10 +832,13 @@ impl SpeciesLedger {
 /// Aggregated accounting of a farm run.
 #[derive(Debug, Clone, Default)]
 pub struct FarmLedger {
-    /// Farm ticks completed (each advances every molecule one step).
+    /// Farm ticks completed (each advances every healthy molecule one
+    /// step).
     pub ticks: u64,
     pub n_molecules: usize,
-    /// Total molecule-steps: `ticks × n_molecules`.
+    /// Total molecule-steps actually integrated (`ticks × n_molecules`
+    /// on a fault-free run; less when molecules were quarantined or a
+    /// shard died mid-run).
     pub molecule_steps: u64,
     /// Modelled hardware cycles: Σ_shards ticks × shard tick budget
     /// (shards run on parallel hardware, but the conservative ledger
@@ -485,6 +855,25 @@ pub struct FarmLedger {
     pub shard_walls: Vec<Duration>,
     /// Per-species breakdown, in species order (the serving-mix view).
     pub species: Vec<SpeciesLedger>,
+    /// Shard panics the supervisor caught and recovered from (the shard
+    /// froze; the farm kept serving).
+    pub panics_recovered: u64,
+    /// Reply channels lost in transit (threaded backend only).
+    pub replies_lost: u64,
+    /// Molecules the divergence monitor pulled from their batches.
+    pub molecules_quarantined: u64,
+    /// 26-bit integrator clamps summed over every molecule.
+    pub saturation_events: u64,
+    /// Q13 rail hits observed on chip output lanes.
+    pub rail_hits: u64,
+    /// Ticks during which at least one shard was dead or at least one
+    /// molecule quarantined.
+    pub degraded_ticks: u64,
+    /// Every quarantine decision, in the order the supervisor saw them
+    /// (shard order, then tick order within a shard).
+    pub quarantined: Vec<QuarantineRecord>,
+    /// Every shard loss (recovered panic / lost reply).
+    pub shards_lost: Vec<ShardLoss>,
 }
 
 impl FarmLedger {
@@ -538,14 +927,29 @@ struct SpeciesMeta {
     n_atoms: usize,
 }
 
-/// The batched multi-molecule, multi-species serving system.
+/// The batched multi-molecule, multi-species serving system, with a
+/// supervisor: a panicking shard is caught (inline) or surfaced as a
+/// typed transport error (threaded), recorded, and frozen — its species
+/// group degrades while every other shard keeps serving bit-identically.
 pub struct MoleculeFarm {
     backend: FarmBackend,
     species: Vec<SpeciesMeta>,
     n_molecules: usize,
     n_shards: usize,
+    /// Species of each shard (supervisor-side copy; shards may be dead).
+    shard_species: Vec<usize>,
+    /// Shards the supervisor has written off.
+    dead: Vec<bool>,
+    /// Cumulative quarantine count per shard, from its last tick report.
+    quar_counts: Vec<u32>,
+    panics_recovered: u64,
+    replies_lost: u64,
+    degraded_ticks: u64,
+    lost: Vec<ShardLoss>,
     ticks: u64,
     host_wall: Duration,
+    #[cfg(any(test, feature = "faults"))]
+    faults: Option<FaultPlan>,
 }
 
 impl MoleculeFarm {
@@ -555,6 +959,18 @@ impl MoleculeFarm {
     /// contents), and every shard programs its own `Sqnn` from the
     /// group's model — request batches route by model.
     pub fn new(groups: Vec<SpeciesGroup>, lanes: usize, mode: ParallelMode) -> Result<MoleculeFarm> {
+        Self::supervised(groups, lanes, mode, FarmSupervision::default())
+    }
+
+    /// [`MoleculeFarm::new`] with an explicit supervision policy
+    /// (health thresholds and, under `cfg(any(test, feature =
+    /// "faults"))`, a deterministic fault plan).
+    pub fn supervised(
+        groups: Vec<SpeciesGroup>,
+        lanes: usize,
+        mode: ParallelMode,
+        sup: FarmSupervision,
+    ) -> Result<MoleculeFarm> {
         anyhow::ensure!(!groups.is_empty(), "farm needs at least one species");
         anyhow::ensure!(lanes >= 1, "chip needs at least one MLP lane");
         let mut shards = Vec::new();
@@ -566,22 +982,24 @@ impl MoleculeFarm {
             let base = n / n_shards;
             let rem = n % n_shards;
             let n_atoms = g.mols.iter().map(|m| m.n_atoms()).sum();
-            n_molecules += n;
             let mut mols = g.mols.into_iter();
             for s in 0..n_shards {
                 let take = base + usize::from(s < rem);
                 let slice: Vec<Box<dyn ServedMolecule>> = mols.by_ref().take(take).collect();
+                let ids: Vec<usize> = (0..slice.len()).map(|m| n_molecules + m).collect();
+                n_molecules += slice.len();
                 let id = shards.len();
-                shards.push(FarmShard::new(id, si, slice, &g.model, g.k, lanes)?);
+                shards.push(FarmShard::new(id, si, slice, ids, &g.model, g.k, lanes, &sup)?);
             }
             debug_assert!(mols.next().is_none());
             species.push(SpeciesMeta { name: g.name, n_molecules: n, n_atoms });
         }
         let n_shards = shards.len();
+        let shard_species = shards.iter().map(|s| s.species).collect();
         let backend = match mode {
             ParallelMode::Inline => FarmBackend::Inline(shards),
             ParallelMode::Threaded => {
-                FarmBackend::Threaded(WorkerPool::spawn("farm-shard", shards))
+                FarmBackend::Threaded(WorkerPool::spawn("farm-shard", shards)?)
             }
         };
         Ok(MoleculeFarm {
@@ -589,27 +1007,93 @@ impl MoleculeFarm {
             species,
             n_molecules,
             n_shards,
+            shard_species,
+            dead: vec![false; n_shards],
+            quar_counts: vec![0; n_shards],
+            panics_recovered: 0,
+            replies_lost: 0,
+            degraded_ticks: 0,
+            lost: Vec::new(),
             ticks: 0,
             host_wall: Duration::ZERO,
+            #[cfg(any(test, feature = "faults"))]
+            faults: sup.faults,
         })
     }
 
-    /// One farm tick: every molecule of every species advances one step.
+    /// One farm tick: every healthy molecule of every species advances
+    /// one step. A shard that panics (or whose reply is lost) is
+    /// recorded and frozen — the tick still succeeds for every other
+    /// shard, and the farm keeps serving in degraded mode.
     pub fn tick(&mut self) -> Result<()> {
         let t0 = Instant::now();
+        let tick_idx = self.ticks;
+        // (shard, detail, was_panic) losses discovered this tick.
+        let mut losses: Vec<(usize, String, bool)> = Vec::new();
         match &mut self.backend {
             FarmBackend::Inline(shards) => {
-                for s in shards.iter_mut() {
-                    s.tick()?;
+                for (i, s) in shards.iter_mut().enumerate() {
+                    if self.dead[i] {
+                        continue;
+                    }
+                    match catch_unwind(AssertUnwindSafe(|| s.tick())) {
+                        Ok(Ok(report)) => self.quar_counts[i] = report.quarantined,
+                        Ok(Err(e)) => return Err(e),
+                        Err(payload) => {
+                            losses.push((i, panic_message(payload.as_ref()), true));
+                        }
+                    }
                 }
             }
             FarmBackend::Threaded(pool) => {
-                for r in pool.run_all(|_, s: &mut FarmShard| s.tick())? {
-                    r?;
+                #[cfg(any(test, feature = "faults"))]
+                if let Some(plan) = self.faults {
+                    for i in 0..self.dead.len() {
+                        if !self.dead[i] && plan.drops_reply_at(i, tick_idx) {
+                            pool.inject_reply_drop(i);
+                        }
+                    }
+                }
+                let mut replies = Vec::with_capacity(self.dead.len());
+                for i in 0..self.dead.len() {
+                    if self.dead[i] {
+                        continue;
+                    }
+                    replies.push((i, pool.submit(i, |_, s: &mut FarmShard| s.tick())));
+                }
+                for (i, reply) in replies {
+                    match reply.and_then(|r| r.recv()) {
+                        Ok(Ok(report)) => self.quar_counts[i] = report.quarantined,
+                        Ok(Err(e)) => return Err(e),
+                        Err(PoolError::JobPanicked { message, .. }) => {
+                            losses.push((i, message, true));
+                        }
+                        Err(e @ (PoolError::ReplyLost { .. } | PoolError::WorkerGone { .. })) => {
+                            losses.push((i, e.to_string(), false));
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
                 }
             }
         }
+        for (i, detail, was_panic) in losses {
+            self.dead[i] = true;
+            if was_panic {
+                self.panics_recovered += 1;
+            } else {
+                self.replies_lost += 1;
+            }
+            self.lost.push(ShardLoss {
+                shard: i,
+                species: self.shard_species[i],
+                tick: tick_idx,
+                detail,
+            });
+        }
         self.ticks += 1;
+        if self.dead.iter().any(|&d| d) || self.quar_counts.iter().any(|&q| q > 0) {
+            self.degraded_ticks += 1;
+        }
         self.host_wall += t0.elapsed();
         Ok(())
     }
@@ -651,17 +1135,21 @@ impl MoleculeFarm {
     }
 
     /// Tear the farm down (joining shard threads) and aggregate the
-    /// ledger, farm-wide and per species.
+    /// ledger, farm-wide and per species. Teardown never panics: a dead
+    /// worker contributes a fault record instead of its shard's books.
     pub fn finish(self) -> Result<FarmLedger> {
-        let shards = match self.backend {
-            FarmBackend::Inline(shards) => shards,
-            FarmBackend::Threaded(pool) => pool.into_items(),
+        let shards: Vec<Option<FarmShard>> = match self.backend {
+            FarmBackend::Inline(shards) => shards.into_iter().map(Some).collect(),
+            FarmBackend::Threaded(pool) => pool.into_items().items,
         };
         let mut ledger = FarmLedger {
             ticks: self.ticks,
             n_molecules: self.n_molecules,
-            molecule_steps: self.ticks * self.n_molecules as u64,
             host_wall: self.host_wall,
+            panics_recovered: self.panics_recovered,
+            replies_lost: self.replies_lost,
+            degraded_ticks: self.degraded_ticks,
+            shards_lost: self.lost,
             species: self
                 .species
                 .iter()
@@ -669,27 +1157,38 @@ impl MoleculeFarm {
                     name: sp.name.clone(),
                     n_molecules: sp.n_molecules,
                     n_atoms: sp.n_atoms,
-                    molecule_steps: self.ticks * sp.n_molecules as u64,
                     ..SpeciesLedger::default()
                 })
                 .collect(),
             ..FarmLedger::default()
         };
-        for s in &shards {
-            debug_assert_eq!(s.ticks, self.ticks);
-            let shard_cycles = s.ticks * s.tick_cycles;
-            ledger.modelled_cycles += shard_cycles;
-            ledger.critical_path_cycles = ledger.critical_path_cycles.max(shard_cycles);
+        for (i, s) in shards.iter().enumerate() {
+            let Some(s) = s else { continue };
+            debug_assert!(self.dead[i] || s.ticks == self.ticks);
+            ledger.modelled_cycles += s.cycles;
+            ledger.critical_path_cycles = ledger.critical_path_cycles.max(s.cycles);
             ledger.chip_inferences += s.chip.inferences;
             ledger.chip_ops.merge(&s.chip.ops);
-            for m in &s.mols {
-                ledger.fpga_ops.merge(&m.ops());
-            }
             ledger.shard_walls.push(s.wall);
+            ledger.quarantined.extend(s.quarantined.iter().copied());
             let sp = &mut ledger.species[s.species];
             sp.chip_inferences += s.chip.inferences;
             sp.shard_walls.push(s.wall);
+            sp.molecules_quarantined += s.quarantined.len() as u64;
+            for m in &s.mols {
+                let steps = m.steps();
+                let sat = m.sat_events();
+                ledger.fpga_ops.merge(&m.ops());
+                ledger.molecule_steps += steps;
+                ledger.saturation_events += sat;
+                sp.molecule_steps += steps;
+                sp.saturation_events += sat;
+            }
+            for mon in &s.mon {
+                ledger.rail_hits += mon.rail_hits;
+            }
         }
+        ledger.molecules_quarantined = ledger.quarantined.len() as u64;
         Ok(ledger)
     }
 }
@@ -711,7 +1210,12 @@ impl WaterFarm {
         anyhow::ensure!(cfg.shards >= 1, "farm needs at least one shard");
         anyhow::ensure!(cfg.lanes >= 1, "chip needs at least one MLP lane");
         let group = water_group(model, systems, cfg.k, cfg.shards, cfg.dt_fs)?;
-        let inner = MoleculeFarm::new(vec![group], cfg.lanes, cfg.mode)?;
+        let sup = FarmSupervision {
+            health: cfg.health,
+            #[cfg(any(test, feature = "faults"))]
+            faults: cfg.faults,
+        };
+        let inner = MoleculeFarm::supervised(vec![group], cfg.lanes, cfg.mode, sup)?;
         // Store the *effective* configuration (shards post-clamp), so
         // `config()` agrees with what was actually built.
         let cfg_eff = FarmConfig { shards: inner.n_shards(), ..*cfg };
@@ -1175,5 +1679,161 @@ mod tests {
         let s = l.s_per_step_atom(CLOCK_HZ);
         assert!(s > 0.0 && s.is_finite());
         assert!((s - l.hw_seconds_parallel(CLOCK_HZ) / 300.0).abs() < 1e-18);
+        // Fault-free run: the supervision counters are identically zero.
+        assert_eq!(l.panics_recovered, 0);
+        assert_eq!(l.molecules_quarantined, 0);
+        assert_eq!(l.saturation_events, 0);
+        assert_eq!(l.degraded_ticks, 0);
+        assert!(l.quarantined.is_empty() && l.shards_lost.is_empty());
+    }
+
+    use crate::testkit::faults::FaultPlan;
+
+    fn water_farm_with(
+        systems: &[System],
+        shards: usize,
+        mode: ParallelMode,
+        faults: Option<FaultPlan>,
+    ) -> WaterFarm {
+        let m = toy_model();
+        WaterFarm::new(&m, systems, &FarmConfig { shards, mode, faults, ..FarmConfig::default() })
+            .unwrap()
+    }
+
+    #[test]
+    fn injected_shard_panic_degrades_its_group_not_the_farm() {
+        // 8 molecules over 4 shards (2 each; shard 1 = molecules 2, 3).
+        // Shard 1 panics at the top of tick 3, before mutating anything:
+        // its molecules freeze at their post-tick-2 state, every other
+        // molecule must stay bit-identical to a fault-free run, and both
+        // backends must agree on everything including the ledger.
+        let systems = random_water_systems(8, 120.0, 3);
+        let plan = FaultPlan::new().panic_shard(1, 3);
+        let mut clean = water_farm_with(&systems, 4, ParallelMode::Inline, None);
+        clean.run(10).unwrap();
+        let clean_pos = clean.positions().unwrap();
+
+        let mut ledgers = Vec::new();
+        for mode in [ParallelMode::Inline, ParallelMode::Threaded] {
+            let mut farm = water_farm_with(&systems, 4, mode, Some(plan));
+            farm.run(10).unwrap();
+            let pos = farm.positions().unwrap();
+            for mol in [0usize, 1, 4, 5, 6, 7] {
+                assert_eq!(pos[mol], clean_pos[mol], "unaffected molecule {mol} diverged");
+            }
+            for mol in [2usize, 3] {
+                assert_ne!(pos[mol], clean_pos[mol], "molecule {mol} should be frozen early");
+            }
+            let l = farm.finish().unwrap();
+            assert_eq!(l.panics_recovered, 1);
+            assert_eq!(l.replies_lost, 0);
+            assert_eq!(l.degraded_ticks, 7, "dead from tick 3 through tick 9");
+            assert_eq!(l.shards_lost.len(), 1);
+            assert_eq!((l.shards_lost[0].shard, l.shards_lost[0].tick), (1, 3));
+            assert!(l.shards_lost[0].detail.contains("injected fault"));
+            // 6 healthy molecules × 10 ticks + 2 frozen × 3 completed.
+            assert_eq!(l.molecule_steps, 66);
+            ledgers.push(l);
+        }
+        let (a, b) = (&ledgers[0], &ledgers[1]);
+        assert_eq!(a.molecule_steps, b.molecule_steps);
+        assert_eq!(a.panics_recovered, b.panics_recovered);
+        assert_eq!(a.degraded_ticks, b.degraded_ticks);
+        assert_eq!(a.chip_inferences, b.chip_inferences);
+    }
+
+    #[test]
+    fn saturated_molecule_is_quarantined_and_survivors_stay_bit_identical() {
+        // 6 molecules over 2 shards (3 each; molecule 1 shares shard 0
+        // with molecules 0 and 2). Molecule 1 is pinned onto the 26-bit
+        // rail at tick 4: the divergence monitor must quarantine exactly
+        // it on that tick, its shard-mates' trajectories must not move
+        // by a bit (the SWAR kernel is bit-exact per lane at any batch
+        // size), and its own state must be frozen from then on.
+        let systems = random_water_systems(6, 120.0, 8);
+        let plan = FaultPlan::new().saturate_molecule(1, 4);
+        let mut clean = water_farm_with(&systems, 2, ParallelMode::Inline, None);
+        clean.run(50).unwrap();
+        let clean_pos = clean.positions().unwrap();
+
+        let mut results = Vec::new();
+        for mode in [ParallelMode::Inline, ParallelMode::Threaded] {
+            let mut farm = water_farm_with(&systems, 2, mode, Some(plan));
+            farm.run(50).unwrap();
+            let pos = farm.positions().unwrap();
+            for mol in [0usize, 2, 3, 4, 5] {
+                assert_eq!(pos[mol], clean_pos[mol], "survivor {mol} diverged");
+            }
+            assert_ne!(pos[1], clean_pos[1]);
+            // Quarantined state is frozen: ten more ticks change nothing.
+            farm.run(10).unwrap();
+            assert_eq!(farm.positions().unwrap()[1], pos[1], "quarantined molecule moved");
+            let l = farm.finish().unwrap();
+            assert_eq!(l.molecules_quarantined, 1);
+            assert_eq!(l.quarantined.len(), 1);
+            let q = l.quarantined[0];
+            assert_eq!((q.molecule, q.species, q.tick), (1, 0, 4));
+            assert_eq!(q.reason, QuarantineReason::SaturationEvents);
+            assert!(l.saturation_events >= 3, "rail pin must trip the clamp counter");
+            assert_eq!(l.species[0].molecules_quarantined, 1);
+            assert_eq!(l.panics_recovered, 0);
+            // Degraded from the quarantine tick to the end: ticks 4..59.
+            assert_eq!(l.degraded_ticks, 56);
+            // 5 healthy molecules × 60 ticks + molecule 1's 5 completed
+            // ticks (it still integrated on its quarantine tick).
+            assert_eq!(l.molecule_steps, 305);
+            results.push((pos, l));
+        }
+        let ((pa, la), (pb, lb)) = (&results[0], &results[1]);
+        assert_eq!(pa, pb, "backends disagree under quarantine");
+        assert_eq!(la.saturation_events, lb.saturation_events);
+        assert_eq!(la.degraded_ticks, lb.degraded_ticks);
+        assert_eq!(la.quarantined, lb.quarantined);
+    }
+
+    #[test]
+    fn dropped_reply_kills_the_shard_but_the_tick_succeeds() {
+        // Transport fault, threaded backend only: shard 0's reply channel
+        // is dropped at tick 2. The supervisor writes the shard off as a
+        // lost reply (its job actually ran — the state is simply
+        // unobservable) and the farm keeps serving the other shards.
+        let systems = random_water_systems(4, 100.0, 13);
+        let plan = FaultPlan::new().drop_reply(0, 2);
+        let mut farm = water_farm_with(&systems, 2, ParallelMode::Threaded, Some(plan));
+        farm.run(8).unwrap();
+        let l = farm.finish().unwrap();
+        assert_eq!(l.replies_lost, 1);
+        assert_eq!(l.panics_recovered, 0);
+        assert_eq!(l.shards_lost.len(), 1);
+        assert_eq!((l.shards_lost[0].shard, l.shards_lost[0].tick), (0, 2));
+        assert_eq!(l.degraded_ticks, 6, "dead from tick 2 through tick 7");
+        // Shard 0's two molecules completed 3 ticks (the dropped-reply
+        // tick did execute), shard 1's completed all 8.
+        assert_eq!(l.molecule_steps, 2 * 3 + 2 * 8);
+    }
+
+    #[test]
+    fn health_monitoring_can_be_disabled() {
+        // With the monitor off, a rail-pinned molecule keeps its batch
+        // lanes: nothing is quarantined, but the saturation ledger still
+        // reports the clamp storm.
+        let systems = random_water_systems(2, 100.0, 4);
+        let m = toy_model();
+        let mut farm = WaterFarm::new(
+            &m,
+            &systems,
+            &FarmConfig {
+                health: HealthPolicy { enabled: false, ..HealthPolicy::default() },
+                faults: Some(FaultPlan::new().saturate_molecule(0, 1)),
+                ..FarmConfig::default()
+            },
+        )
+        .unwrap();
+        farm.run(10).unwrap();
+        let l = farm.finish().unwrap();
+        assert_eq!(l.molecules_quarantined, 0);
+        assert_eq!(l.degraded_ticks, 0);
+        assert!(l.saturation_events > 0);
+        assert_eq!(l.molecule_steps, 20);
     }
 }

@@ -23,9 +23,12 @@ pub mod pool;
 pub mod vn;
 
 pub use farm::{
-    generic_group, water_group, FarmConfig, FarmLedger, MoleculeFarm, ServedMolecule,
-    SpeciesGroup, SpeciesLedger, WaterFarm,
+    generic_group, generic_group_pbc, water_group, FarmConfig, FarmLedger, FarmSupervision,
+    HealthPolicy,
+    MoleculeFarm, QuarantineReason, QuarantineRecord, ServedMolecule, ShardLoss, SpeciesGroup,
+    SpeciesLedger, WaterFarm,
 };
+pub use pool::{PoolError, PoolShutdown, Reply, WorkerFault, WorkerPool};
 
 use anyhow::Result;
 
@@ -160,7 +163,9 @@ impl WaterSystem {
         // latency (the nominal budget assumes the water arch).
         cycles.mlp = chip_latency;
         let backend = match mode {
-            ParallelMode::Threaded => ChipBackend::Threaded(ChipPool::spawn(chips.drain(..).collect())),
+            ParallelMode::Threaded => {
+                ChipBackend::Threaded(ChipPool::spawn(chips.drain(..).collect())?)
+            }
             ParallelMode::Inline => ChipBackend::Inline(chips),
         };
         Ok(WaterSystem {

@@ -2,55 +2,220 @@
 //! half of the coordinator.
 //!
 //! [`WorkerPool`] is the one transport: each worker thread owns one item
-//! and runs shipped closures against it. [`ChipPool`] — the ASIC-chip
-//! pool used by the paper's two-chip step, the serving example, and the
-//! Fig. 9 evaluation — is a thin routing layer (round-robin dispatch,
-//! pair dispatch, stats aggregation) over a `WorkerPool<MlpChip>`; it
-//! used to speak its own request/reply protocol on hand-rolled worker
-//! threads.
+//! and runs shipped closures against it. Every shipped job runs under
+//! `catch_unwind`, so a panicking job does **not** kill its worker
+//! thread: the thread stays alive for later jobs, the submitter gets a
+//! typed [`PoolError::JobPanicked`], and the fault is tallied in the
+//! worker's [`WorkerFault`] record (returned by [`WorkerPool::into_items`],
+//! which never panics or deadlocks even when a worker died). [`ChipPool`]
+//! — the ASIC-chip pool used by the paper's two-chip step, the serving
+//! example, and the Fig. 9 evaluation — is a thin routing layer
+//! (round-robin dispatch, pair dispatch, stats aggregation) over a
+//! `WorkerPool<MlpChip>`.
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::asic::MlpChip;
 use crate::fixedpoint::Q13;
 use crate::hw::power::OpCounts;
 
+/// Typed pool faults. Implements `std::error::Error`, so `?` lifts it
+/// into `anyhow` at the coordinator seam.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolError {
+    /// The worker index is out of range for this pool.
+    NoSuchWorker { worker: usize },
+    /// The worker's job channel is closed (its thread exited), so the
+    /// job could not be shipped.
+    WorkerGone { worker: usize },
+    /// The shipped job panicked on the worker; the worker survived and
+    /// keeps serving later jobs.
+    JobPanicked { worker: usize, message: String },
+    /// The reply channel closed without a result being sent.
+    ReplyLost { worker: usize },
+    /// The OS refused to spawn the worker thread.
+    SpawnFailed { worker: usize, message: String },
+}
+
+impl core::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            PoolError::NoSuchWorker { worker } => write!(f, "no pool worker {worker}"),
+            PoolError::WorkerGone { worker } => {
+                write!(f, "pool worker {worker} is gone (job channel closed)")
+            }
+            PoolError::JobPanicked { worker, message } => {
+                write!(f, "pool worker {worker}: job panicked: {message}")
+            }
+            PoolError::ReplyLost { worker } => {
+                write!(f, "pool worker {worker}: reply channel dropped without a result")
+            }
+            PoolError::SpawnFailed { worker, message } => {
+                write!(f, "spawning pool worker {worker} failed: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Render a `catch_unwind`/`JoinHandle::join` panic payload as text.
+pub(crate) fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// What a shipped job reports back to its worker's loop after running
+/// under `catch_unwind`.
+enum JobFlow {
+    /// Job completed (reply sent, or deliberately dropped by injection).
+    Done,
+    /// Job panicked; the payload message rides along for the tally.
+    Panicked(String),
+    /// Injected worker death: leave the loop without replying.
+    Exit,
+}
+
 /// A job shipped to a pool worker: runs against the worker's owned item.
-type PoolJob<T> = Box<dyn FnOnce(&mut T) + Send>;
+type PoolJob<T> = Box<dyn FnOnce(&mut T) -> JobFlow + Send>;
+
+/// Per-worker fault tally kept by the worker thread itself.
+#[derive(Debug, Clone, Default)]
+struct Tally {
+    jobs_panicked: u64,
+    first_panic: Option<String>,
+}
+
+/// Per-worker fault record returned by [`WorkerPool::into_items`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WorkerFault {
+    pub worker: usize,
+    /// Jobs that panicked on this worker (each was caught; the worker
+    /// survived them all unless `died` is set).
+    pub jobs_panicked: u64,
+    /// First panic message seen on this worker (job or thread death).
+    pub first_panic: Option<String>,
+    /// The worker thread itself terminated by panic (outside any job;
+    /// join failed). Its item is lost.
+    pub died: bool,
+}
+
+/// Items plus fault records handed back by [`WorkerPool::into_items`]:
+/// `items[i]` is `None` exactly when worker *i*'s thread died and its
+/// item was lost with it.
+#[derive(Debug)]
+pub struct PoolShutdown<T> {
+    pub items: Vec<Option<T>>,
+    pub faults: Vec<WorkerFault>,
+}
+
+impl<T> PoolShutdown<T> {
+    /// Total jobs that panicked (and were recovered) across all workers.
+    pub fn jobs_panicked(&self) -> u64 {
+        self.faults.iter().map(|f| f.jobs_panicked).sum()
+    }
+
+    /// Items of the workers that survived, in worker order — the healthy
+    /// path, where every slot is `Some`.
+    pub fn surviving_items(self) -> Vec<T> {
+        self.items.into_iter().flatten().collect()
+    }
+}
+
+/// In-flight reply of a submitted job. `recv` maps the transport
+/// outcomes onto typed [`PoolError`]s: a panicking job surfaces as
+/// [`PoolError::JobPanicked`] (the wrapper forwards the payload message
+/// before returning), and a dropped channel as [`PoolError::ReplyLost`].
+pub struct Reply<R> {
+    rrx: mpsc::Receiver<Result<R, String>>,
+    worker: usize,
+}
+
+impl<R> Reply<R> {
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Block for the job's result.
+    pub fn recv(self) -> Result<R, PoolError> {
+        match self.rrx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(message)) => Err(PoolError::JobPanicked { worker: self.worker, message }),
+            Err(mpsc::RecvError) => Err(PoolError::ReplyLost { worker: self.worker }),
+        }
+    }
+}
+
+/// One-shot fault injections armed per worker, consumed by the next
+/// `submit` to that worker (deterministic: no timing involved).
+#[cfg(any(test, feature = "faults"))]
+#[derive(Debug, Clone, Copy, Default)]
+struct Injection {
+    drop_next_reply: bool,
+    exit_on_next_job: bool,
+}
 
 /// Generic worker pool: each thread owns one `T` (a chip simulator, a
 /// molecule-farm shard) and runs shipped closures against it. This is
 /// the transport layer shared by the farm's threaded shard backend and
 /// [`ChipPool`]. Dropping the pool (or calling [`Self::into_items`])
-/// closes the job channels and joins every worker.
+/// closes the job channels and joins every worker; neither panics nor
+/// deadlocks when a worker died.
 pub struct WorkerPool<T: Send + 'static> {
     txs: Vec<mpsc::Sender<PoolJob<T>>>,
-    handles: Vec<JoinHandle<T>>,
+    handles: Vec<JoinHandle<(T, Tally)>>,
+    #[cfg(any(test, feature = "faults"))]
+    inject: std::sync::Mutex<Vec<Injection>>,
 }
 
 impl<T: Send + 'static> WorkerPool<T> {
     /// Spawn one worker thread per item; threads are named `{name}-{i}`.
-    pub fn spawn(name: &str, items: Vec<T>) -> WorkerPool<T> {
-        let mut txs = Vec::with_capacity(items.len());
-        let mut handles = Vec::with_capacity(items.len());
+    ///
+    /// On a spawn failure the already-started workers are abandoned to
+    /// their channels closing (they exit cleanly) and the error names
+    /// the worker that could not start.
+    pub fn spawn(name: &str, items: Vec<T>) -> Result<WorkerPool<T>, PoolError> {
+        let n = items.len();
+        let mut txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
         for (i, mut item) in items.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<PoolJob<T>>();
             let handle = std::thread::Builder::new()
                 .name(format!("{name}-{i}"))
                 .spawn(move || {
+                    let mut tally = Tally::default();
                     while let Ok(job) = rx.recv() {
-                        job(&mut item);
+                        match job(&mut item) {
+                            JobFlow::Done => {}
+                            JobFlow::Panicked(message) => {
+                                tally.jobs_panicked += 1;
+                                tally.first_panic.get_or_insert(message);
+                            }
+                            JobFlow::Exit => break,
+                        }
                     }
-                    item
+                    (item, tally)
                 })
-                .expect("spawn pool worker");
+                .map_err(|e| PoolError::SpawnFailed { worker: i, message: e.to_string() })?;
             txs.push(tx);
             handles.push(handle);
         }
-        WorkerPool { txs, handles }
+        Ok(WorkerPool {
+            txs,
+            handles,
+            #[cfg(any(test, feature = "faults"))]
+            inject: std::sync::Mutex::new(vec![Injection::default(); n]),
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -60,30 +225,75 @@ impl<T: Send + 'static> WorkerPool<T> {
         self.txs.is_empty()
     }
 
-    /// Ship `f` to worker `i` and return the receiver of its result
-    /// (asynchronous: the caller decides when to block on the reply, so
-    /// several workers can be kept in flight concurrently).
-    pub fn submit<R, F>(&self, i: usize, f: F) -> Result<mpsc::Receiver<R>>
+    /// Arm a one-shot injection: the next job submitted to `worker`
+    /// runs, but its reply is dropped unsent (the submitter sees
+    /// [`PoolError::ReplyLost`]).
+    #[cfg(any(test, feature = "faults"))]
+    pub fn inject_reply_drop(&self, worker: usize) {
+        if let Some(slot) = self.inject.lock().unwrap().get_mut(worker) {
+            slot.drop_next_reply = true;
+        }
+    }
+
+    /// Arm a one-shot injection: the next job submitted to `worker`
+    /// kills the worker loop instead of running (the submitter sees
+    /// [`PoolError::ReplyLost`]; later submits see
+    /// [`PoolError::WorkerGone`] once the channel closes).
+    #[cfg(any(test, feature = "faults"))]
+    pub fn inject_worker_exit(&self, worker: usize) {
+        if let Some(slot) = self.inject.lock().unwrap().get_mut(worker) {
+            slot.exit_on_next_job = true;
+        }
+    }
+
+    /// Ship `f` to worker `i` and return the in-flight [`Reply`]
+    /// (asynchronous: the caller decides when to block, so several
+    /// workers can be kept in flight concurrently). The job runs under
+    /// `catch_unwind` on the worker: a panic inside `f` is caught,
+    /// tallied, forwarded to the reply as [`PoolError::JobPanicked`],
+    /// and the worker thread survives to serve later jobs.
+    pub fn submit<R, F>(&self, i: usize, f: F) -> Result<Reply<R>, PoolError>
     where
         R: Send + 'static,
         F: FnOnce(usize, &mut T) -> R + Send + 'static,
     {
-        let tx = self
-            .txs
-            .get(i)
-            .with_context(|| format!("no pool worker {i}"))?;
-        let (rtx, rrx) = mpsc::channel::<R>();
-        tx.send(Box::new(move |item: &mut T| {
-            let _ = rtx.send(f(i, item));
-        }))
-        .map_err(|_| anyhow::anyhow!("pool worker {i} hung up"))?;
-        Ok(rrx)
+        let tx = self.txs.get(i).ok_or(PoolError::NoSuchWorker { worker: i })?;
+        #[cfg(any(test, feature = "faults"))]
+        let injection = {
+            let mut guard = self.inject.lock().unwrap();
+            std::mem::take(&mut guard[i])
+        };
+        let (rtx, rrx) = mpsc::channel::<Result<R, String>>();
+        let job: PoolJob<T> = Box::new(move |item: &mut T| {
+            #[cfg(any(test, feature = "faults"))]
+            if injection.exit_on_next_job {
+                return JobFlow::Exit;
+            }
+            match catch_unwind(AssertUnwindSafe(|| f(i, item))) {
+                Ok(r) => {
+                    #[cfg(any(test, feature = "faults"))]
+                    if injection.drop_next_reply {
+                        return JobFlow::Done;
+                    }
+                    let _ = rtx.send(Ok(r));
+                    JobFlow::Done
+                }
+                Err(payload) => {
+                    let message = panic_message(payload.as_ref());
+                    let _ = rtx.send(Err(message.clone()));
+                    JobFlow::Panicked(message)
+                }
+            }
+        });
+        tx.send(job).map_err(|_| PoolError::WorkerGone { worker: i })?;
+        Ok(Reply { rrx, worker: i })
     }
 
     /// Run `f` on every worker's item **concurrently** and collect the
-    /// results in worker order (a full barrier: returns once every
-    /// worker has replied).
-    pub fn run_all<R, F>(&self, f: F) -> Result<Vec<R>>
+    /// results in worker order (a full barrier: every reply is drained
+    /// before returning, even on error, so no job is abandoned
+    /// in-flight; the first fault is returned).
+    pub fn run_all<R, F>(&self, f: F) -> Result<Vec<R>, PoolError>
     where
         R: Send + 'static,
         F: Fn(usize, &mut T) -> R + Clone + Send + 'static,
@@ -92,21 +302,54 @@ impl<T: Send + 'static> WorkerPool<T> {
         for i in 0..self.txs.len() {
             replies.push(self.submit(i, f.clone())?);
         }
-        replies
-            .into_iter()
-            .enumerate()
-            .map(|(i, rx)| rx.recv().with_context(|| format!("pool worker {i} reply")))
-            .collect()
+        let mut out = Vec::with_capacity(replies.len());
+        let mut first_err: Option<PoolError> = None;
+        for reply in replies {
+            match reply.recv() {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            None => Ok(out),
+            Some(e) => Err(e),
+        }
     }
 
-    /// Shut the pool down and hand the items back in worker order.
-    pub fn into_items(mut self) -> Vec<T> {
+    /// Shut the pool down and hand back what survived, plus per-worker
+    /// fault records. Never panics and never deadlocks: a dead worker
+    /// yields `items[i] == None` with `faults[i].died` set instead of
+    /// propagating its panic.
+    pub fn into_items(mut self) -> PoolShutdown<T> {
         self.txs.clear(); // closes every channel; workers fall out of recv()
         let handles = std::mem::take(&mut self.handles);
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("pool worker panicked"))
-            .collect()
+        let mut items = Vec::with_capacity(handles.len());
+        let mut faults = Vec::with_capacity(handles.len());
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok((item, tally)) => {
+                    faults.push(WorkerFault {
+                        worker: i,
+                        jobs_panicked: tally.jobs_panicked,
+                        first_panic: tally.first_panic,
+                        died: false,
+                    });
+                    items.push(Some(item));
+                }
+                Err(payload) => {
+                    faults.push(WorkerFault {
+                        worker: i,
+                        jobs_panicked: 0,
+                        first_panic: Some(panic_message(payload.as_ref())),
+                        died: true,
+                    });
+                    items.push(None);
+                }
+            }
+        }
+        PoolShutdown { items, faults }
     }
 }
 
@@ -114,7 +357,7 @@ impl<T: Send + 'static> Drop for WorkerPool<T> {
     fn drop(&mut self) {
         self.txs.clear();
         for h in self.handles.drain(..) {
-            let _ = h.join();
+            let _ = h.join(); // dead worker: swallow the payload, keep joining
         }
     }
 }
@@ -125,12 +368,17 @@ impl<T: Send + 'static> Drop for WorkerPool<T> {
 pub struct ChipPool {
     pool: WorkerPool<MlpChip>,
     next: usize,
+    /// Input width of the programmed network, captured at spawn so
+    /// batch rows are validated *before* any job ships (a bad row must
+    /// not abandon in-flight work or desync the cursor).
+    in_dim: Option<usize>,
 }
 
 impl ChipPool {
     /// Spawn one worker thread per chip.
-    pub fn spawn(chips: Vec<MlpChip>) -> ChipPool {
-        ChipPool { pool: WorkerPool::spawn("mlp-chip", chips), next: 0 }
+    pub fn spawn(chips: Vec<MlpChip>) -> Result<ChipPool, PoolError> {
+        let in_dim = chips.iter().find_map(|c| c.network().map(|n| n.in_dim()));
+        Ok(ChipPool { pool: WorkerPool::spawn("mlp-chip", chips)?, next: 0, in_dim })
     }
 
     pub fn len(&self) -> usize {
@@ -140,22 +388,48 @@ impl ChipPool {
         self.pool.is_empty()
     }
 
+    /// Kill one chip worker (one-shot, consumed by the next dispatch
+    /// that routes a job to it) — drives the dead-chip recovery tests.
+    #[cfg(any(test, feature = "faults"))]
+    pub fn inject_chip_death(&self, chip: usize) {
+        self.pool.inject_worker_exit(chip);
+    }
+
     /// Dispatch two inferences to the first two chips *concurrently* and
-    /// wait for both — the paper's two-hydrogen parallel step.
+    /// wait for both — the paper's two-hydrogen parallel step. Width
+    /// errors are raised before either job ships.
     pub fn infer_pair(&mut self, a: Vec<Q13>, b: Vec<Q13>) -> Result<(Vec<Q13>, Vec<Q13>)> {
         anyhow::ensure!(self.pool.len() >= 2, "need ≥2 chips");
+        if let Some(d) = self.in_dim {
+            anyhow::ensure!(a.len() == d, "input a: {} features, chip expects {d}", a.len());
+            anyhow::ensure!(b.len() == d, "input b: {} features, chip expects {d}", b.len());
+        }
         let ra = self.pool.submit(0, move |_, chip: &mut MlpChip| chip.infer(&a))?;
         let rb = self.pool.submit(1, move |_, chip: &mut MlpChip| chip.infer(&b))?;
-        let ya = ra.recv().context("chip 0 reply")??;
-        let yb = rb.recv().context("chip 1 reply")??;
-        Ok((ya, yb))
+        // Drain both replies before erroring so neither job is abandoned.
+        let ya = ra.recv();
+        let yb = rb.recv();
+        Ok((ya??, yb??))
     }
 
     /// Batch inference service: round-robin the rows over all chips
     /// (every row in flight at once), results returned in input order.
+    ///
+    /// Row widths are validated **up front**: a bad row fails the whole
+    /// batch before any job is submitted, leaving the round-robin
+    /// cursor and every chip's counters untouched.
     pub fn infer_batch(&mut self, rows: &[Vec<Q13>]) -> Result<Vec<Vec<Q13>>> {
         let n = self.pool.len();
         anyhow::ensure!(n > 0, "empty pool");
+        if let Some(d) = self.in_dim {
+            for (i, row) in rows.iter().enumerate() {
+                anyhow::ensure!(
+                    row.len() == d,
+                    "batch row {i}: {} features, chip expects {d}",
+                    row.len()
+                );
+            }
+        }
         let mut pending = Vec::with_capacity(rows.len());
         for (i, row) in rows.iter().enumerate() {
             let w = (self.next + i) % n;
@@ -163,11 +437,25 @@ impl ChipPool {
             pending.push(self.pool.submit(w, move |_, chip: &mut MlpChip| chip.infer(&row))?);
         }
         self.next = (self.next + rows.len()) % n;
+        // Drain every reply before surfacing the first fault, so an
+        // early error never abandons later jobs in flight.
         let mut out = vec![Vec::new(); rows.len()];
-        for (i, rx) in pending.into_iter().enumerate() {
-            out[i] = rx.recv().context("chip reply")??;
+        let mut first_err: Option<anyhow::Error> = None;
+        for (i, reply) in pending.into_iter().enumerate() {
+            match reply.recv() {
+                Ok(Ok(y)) => out[i] = y,
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e.into());
+                }
+            }
         }
-        Ok(out)
+        match first_err {
+            None => Ok(out),
+            Some(e) => Err(e),
+        }
     }
 
     /// Aggregate counters across all chips.
@@ -207,7 +495,7 @@ mod tests {
                 c
             })
             .collect();
-        (ChipPool::spawn(chips), m)
+        (ChipPool::spawn(chips).unwrap(), m)
     }
 
     #[test]
@@ -275,6 +563,45 @@ mod tests {
     }
 
     #[test]
+    fn bad_batch_row_fails_up_front_and_leaves_cursor_and_stats_untouched() {
+        let (mut pool, _m) = pool_of(3);
+        // Seed the cursor off zero with one good single-row batch.
+        pool.infer_batch(&[vec![Q13::ZERO; 3]]).unwrap();
+        // A batch with a bad row in the *middle* must reject the whole
+        // batch before submitting anything.
+        let rows = vec![vec![Q13::ZERO; 3], vec![Q13::ZERO; 7], vec![Q13::ZERO; 3]];
+        assert!(pool.infer_batch(&rows).is_err());
+        let (inferences, _, _) = pool.stats().unwrap();
+        assert_eq!(inferences, 1, "rejected batch must not run any rows");
+        // Cursor still at 1: the next two single-row batches land on
+        // chips 1 and 2, giving each chip exactly one inference.
+        for _ in 0..2 {
+            pool.infer_batch(&[vec![Q13::ZERO; 3]]).unwrap();
+        }
+        let per_chip = pool.pool.run_all(|_, c: &mut MlpChip| c.inferences).unwrap();
+        assert_eq!(per_chip, vec![1, 1, 1], "cursor desynced by rejected batch");
+    }
+
+    #[test]
+    fn chip_pool_survives_a_dead_chip_with_typed_errors() {
+        let (mut pool, _m) = pool_of(2);
+        pool.inject_chip_death(1);
+        // Pair dispatch routes to chips 0 and 1; chip 1 dies without a
+        // reply → typed error, no hang.
+        let err = pool
+            .infer_pair(vec![Q13::ZERO; 3], vec![Q13::ZERO; 3])
+            .unwrap_err();
+        let pool_err = err.downcast_ref::<PoolError>().expect("typed PoolError");
+        assert!(matches!(pool_err, PoolError::ReplyLost { worker: 1 }));
+        // Later batches that route a row to the dead chip fail fast with
+        // WorkerGone — still typed, still no hang, chip 0 keeps serving.
+        let err = pool
+            .infer_batch(&[vec![Q13::ZERO; 3], vec![Q13::ZERO; 3]])
+            .unwrap_err();
+        assert!(err.downcast_ref::<PoolError>().is_some());
+    }
+
+    #[test]
     fn drop_joins_workers() {
         let (pool, _m) = pool_of(4);
         drop(pool); // must not hang or panic
@@ -282,7 +609,7 @@ mod tests {
 
     #[test]
     fn worker_pool_runs_concurrently_and_returns_items_in_order() {
-        let pool = WorkerPool::spawn("ctr", vec![0u64, 100, 200, 300]);
+        let pool = WorkerPool::spawn("ctr", vec![0u64, 100, 200, 300]).unwrap();
         assert_eq!(pool.len(), 4);
         for _ in 0..5 {
             let sums = pool
@@ -295,25 +622,117 @@ mod tests {
                 assert_eq!(slot, i, "results must come back in worker order");
             }
         }
-        let items = pool.into_items();
-        assert_eq!(items, vec![5, 105, 205, 305]);
+        let shutdown = pool.into_items();
+        assert_eq!(shutdown.jobs_panicked(), 0);
+        assert_eq!(shutdown.surviving_items(), vec![5, 105, 205, 305]);
     }
 
     #[test]
     fn worker_pool_empty_is_fine() {
-        let pool: WorkerPool<u8> = WorkerPool::spawn("none", Vec::new());
+        let pool: WorkerPool<u8> = WorkerPool::spawn("none", Vec::new()).unwrap();
         assert!(pool.is_empty());
         assert!(pool.run_all(|_, _: &mut u8| ()).unwrap().is_empty());
-        assert!(pool.into_items().is_empty());
+        assert!(pool.into_items().items.is_empty());
     }
 
     #[test]
     fn submit_targets_one_worker() {
-        let pool = WorkerPool::spawn("one", vec![10u64, 20]);
+        let pool = WorkerPool::spawn("one", vec![10u64, 20]).unwrap();
         let r = pool.submit(1, |i, c: &mut u64| (i, *c)).unwrap();
         assert_eq!(r.recv().unwrap(), (1, 20));
-        assert!(pool.submit(2, |_, c: &mut u64| *c).is_err(), "out-of-range worker");
-        let items = pool.into_items();
-        assert_eq!(items, vec![10, 20]);
+        assert!(
+            matches!(
+                pool.submit(2, |_, c: &mut u64| *c),
+                Err(PoolError::NoSuchWorker { worker: 2 })
+            ),
+            "out-of-range worker"
+        );
+        assert_eq!(pool.into_items().surviving_items(), vec![10, 20]);
+    }
+
+    #[test]
+    fn job_panic_is_caught_and_worker_survives() {
+        let pool = WorkerPool::spawn("panicky", vec![0u64, 100]).unwrap();
+        let reply = pool
+            .submit(0, |_, _: &mut u64| -> u64 { panic!("injected job panic") })
+            .unwrap();
+        match reply.recv() {
+            Err(PoolError::JobPanicked { worker: 0, message }) => {
+                assert!(message.contains("injected job panic"), "got: {message}")
+            }
+            other => panic!("expected JobPanicked, got {other:?}"),
+        }
+        // Worker 0 survived the panic and keeps serving.
+        let r = pool.submit(0, |_, c: &mut u64| { *c += 7; *c }).unwrap();
+        assert_eq!(r.recv().unwrap(), 7);
+        // Shutdown reports the tally; both items survive.
+        let shutdown = pool.into_items();
+        assert_eq!(shutdown.jobs_panicked(), 1);
+        assert_eq!(shutdown.faults[0].jobs_panicked, 1);
+        assert!(!shutdown.faults[0].died);
+        assert!(shutdown.faults[0].first_panic.as_deref().unwrap().contains("injected"));
+        assert_eq!(shutdown.surviving_items(), vec![7, 100]);
+    }
+
+    #[test]
+    fn run_all_isolates_a_panicking_job_and_still_serves_others() {
+        let pool = WorkerPool::spawn("mixed", vec![1u64, 2, 3]).unwrap();
+        let err = pool
+            .run_all(|i, c: &mut u64| {
+                if i == 0 {
+                    panic!("worker 0 job blew up");
+                }
+                *c += 1;
+                *c
+            })
+            .unwrap_err();
+        assert!(matches!(err, PoolError::JobPanicked { worker: 0, .. }));
+        // Workers 1 and 2 ran their jobs; 0 skipped its increment but is
+        // alive. A second healthy round works everywhere.
+        let vals = pool.run_all(|_, c: &mut u64| *c).unwrap();
+        assert_eq!(vals, vec![1, 3, 4]);
+        let shutdown = pool.into_items();
+        assert_eq!(shutdown.jobs_panicked(), 1);
+        assert_eq!(shutdown.surviving_items(), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn reply_drop_injection_surfaces_as_reply_lost() {
+        let pool = WorkerPool::spawn("lossy", vec![5u64]).unwrap();
+        pool.inject_reply_drop(0);
+        let reply = pool.submit(0, |_, c: &mut u64| { *c += 1; *c }).unwrap();
+        assert!(matches!(reply.recv(), Err(PoolError::ReplyLost { worker: 0 })));
+        // The job itself DID run (only the reply was dropped) and the
+        // injection was one-shot.
+        let r = pool.submit(0, |_, c: &mut u64| *c).unwrap();
+        assert_eq!(r.recv().unwrap(), 6);
+    }
+
+    #[test]
+    fn worker_exit_injection_makes_later_submits_worker_gone() {
+        let pool = WorkerPool::spawn("mortal", vec![1u64, 2]).unwrap();
+        pool.inject_worker_exit(0);
+        let reply = pool.submit(0, |_, c: &mut u64| *c).unwrap();
+        assert!(matches!(reply.recv(), Err(PoolError::ReplyLost { worker: 0 })));
+        // The worker loop exited; once the channel reports closed, a
+        // submit yields WorkerGone. Send can race the loop teardown, so
+        // accept either typed outcome on the first retry, then require
+        // WorkerGone steady-state.
+        loop {
+            match pool.submit(0, |_, c: &mut u64| *c) {
+                Err(PoolError::WorkerGone { worker: 0 }) => break,
+                Ok(reply) => {
+                    assert!(matches!(reply.recv(), Err(PoolError::ReplyLost { worker: 0 })))
+                }
+                other => panic!("unexpected: {other:?}"),
+            }
+        }
+        // Worker 1 is unaffected; shutdown hands back both items (the
+        // exited worker returned its item through the normal path).
+        let r = pool.submit(1, |_, c: &mut u64| *c).unwrap();
+        assert_eq!(r.recv().unwrap(), 2);
+        let shutdown = pool.into_items();
+        assert_eq!(shutdown.surviving_items(), vec![1, 2]);
+        assert!(!shutdown.faults[0].died, "injected exit is clean, not a thread panic");
     }
 }

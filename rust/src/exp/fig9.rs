@@ -40,7 +40,7 @@ pub fn compute(n_frames: usize) -> Result<ChipEval> {
             c
         })
         .collect();
-    let mut pool = ChipPool::spawn(chips);
+    let mut pool = ChipPool::spawn(chips)?;
 
     // Fresh configurations from re-initialized NVE bursts (same protocol
     // as the training sampler, held-out seed — see datasets::water_dataset

@@ -13,7 +13,7 @@ use crate::util::units::ACC_CONV;
 use crate::util::Vec3;
 
 use super::qint::{
-    bus_q13, condition_raw24, mac_step, rshift_round, sat_state, CONST_FRAC, DT_FRAC,
+    bus_q13, condition_raw24, mac_step_counted, rshift_round, sat_state, CONST_FRAC, DT_FRAC,
     RSQRT_WORK_FRAC, STATE_FRAC, STATE_MAX,
 };
 use super::rsqrt;
@@ -95,6 +95,10 @@ pub struct WaterFpga {
     /// Operation counters (energy model).
     pub ops: OpCounts,
     pub steps: u64,
+    /// Cumulative 26-bit state-clamp events in the integrator MAC (the
+    /// hardware's overflow sticky flag) — the farm's divergence monitor
+    /// reads this as a health signal. Zero on every healthy trajectory.
+    pub sat_events: u64,
 }
 
 impl WaterFpga {
@@ -128,6 +132,18 @@ impl WaterFpga {
             feat_shift: [0; 3],
             ops: OpCounts::default(),
             steps: 0,
+            sat_events: 0,
+        }
+    }
+
+    /// Fault injection: pin atom 0's state registers onto the +26-bit
+    /// rail, so the next MAC step saturates deterministically (the
+    /// divergence the quarantine monitor must catch).
+    #[cfg(any(test, feature = "faults"))]
+    pub fn inject_rail_saturation(&mut self) {
+        for a in 0..3 {
+            self.vel[0][a] = STATE_MAX;
+            self.pos[0][a] = STATE_MAX;
         }
     }
 
@@ -307,7 +323,14 @@ impl WaterFpga {
         // see `qint::mac_step`).
         for i in 0..3 {
             for a in 0..3 {
-                mac_step(&mut self.pos[i][a], &mut self.vel[i][a], f[i][a], self.c_raw[i], self.dt_raw);
+                mac_step_counted(
+                    &mut self.pos[i][a],
+                    &mut self.vel[i][a],
+                    f[i][a],
+                    self.c_raw[i],
+                    self.dt_raw,
+                    &mut self.sat_events,
+                );
             }
         }
         self.ops.mults += 18;
@@ -423,6 +446,9 @@ pub struct MoleculeFpga {
     feat_f: Vec<f64>,
     pub ops: OpCounts,
     pub steps: u64,
+    /// Cumulative 26-bit state-clamp events in the integrator MAC — see
+    /// [`WaterFpga::sat_events`].
+    pub sat_events: u64,
 }
 
 impl MoleculeFpga {
@@ -520,7 +546,22 @@ impl MoleculeFpga {
             feat_f: vec![0.0; 4 * n_nb],
             ops: OpCounts::default(),
             steps: 0,
+            sat_events: 0,
         })
+    }
+
+    /// Fault injection: pin atom 0's velocity (and, for isolated
+    /// molecules, position) onto the +26-bit rail so the next MAC step
+    /// saturates (isolated) or the trajectory jumps across the cell
+    /// (bulk) — both divergence signatures the monitor must catch.
+    #[cfg(any(test, feature = "faults"))]
+    pub fn inject_rail_saturation(&mut self) {
+        for a in 0..3 {
+            self.vel[0][a] = STATE_MAX;
+            if self.pbc.is_none() {
+                self.pos[0][a] = STATE_MAX;
+            }
+        }
     }
 
     pub fn n_atoms(&self) -> usize {
@@ -636,7 +677,14 @@ impl MoleculeFpga {
                 // wire shift — see the matching note in
                 // [`WaterFpga::integrate`].
                 let f = crate::fixedpoint::shift_raw(c[a * batch + lane0 + i].0 as i64, self.force_shift);
-                mac_step(&mut self.pos[i][a], &mut self.vel[i][a], f, self.c_raw[i], self.dt_raw);
+                mac_step_counted(
+                    &mut self.pos[i][a],
+                    &mut self.vel[i][a],
+                    f,
+                    self.c_raw[i],
+                    self.dt_raw,
+                    &mut self.sat_events,
+                );
                 if let Some(b) = self.pbc {
                     self.pos[i][a] = self.pos[i][a].rem_euclid(b.raw);
                 }
@@ -741,6 +789,25 @@ mod tests {
             let d = (fpga.positions()[i] - float_sys.pos[i]).norm();
             assert!(d < 0.02, "atom {i} diverged by {d} Å after 50 fs");
         }
+        // A healthy trajectory never touches the 26-bit clamps.
+        assert_eq!(fpga.sat_events, 0);
+    }
+
+    #[test]
+    fn injected_rail_saturation_trips_the_clamp_counter() {
+        let sys = eq_system();
+        let mut fpga = WaterFpga::new(&sys, 0.25);
+        let frames = fpga.extract_features();
+        fpga.integrate(&frames, [[Q13::ZERO; 2]; 2]);
+        assert_eq!(fpga.sat_events, 0, "zero-force step must not clamp");
+        // Pin atom 0 to the +rail: the very next step's r += v·dt pushes
+        // past STATE_MAX on every axis of atom 0 and the sticky counter
+        // fires (vel stays exactly at the rail under zero force, so the
+        // velocity clamp itself is silent — position does the counting).
+        fpga.inject_rail_saturation();
+        let frames = fpga.extract_features();
+        fpga.integrate(&frames, [[Q13::ZERO; 2]; 2]);
+        assert!(fpga.sat_events >= 3, "expected ≥3 clamp events, got {}", fpga.sat_events);
     }
 
     #[test]

@@ -55,10 +55,33 @@ pub fn rshift_round(x: i64, n: u32) -> i64 {
 /// profile's golden vectors — is this exact function.
 #[inline(always)]
 pub fn mac_step(pos: &mut i64, vel: &mut i64, f_raw10: i64, c_raw: i64, dt_raw: i64) {
+    let mut discard = 0u64;
+    mac_step_counted(pos, vel, f_raw10, c_raw, dt_raw, &mut discard);
+}
+
+/// [`mac_step`] with saturation accounting: bit-identical arithmetic,
+/// plus `sat_events` is incremented once per state register the 26-bit
+/// clamp actually bent (0, 1, or 2 per call). In hardware this is the
+/// overflow sticky flag next to each saturating adder; the farm's
+/// divergence monitor treats it as a first-class health signal rather
+/// than a silent clamp.
+#[inline(always)]
+pub fn mac_step_counted(
+    pos: &mut i64,
+    vel: &mut i64,
+    f_raw10: i64,
+    c_raw: i64,
+    dt_raw: i64,
+    sat_events: &mut u64,
+) {
     let dv = rshift_round(f_raw10 * c_raw, 10 + CONST_FRAC - STATE_FRAC);
-    *vel = sat_state(*vel + dv);
+    let v = *vel + dv;
+    *vel = sat_state(v);
+    *sat_events += (*vel != v) as u64;
     let dr = rshift_round(*vel * dt_raw, DT_FRAC);
-    *pos = sat_state(*pos + dr);
+    let p = *pos + dr;
+    *pos = sat_state(p);
+    *sat_events += (*pos != p) as u64;
 }
 
 /// The conditioning stage on one frac-24 raw feature: (raw − center)
@@ -120,6 +143,27 @@ mod tests {
         mac_step(&mut pos, &mut vel, 1i64 << 40, 1i64 << 24, 1i64 << 14);
         assert_eq!(vel, STATE_MAX);
         assert_eq!(pos, STATE_MAX);
+    }
+
+    #[test]
+    fn mac_step_counted_is_bit_identical_and_counts_clamps() {
+        // Healthy step: no clamp, no events, same state as mac_step.
+        let (mut pos, mut vel) = (0i64, 0i64);
+        let (mut pos2, mut vel2) = (0i64, 0i64);
+        let mut events = 0u64;
+        mac_step(&mut pos, &mut vel, 1024, 1i64 << 20, 1i64 << 14);
+        mac_step_counted(&mut pos2, &mut vel2, 1024, 1i64 << 20, 1i64 << 14, &mut events);
+        assert_eq!((pos, vel), (pos2, vel2));
+        assert_eq!(events, 0);
+        // Saturating step: both state registers clamp → 2 events.
+        let (mut pos, mut vel) = (0i64, 0i64);
+        mac_step_counted(&mut pos, &mut vel, 1i64 << 40, 1i64 << 24, 1i64 << 14, &mut events);
+        assert_eq!((vel, pos), (STATE_MAX, STATE_MAX));
+        assert_eq!(events, 2);
+        // Once pinned at the rail with zero force, v stays exactly at
+        // MAX (no clamp fires) but r keeps clamping → 1 event/step.
+        mac_step_counted(&mut pos, &mut vel, 0, 1i64 << 24, 1i64 << 14, &mut events);
+        assert_eq!(events, 3);
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Deterministic fault injection for the supervised farm.
+//!
+//! A [`FaultPlan`] is a small, `Copy`, exactly-reproducible schedule of
+//! faults — *panic shard i at tick t*, *force molecule j into rail
+//! saturation at tick t*, *drop shard i's reply channel at tick t* —
+//! that the farm and pool consult at fixed points of their tick. There
+//! is no timing or randomness at injection time: the same plan against
+//! the same workload produces the same fault, the same recovery, and
+//! the same ledger on every run and on both backends (the whole point —
+//! the tier-1 suite asserts inline/threaded ledger identity *under*
+//! faults).
+//!
+//! Compiled only under `cfg(any(test, feature = "faults"))`; production
+//! builds carry no injection branches.
+
+use crate::util::rng::Pcg;
+
+/// Max scheduled faults per kind. Fixed arrays keep the plan `Copy`, so
+/// it can ride inside the `Copy` farm/config structs.
+pub const MAX_FAULTS: usize = 4;
+
+/// A deterministic fault schedule. Coordinates are farm-level: shards
+/// by farm shard index, molecules by farm-wide construction-order
+/// index, ticks by farm tick (0-based).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// (shard, tick): panic the shard's job at the top of that tick,
+    /// before it mutates any state.
+    panics: [Option<(usize, u64)>; MAX_FAULTS],
+    /// (molecule, tick): pin the molecule's integrator state to the
+    /// 26-bit rail at the top of that tick.
+    sats: [Option<(usize, u64)>; MAX_FAULTS],
+    /// (shard, tick): drop the reply channel of that tick's job
+    /// (threaded backend; ignored inline, where there is no transport).
+    reply_drops: [Option<(usize, u64)>; MAX_FAULTS],
+}
+
+fn push(slots: &mut [Option<(usize, u64)>; MAX_FAULTS], entry: (usize, u64)) {
+    for s in slots.iter_mut() {
+        if s.is_none() {
+            *s = Some(entry);
+            return;
+        }
+    }
+    panic!("FaultPlan holds at most {MAX_FAULTS} faults per kind");
+}
+
+fn hit(slots: &[Option<(usize, u64)>; MAX_FAULTS], idx: usize, tick: u64) -> bool {
+    slots.iter().flatten().any(|&(i, t)| i == idx && t == tick)
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule a panic in shard `shard`'s job at tick `tick`.
+    pub fn panic_shard(mut self, shard: usize, tick: u64) -> Self {
+        push(&mut self.panics, (shard, tick));
+        self
+    }
+
+    /// Schedule rail saturation of molecule `molecule` at tick `tick`.
+    pub fn saturate_molecule(mut self, molecule: usize, tick: u64) -> Self {
+        push(&mut self.sats, (molecule, tick));
+        self
+    }
+
+    /// Schedule the loss of shard `shard`'s reply channel at tick
+    /// `tick` (threaded backend only).
+    pub fn drop_reply(mut self, shard: usize, tick: u64) -> Self {
+        push(&mut self.reply_drops, (shard, tick));
+        self
+    }
+
+    /// Does the plan panic `shard` at `tick`?
+    pub fn panics_at(&self, shard: usize, tick: u64) -> bool {
+        hit(&self.panics, shard, tick)
+    }
+
+    /// Does the plan saturate `molecule` at `tick`?
+    pub fn saturates_at(&self, molecule: usize, tick: u64) -> bool {
+        hit(&self.sats, molecule, tick)
+    }
+
+    /// Does the plan drop `shard`'s reply at `tick`?
+    pub fn drops_reply_at(&self, shard: usize, tick: u64) -> bool {
+        hit(&self.reply_drops, shard, tick)
+    }
+
+    /// Seeded chaos plan: one shard panic and one molecule saturation at
+    /// pseudorandom (but fully seed-determined) coordinates within the
+    /// given farm shape. Two calls with the same arguments build the
+    /// same plan.
+    pub fn random(seed: u64, n_shards: usize, n_molecules: usize, ticks: u64) -> FaultPlan {
+        assert!(n_shards > 0 && n_molecules > 0 && ticks > 0);
+        let mut rng = Pcg::new(seed);
+        let shard = rng.below(n_shards as u32) as usize;
+        let panic_tick = rng.below(ticks as u32) as u64;
+        let molecule = rng.below(n_molecules as u32) as usize;
+        let sat_tick = rng.below(ticks as u32) as u64;
+        FaultPlan::new()
+            .panic_shard(shard, panic_tick)
+            .saturate_molecule(molecule, sat_tick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_schedules_and_queries_faults() {
+        let plan = FaultPlan::new()
+            .panic_shard(2, 10)
+            .saturate_molecule(5, 4)
+            .drop_reply(1, 7);
+        assert!(plan.panics_at(2, 10));
+        assert!(!plan.panics_at(2, 11));
+        assert!(!plan.panics_at(1, 10));
+        assert!(plan.saturates_at(5, 4));
+        assert!(!plan.saturates_at(4, 5));
+        assert!(plan.drops_reply_at(1, 7));
+        assert!(!plan.drops_reply_at(7, 1));
+        // An empty plan injects nothing anywhere.
+        let none = FaultPlan::default();
+        assert!(!none.panics_at(0, 0) && !none.saturates_at(0, 0) && !none.drops_reply_at(0, 0));
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic_and_in_range() {
+        let a = FaultPlan::random(0xFA11, 5, 40, 100);
+        let b = FaultPlan::random(0xFA11, 5, 40, 100);
+        assert_eq!(a, b);
+        let hits: Vec<_> = (0..5)
+            .flat_map(|s| (0..100).map(move |t| (s, t)))
+            .filter(|&(s, t)| a.panics_at(s, t))
+            .collect();
+        assert_eq!(hits.len(), 1);
+        assert_ne!(a, FaultPlan::random(0xFA12, 5, 40, 100));
+    }
+
+    #[test]
+    #[should_panic(expected = "at most")]
+    fn plan_overflow_panics() {
+        let mut plan = FaultPlan::new();
+        for i in 0..=MAX_FAULTS {
+            plan = plan.panic_shard(i, 0);
+        }
+    }
+}

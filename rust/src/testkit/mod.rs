@@ -9,6 +9,9 @@
 
 use crate::util::rng::Pcg;
 
+#[cfg(any(test, feature = "faults"))]
+pub mod faults;
+
 /// Configuration for a property run.
 #[derive(Clone)]
 pub struct Config {

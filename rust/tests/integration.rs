@@ -162,7 +162,7 @@ fn chip_pool_scales_and_is_deterministic() {
                 c
             })
             .collect();
-        let mut pool = ChipPool::spawn(chips);
+        let mut pool = ChipPool::spawn(chips).unwrap();
         let out = pool.infer_batch(&rows).unwrap();
         match &reference {
             None => reference = Some(out),
