@@ -132,8 +132,49 @@ fn main() {
         }
     }
 
+    // Epoch-batched driver sweep (the perf tentpole): the same
+    // mixed-species farm driven per-tick (epoch 1) and with one shard
+    // job per `epoch` ticks — amortizing the threaded backend's
+    // per-tick submit/recv round-trip + barrier and overlapping the
+    // host's ledger folding with shard execution. Speedups are vs the
+    // epoch-1 run of the same backend.
+    let epoch_ticks = if quick { 128 } else { 1024 };
+    let mut epoch_rows: Vec<Value> = Vec::new();
+    for (label, mode) in [("inline", ParallelMode::Inline), ("threaded", ParallelMode::Threaded)] {
+        let mut tick_secs = 0.0f64;
+        for epoch in [1usize, 4, 16, 64] {
+            let groups = mixed_farm_groups(48, 16, 2024, 4048).expect("mixed groups");
+            let mut farm = MoleculeFarm::new(groups, 1, mode).expect("farm construction");
+            let (_, dt) = b.measure_once(
+                &format!("epoch_sweep_{label}_e{epoch}_x{epoch_ticks}"),
+                || farm.run_epoched(epoch_ticks, epoch).expect("farm run"),
+            );
+            let ledger = farm.finish().expect("farm finish");
+            let secs = dt.as_secs_f64();
+            if epoch == 1 {
+                tick_secs = secs;
+            }
+            let speedup = if secs > 0.0 { tick_secs / secs } else { 0.0 };
+            b.note(
+                &format!("epoch_speedup_vs_tick_{label}_e{epoch}"),
+                format!("{speedup:.2}"),
+            );
+            epoch_rows.push(json::obj(vec![
+                ("backend", json::s(label)),
+                ("epoch", json::num(epoch as f64)),
+                ("ticks", json::num(epoch_ticks as f64)),
+                (
+                    "molecule_steps_per_sec",
+                    json::num(ledger.host_steps_per_second()),
+                ),
+                ("epoch_speedup_vs_tick", json::num(speedup)),
+            ]));
+        }
+    }
+
     b.attach("farm", Value::Arr(rows));
     b.attach("lane_sweep", Value::Arr(lane_rows));
     b.attach("mixed_species", Value::Arr(mixed_rows));
+    b.attach("epoch_sweep", Value::Arr(epoch_rows));
     b.finish();
 }

@@ -1,6 +1,7 @@
 //! §Perf micro-benches: the request-path hot spots of every layer —
 //! Q13 arithmetic, SQNN forward, chip inference, FPGA feature/integrate,
-//! full coordinator step (inline and threaded), and the PJRT dispatch.
+//! the worker-pool submit/recv round-trip, full coordinator step
+//! (inline and threaded), and the PJRT dispatch.
 //! This is the harness the EXPERIMENTS.md §Perf iteration log is
 //! measured with.
 
@@ -193,6 +194,40 @@ fn main() {
             gfpga.integrate_soa(&gc, lanes, 0);
             gfpga.steps
         });
+    }
+
+    // L2: the supervisor↔shard transport itself — one submit/recv
+    // round-trip through the worker pool. This is the per-tick sync
+    // cost the epoch-batched farm driver (`MoleculeFarm::run_epoch`)
+    // amortizes down to one round-trip per epoch; `farm_throughput`'s
+    // `epoch_sweep` measures the end-to-end effect.
+    {
+        use nvnmd::coordinator::WorkerPool;
+        let pool = WorkerPool::spawn("bench-counter", vec![0u64; 4]).unwrap();
+        b.measure("pool_submit_recv_roundtrip", || {
+            pool.submit(0, |_, c: &mut u64| {
+                *c += 1;
+                *c
+            })
+            .unwrap()
+            .recv()
+            .unwrap()
+        });
+        // Fan-out + barrier across all four workers: the full per-tick
+        // transport bill of a 4-shard threaded farm before batching.
+        b.measure("pool_submit_recv_barrier_4", || {
+            let replies: Vec<_> = (0..4)
+                .map(|i| {
+                    pool.submit(i, |_, c: &mut u64| {
+                        *c += 1;
+                        *c
+                    })
+                    .unwrap()
+                })
+                .collect();
+            replies.into_iter().map(|r| r.recv().unwrap()).sum::<u64>()
+        });
+        drop(pool.into_items());
     }
 
     // L3d: full coordinator step, inline vs threaded.

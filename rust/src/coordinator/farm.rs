@@ -497,11 +497,31 @@ pub struct ShardLoss {
     pub detail: String,
 }
 
-/// Per-tick report a shard hands back to the farm supervisor.
-#[derive(Debug, Clone, Copy)]
-struct ShardTick {
-    /// Molecules quarantined on this shard so far (cumulative).
+/// Per-epoch report a shard hands back to the farm supervisor: one
+/// reply per [`FarmShard::run_ticks`] job instead of one per tick, with
+/// everything the supervisor's books need carried as tick-exact tallies
+/// and event records (the `n = 1` case is the classic per-tick report).
+#[derive(Debug, Clone)]
+struct ShardEpoch {
+    /// Ticks actually completed this epoch (= the requested epoch
+    /// length unless the shard died mid-epoch).
+    ticks_run: u64,
+    /// Molecule-steps integrated this epoch.
+    steps: u64,
+    /// New 26-bit integrator saturation events observed this epoch.
+    sat_events: u64,
+    /// New Q13 rail hits observed on chip output lanes this epoch.
+    rail_hits: u64,
+    /// Molecules quarantined on this shard so far (cumulative — the
+    /// supervisor's health key, as the per-tick report carried).
     quarantined: u32,
+    /// Quarantine decisions made *during* this epoch, each with the
+    /// exact tick it happened on.
+    quarantines: Vec<QuarantineRecord>,
+    /// The shard died mid-epoch: (absolute tick of the panicking tick,
+    /// panic message). Ticks before it completed normally and their
+    /// effects are in the tallies above.
+    loss: Option<(u64, String)>,
 }
 
 /// Per-molecule divergence-monitor state.
@@ -649,9 +669,9 @@ impl FarmShard {
     }
 
     /// One MD step for every active molecule in the shard, followed by
-    /// the divergence monitor.
-    fn tick(&mut self) -> Result<ShardTick> {
-        let t0 = Instant::now();
+    /// the divergence monitor. The wall-clock sample pair lives in
+    /// [`FarmShard::run_ticks`], which samples once per epoch.
+    fn tick_once(&mut self) -> Result<()> {
         let tick_idx = self.ticks;
         let budget = self.tick_cycles;
         #[cfg(any(test, feature = "faults"))]
@@ -686,8 +706,70 @@ impl FarmShard {
             self.check_health(tick_idx);
         }
         self.cycles += budget;
+        Ok(())
+    }
+
+    /// Run `n` ticks as one epoch: one wall-clock sample pair, one
+    /// reply to the supervisor. Fault semantics stay tick-exact — each
+    /// tick runs under its own `catch_unwind`, so a panic at absolute
+    /// tick `t` freezes the shard with ticks `..t` completed, exactly
+    /// as under per-tick driving; the shard advances its own tick
+    /// counter, so health checks and `FaultPlan` injection points fire
+    /// at the same absolute tick indices regardless of epoch length.
+    ///
+    /// `transport_faults` (threaded backend) makes a scheduled reply
+    /// drop end the epoch right after its tick executes, so the shard's
+    /// frozen state matches what the per-tick driver would have left
+    /// when the transport lost that tick's reply.
+    fn run_ticks(&mut self, n: u64, transport_faults: bool) -> Result<ShardEpoch> {
+        #[cfg(not(any(test, feature = "faults")))]
+        let _ = transport_faults;
+        let t0 = Instant::now();
+        let first_tick = self.ticks;
+        let steps0: u64 = self.mols.iter().map(|m| m.steps()).sum();
+        let sat0: u64 = self.mols.iter().map(|m| m.sat_events()).sum();
+        let rail0: u64 = self.mon.iter().map(|mo| mo.rail_hits).sum();
+        let quar0 = self.quarantined.len();
+        let mut loss = None;
+        let mut err = None;
+        for _ in 0..n {
+            let tick_idx = self.ticks;
+            match catch_unwind(AssertUnwindSafe(|| self.tick_once())) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    err = Some(e);
+                    break;
+                }
+                Err(payload) => {
+                    loss = Some((tick_idx, panic_message(payload.as_ref())));
+                    break;
+                }
+            }
+            #[cfg(any(test, feature = "faults"))]
+            if transport_faults {
+                if let Some(plan) = self.faults {
+                    if plan.drops_reply_at(self.id, tick_idx) {
+                        break;
+                    }
+                }
+            }
+        }
         self.wall += t0.elapsed();
-        Ok(ShardTick { quarantined: self.quarantined.len() as u32 })
+        if let Some(e) = err {
+            return Err(e);
+        }
+        let steps1: u64 = self.mols.iter().map(|m| m.steps()).sum();
+        let sat1: u64 = self.mols.iter().map(|m| m.sat_events()).sum();
+        let rail1: u64 = self.mon.iter().map(|mo| mo.rail_hits).sum();
+        Ok(ShardEpoch {
+            ticks_run: self.ticks - first_tick,
+            steps: steps1 - steps0,
+            sat_events: sat1 - sat0,
+            rail_hits: rail1 - rail0,
+            quarantined: self.quarantined.len() as u32,
+            quarantines: self.quarantined[quar0..].to_vec(),
+            loss,
+        })
     }
 
     /// Count each active molecule's output lanes sitting on a Q13 rail
@@ -920,6 +1002,99 @@ impl FarmLedger {
     }
 }
 
+/// Live telemetry the epoch driver folds host-side while shards are
+/// executing (see [`MoleculeFarm::telemetry`]). The final
+/// [`FarmLedger`] from [`MoleculeFarm::finish`] is the source of truth:
+/// an epoch whose reply was lost in transit executed on its shard but
+/// never reported, so its steps are missing here while `finish` reads
+/// them from the shard state itself.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FarmTelemetry {
+    /// Epochs folded so far (a `tick()` is a 1-tick epoch).
+    pub epochs: u64,
+    /// Farm ticks covered by those epochs.
+    pub ticks: u64,
+    /// Molecule-steps reported by shard epoch replies.
+    pub molecule_steps: u64,
+    /// 26-bit integrator saturation events reported.
+    pub saturation_events: u64,
+    /// Q13 rail hits reported on chip output lanes.
+    pub rail_hits: u64,
+    /// Quarantine decisions reported.
+    pub molecules_quarantined: u64,
+}
+
+/// The deferred host-side fold of one epoch: everything the supervisor
+/// needs to settle the books for ticks `[t0, t0 + ticks)`, retained
+/// across `run_epoch` calls so the folding of epoch *t* overlaps with
+/// the shards' execution of epoch *t + 1*.
+struct EpochFold {
+    t0: u64,
+    ticks: u64,
+    /// Earliest tick at which a degradation event (quarantine or shard
+    /// loss) landed this epoch.
+    first_event: Option<u64>,
+    steps: u64,
+    sat_events: u64,
+    rail_hits: u64,
+    quarantines: u64,
+}
+
+/// Settle a retained epoch fold into the supervisor's books. Degradation
+/// is monotone — a dead shard stays dead, a quarantined molecule stays
+/// quarantined — so the farm has been degraded continuously since the
+/// earliest event tick, and the epoch's degraded-tick count is exactly
+/// the tail of its window past that tick: the same number a per-tick
+/// driver accumulates one tick at a time.
+fn fold_epoch(
+    pending: &mut Option<EpochFold>,
+    telemetry: &mut FarmTelemetry,
+    degraded_since: &mut Option<u64>,
+    degraded_ticks: &mut u64,
+) {
+    let Some(f) = pending.take() else { return };
+    if let Some(t) = f.first_event {
+        *degraded_since = Some(degraded_since.map_or(t, |d| d.min(t)));
+    }
+    if let Some(d) = *degraded_since {
+        let end = f.t0 + f.ticks;
+        let from = d.max(f.t0);
+        if end > from {
+            *degraded_ticks += end - from;
+        }
+    }
+    telemetry.epochs += 1;
+    telemetry.ticks += f.ticks;
+    telemetry.molecule_steps += f.steps;
+    telemetry.saturation_events += f.sat_events;
+    telemetry.rail_hits += f.rail_hits;
+    telemetry.molecules_quarantined += f.quarantines;
+}
+
+/// Absorb one shard's epoch reply into the current fold: tallies sum,
+/// event ticks push `first_event` down, and a mid-epoch shard death
+/// becomes a loss for the supervisor to process.
+fn absorb_epoch(
+    i: usize,
+    ep: ShardEpoch,
+    quar_counts: &mut [u32],
+    fold: &mut EpochFold,
+    losses: &mut Vec<(usize, u64, String, bool)>,
+) {
+    debug_assert!(ep.loss.is_some() || ep.ticks_run == fold.ticks);
+    quar_counts[i] = ep.quarantined;
+    fold.steps += ep.steps;
+    fold.sat_events += ep.sat_events;
+    fold.rail_hits += ep.rail_hits;
+    fold.quarantines += ep.quarantines.len() as u64;
+    for q in &ep.quarantines {
+        fold.first_event = Some(fold.first_event.map_or(q.tick, |t| t.min(q.tick)));
+    }
+    if let Some((tick, detail)) = ep.loss {
+        losses.push((i, tick, detail, true));
+    }
+}
+
 /// Species bookkeeping of a farm.
 struct SpeciesMeta {
     name: String,
@@ -940,11 +1115,22 @@ pub struct MoleculeFarm {
     shard_species: Vec<usize>,
     /// Shards the supervisor has written off.
     dead: Vec<bool>,
-    /// Cumulative quarantine count per shard, from its last tick report.
+    /// Cumulative quarantine count per shard, from its last epoch report.
     quar_counts: Vec<u32>,
     panics_recovered: u64,
     replies_lost: u64,
     degraded_ticks: u64,
+    /// First tick since which the farm has been continuously degraded
+    /// (degradation is monotone; `None` = never degraded).
+    degraded_since: Option<u64>,
+    /// The last submitted epoch's books, folded lazily — while shards
+    /// execute epoch *t + 1*, the host settles epoch *t*.
+    pending: Option<EpochFold>,
+    telemetry: FarmTelemetry,
+    /// Last observed positions per shard, refreshed when a shard is
+    /// written off: the threaded backend's degraded-mode `positions()`
+    /// source (inline reads dead shards directly; this stays empty).
+    frozen: Vec<Vec<Vec<Vec3>>>,
     lost: Vec<ShardLoss>,
     ticks: u64,
     host_wall: Duration,
@@ -996,6 +1182,14 @@ impl MoleculeFarm {
         }
         let n_shards = shards.len();
         let shard_species = shards.iter().map(|s| s.species).collect();
+        // Threaded: take the construction-time position snapshot before
+        // the shards move into their worker threads — the fallback the
+        // degraded-mode `positions()` serves if a dead shard's snapshot
+        // could not be refreshed at death time (worker truly gone).
+        let frozen = match mode {
+            ParallelMode::Inline => Vec::new(),
+            ParallelMode::Threaded => shards.iter().map(|s| s.positions()).collect(),
+        };
         let backend = match mode {
             ParallelMode::Inline => FarmBackend::Inline(shards),
             ParallelMode::Threaded => {
@@ -1013,6 +1207,10 @@ impl MoleculeFarm {
             panics_recovered: 0,
             replies_lost: 0,
             degraded_ticks: 0,
+            degraded_since: None,
+            pending: None,
+            telemetry: FarmTelemetry::default(),
+            frozen,
             lost: Vec::new(),
             ticks: 0,
             host_wall: Duration::ZERO,
@@ -1025,80 +1223,207 @@ impl MoleculeFarm {
     /// one step. A shard that panics (or whose reply is lost) is
     /// recorded and frozen — the tick still succeeds for every other
     /// shard, and the farm keeps serving in degraded mode.
+    ///
+    /// This is the 1-tick case of [`MoleculeFarm::run_epoch`]; use an
+    /// epoch length > 1 to amortize the per-tick transport round-trip.
     pub fn tick(&mut self) -> Result<()> {
+        self.run_epoch(1)
+    }
+
+    /// Run `n` ticks as **one epoch**: one job per shard, one reply
+    /// round-trip and one barrier per epoch instead of per tick.
+    ///
+    /// Bit-identical to `n` calls of [`MoleculeFarm::tick`] on both
+    /// backends: shards advance their own tick counters, so health
+    /// verdicts and `FaultPlan` injection points fire at the same
+    /// absolute tick indices, and every quarantine/loss is recorded
+    /// with its exact tick. What coarsens is only *detection latency*:
+    /// the supervisor learns of a shard loss when the epoch's reply
+    /// comes back, not mid-epoch. While shards execute this epoch, the
+    /// host folds the previous epoch's ledger/telemetry (the fold is
+    /// retained in `pending` and settled lazily — double-buffered
+    /// submit-before-recv).
+    pub fn run_epoch(&mut self, n: usize) -> Result<()> {
+        if n == 0 {
+            return Ok(());
+        }
         let t0 = Instant::now();
-        let tick_idx = self.ticks;
-        // (shard, detail, was_panic) losses discovered this tick.
-        let mut losses: Vec<(usize, String, bool)> = Vec::new();
+        let base = self.ticks;
+        let n_ticks = n as u64;
+        let mut fold = EpochFold {
+            t0: base,
+            ticks: n_ticks,
+            first_event: None,
+            steps: 0,
+            sat_events: 0,
+            rail_hits: 0,
+            quarantines: 0,
+        };
+        // (shard, tick, detail, was_panic) losses discovered this epoch.
+        let mut losses: Vec<(usize, u64, String, bool)> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
         match &mut self.backend {
             FarmBackend::Inline(shards) => {
+                // No transport to overlap with: settle the previous
+                // epoch's books, then drive the shards in place.
+                fold_epoch(
+                    &mut self.pending,
+                    &mut self.telemetry,
+                    &mut self.degraded_since,
+                    &mut self.degraded_ticks,
+                );
                 for (i, s) in shards.iter_mut().enumerate() {
                     if self.dead[i] {
                         continue;
                     }
-                    match catch_unwind(AssertUnwindSafe(|| s.tick())) {
-                        Ok(Ok(report)) => self.quar_counts[i] = report.quarantined,
-                        Ok(Err(e)) => return Err(e),
+                    match catch_unwind(AssertUnwindSafe(|| s.run_ticks(n_ticks, false))) {
+                        Ok(Ok(ep)) => {
+                            absorb_epoch(i, ep, &mut self.quar_counts, &mut fold, &mut losses)
+                        }
+                        Ok(Err(e)) => first_err = first_err.or(Some(e)),
                         Err(payload) => {
-                            losses.push((i, panic_message(payload.as_ref()), true));
+                            // Escaped the per-tick catch (supervisor
+                            // bookkeeping itself panicked): best
+                            // attribution is the epoch's first tick.
+                            losses.push((i, base, panic_message(payload.as_ref()), true));
                         }
                     }
                 }
             }
             FarmBackend::Threaded(pool) => {
+                // Arm a scheduled reply drop only when it is the first
+                // fault of the shard's window: a panic scheduled at an
+                // earlier tick ends the epoch before the drop tick is
+                // reached (per-tick semantics — the panicking job still
+                // delivers its reply).
                 #[cfg(any(test, feature = "faults"))]
-                if let Some(plan) = self.faults {
-                    for i in 0..self.dead.len() {
-                        if !self.dead[i] && plan.drops_reply_at(i, tick_idx) {
-                            pool.inject_reply_drop(i);
+                let planned_drops: Vec<Option<u64>> = (0..self.dead.len())
+                    .map(|i| {
+                        let plan = self.faults?;
+                        if self.dead[i] {
+                            return None;
                         }
+                        let drop = plan.first_reply_drop_in(i, base, base + n_ticks)?;
+                        match plan.first_panic_in(i, base, base + n_ticks) {
+                            Some(p) if p <= drop => None,
+                            _ => Some(drop),
+                        }
+                    })
+                    .collect();
+                #[cfg(any(test, feature = "faults"))]
+                for (i, d) in planned_drops.iter().enumerate() {
+                    if d.is_some() {
+                        pool.inject_reply_drop(i);
                     }
                 }
+                // Double-buffered submit: put every live shard to work
+                // on this epoch *before* touching the host-side books.
                 let mut replies = Vec::with_capacity(self.dead.len());
                 for i in 0..self.dead.len() {
                     if self.dead[i] {
                         continue;
                     }
-                    replies.push((i, pool.submit(i, |_, s: &mut FarmShard| s.tick())));
+                    replies.push((
+                        i,
+                        pool.submit(i, move |_, s: &mut FarmShard| s.run_ticks(n_ticks, true)),
+                    ));
                 }
+                // Overlap window: shards are executing this epoch while
+                // the host settles the previous one.
+                fold_epoch(
+                    &mut self.pending,
+                    &mut self.telemetry,
+                    &mut self.degraded_since,
+                    &mut self.degraded_ticks,
+                );
                 for (i, reply) in replies {
                     match reply.and_then(|r| r.recv()) {
-                        Ok(Ok(report)) => self.quar_counts[i] = report.quarantined,
-                        Ok(Err(e)) => return Err(e),
+                        Ok(Ok(ep)) => {
+                            absorb_epoch(i, ep, &mut self.quar_counts, &mut fold, &mut losses)
+                        }
+                        // Drain every reply before propagating an error:
+                        // bailing mid-loop would orphan the remaining
+                        // workers' results and skew the books.
+                        Ok(Err(e)) => first_err = first_err.or(Some(e)),
                         Err(PoolError::JobPanicked { message, .. }) => {
-                            losses.push((i, message, true));
+                            losses.push((i, base, message, true));
                         }
                         Err(e @ (PoolError::ReplyLost { .. } | PoolError::WorkerGone { .. })) => {
-                            losses.push((i, e.to_string(), false));
+                            #[cfg(any(test, feature = "faults"))]
+                            let tick = planned_drops[i].unwrap_or(base);
+                            #[cfg(not(any(test, feature = "faults")))]
+                            let tick = base;
+                            losses.push((i, tick, e.to_string(), false));
                         }
-                        Err(e) => return Err(e.into()),
+                        Err(e) => first_err = first_err.or(Some(e.into())),
                     }
                 }
             }
         }
-        for (i, detail, was_panic) in losses {
+        for (i, tick, detail, was_panic) in losses {
             self.dead[i] = true;
             if was_panic {
                 self.panics_recovered += 1;
             } else {
                 self.replies_lost += 1;
+                self.recover_lost_report(i, tick, &mut fold);
             }
+            fold.first_event = Some(fold.first_event.map_or(tick, |t| t.min(tick)));
             self.lost.push(ShardLoss {
                 shard: i,
                 species: self.shard_species[i],
-                tick: tick_idx,
+                tick,
                 detail,
             });
+            self.freeze_shard(i);
         }
-        self.ticks += 1;
-        if self.dead.iter().any(|&d| d) || self.quar_counts.iter().any(|&q| q > 0) {
-            self.degraded_ticks += 1;
-        }
+        self.ticks += n_ticks;
+        self.pending = Some(fold);
         self.host_wall += t0.elapsed();
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
-    /// Run `n` ticks.
+    /// A lost reply carried the shard's whole epoch report. Recover the
+    /// supervisor-visible part from the surviving worker, exactly as a
+    /// per-tick driver would have seen it: the quarantine records of
+    /// the ticks whose replies *did* arrive before the drop tick (the
+    /// drop tick's own report is lost in both drivers). Keeps
+    /// `degraded_since` — and with it `degraded_ticks` — tick-exact
+    /// when a quarantine and a reply drop land in the same epoch.
+    fn recover_lost_report(&mut self, i: usize, drop_tick: u64, fold: &mut EpochFold) {
+        if let FarmBackend::Threaded(pool) = &mut self.backend {
+            if let Ok(recs) = pool
+                .submit(i, |_, s: &mut FarmShard| s.quarantined.clone())
+                .and_then(|r| r.recv())
+            {
+                self.quar_counts[i] = recs.iter().filter(|q| q.tick < drop_tick).count() as u32;
+                for q in recs.iter().filter(|q| fold.t0 <= q.tick && q.tick < drop_tick) {
+                    fold.first_event = Some(fold.first_event.map_or(q.tick, |t| t.min(q.tick)));
+                }
+            }
+        }
+    }
+
+    /// Refresh the frozen-position snapshot of a shard the supervisor
+    /// just wrote off (threaded backend). Worker threads survive job
+    /// panics, so the worker still serves the shard's exact frozen
+    /// state; if even the snapshot query fails (worker truly gone), the
+    /// previous snapshot stands.
+    fn freeze_shard(&mut self, i: usize) {
+        if let FarmBackend::Threaded(pool) = &mut self.backend {
+            if let Ok(p) = pool
+                .submit(i, |_, s: &mut FarmShard| s.positions())
+                .and_then(|r| r.recv())
+            {
+                self.frozen[i] = p;
+            }
+        }
+    }
+
+    /// Run `n` ticks, one epoch each (the classic per-tick driver).
     pub fn run(&mut self, n: usize) -> Result<()> {
         for _ in 0..n {
             self.tick()?;
@@ -1106,13 +1431,70 @@ impl MoleculeFarm {
         Ok(())
     }
 
+    /// Run `ticks` ticks in epochs of `epoch` ticks each (the final
+    /// epoch is ragged when `epoch` does not divide `ticks`).
+    pub fn run_epoched(&mut self, ticks: usize, epoch: usize) -> Result<()> {
+        anyhow::ensure!(epoch >= 1, "epoch length must be >= 1");
+        let mut left = ticks;
+        while left > 0 {
+            let n = left.min(epoch);
+            self.run_epoch(n)?;
+            left -= n;
+        }
+        Ok(())
+    }
+
+    /// Live host-side telemetry folded from the shards' epoch reports
+    /// (settles the retained fold first, so the view includes every
+    /// completed epoch). See [`FarmTelemetry`] for how this relates to
+    /// the final ledger.
+    pub fn telemetry(&mut self) -> FarmTelemetry {
+        fold_epoch(
+            &mut self.pending,
+            &mut self.telemetry,
+            &mut self.degraded_since,
+            &mut self.degraded_ticks,
+        );
+        self.telemetry
+    }
+
+    /// Live supervisor view: molecules quarantined so far, per the last
+    /// epoch reports.
+    pub fn molecules_quarantined(&self) -> u64 {
+        self.quar_counts.iter().map(|&q| u64::from(q)).sum()
+    }
+
+    /// Live supervisor view: shards written off so far.
+    pub fn shards_lost(&self) -> usize {
+        self.lost.len()
+    }
+
     /// Decoded positions of every molecule ([molecule][atom]), species
     /// groups in construction order, molecules in their original order
-    /// within each group.
+    /// within each group. Serves in degraded mode: a dead shard's
+    /// molecules report their last frozen state (inline reads the dead
+    /// shard directly; threaded serves the death-time snapshot) instead
+    /// of failing the whole query.
     pub fn positions(&self) -> Result<Vec<Vec<Vec3>>> {
         let per_shard: Vec<Vec<Vec<Vec3>>> = match &self.backend {
             FarmBackend::Inline(shards) => shards.iter().map(|s| s.positions()).collect(),
-            FarmBackend::Threaded(pool) => pool.run_all(|_, s: &mut FarmShard| s.positions())?,
+            FarmBackend::Threaded(pool) => {
+                let live: Vec<usize> = (0..self.n_shards).filter(|&i| !self.dead[i]).collect();
+                let mut answers = pool
+                    .run_on(&live, |_, s: &mut FarmShard| s.positions())
+                    .into_iter();
+                let mut out = Vec::with_capacity(self.n_shards);
+                for i in 0..self.n_shards {
+                    if self.dead[i] {
+                        out.push(self.frozen[i].clone());
+                    } else {
+                        let (j, r) = answers.next().expect("one reply per live shard");
+                        debug_assert_eq!(i, j);
+                        out.push(r?);
+                    }
+                }
+                out
+            }
         };
         Ok(per_shard.into_iter().flatten().collect())
     }
@@ -1137,7 +1519,14 @@ impl MoleculeFarm {
     /// Tear the farm down (joining shard threads) and aggregate the
     /// ledger, farm-wide and per species. Teardown never panics: a dead
     /// worker contributes a fault record instead of its shard's books.
-    pub fn finish(self) -> Result<FarmLedger> {
+    pub fn finish(mut self) -> Result<FarmLedger> {
+        // Settle the last epoch's retained fold before reading the books.
+        fold_epoch(
+            &mut self.pending,
+            &mut self.telemetry,
+            &mut self.degraded_since,
+            &mut self.degraded_ticks,
+        );
         let shards: Vec<Option<FarmShard>> = match self.backend {
             FarmBackend::Inline(shards) => shards.into_iter().map(Some).collect(),
             FarmBackend::Threaded(pool) => pool.into_items().items,
@@ -1230,6 +1619,22 @@ impl WaterFarm {
     /// Run `n` ticks.
     pub fn run(&mut self, n: usize) -> Result<()> {
         self.inner.run(n)
+    }
+
+    /// Run `n` ticks as one epoch (see [`MoleculeFarm::run_epoch`]).
+    pub fn run_epoch(&mut self, n: usize) -> Result<()> {
+        self.inner.run_epoch(n)
+    }
+
+    /// Run `ticks` ticks in epochs of `epoch` ticks each (see
+    /// [`MoleculeFarm::run_epoched`]).
+    pub fn run_epoched(&mut self, ticks: usize, epoch: usize) -> Result<()> {
+        self.inner.run_epoched(ticks, epoch)
+    }
+
+    /// Live host-side telemetry (see [`MoleculeFarm::telemetry`]).
+    pub fn telemetry(&mut self) -> FarmTelemetry {
+        self.inner.telemetry()
     }
 
     /// Decoded positions of every molecule ([molecule][atom], atoms
@@ -1810,6 +2215,161 @@ mod tests {
         // Shard 0's two molecules completed 3 ticks (the dropped-reply
         // tick did execute), shard 1's completed all 8.
         assert_eq!(l.molecule_steps, 2 * 3 + 2 * 8);
+    }
+
+    #[test]
+    fn epoch_driver_is_bit_identical_to_per_tick() {
+        // The tentpole invariant without faults: run_epoched(n, e) must
+        // equal n × tick() — positions AND ledger — for epoch lengths
+        // that divide the run, ones that leave a ragged tail, and the
+        // whole run as one epoch, on both backends, over the
+        // mixed-species workload.
+        let wm = toy_model();
+        let water_systems = random_water_systems(6, 120.0, 51);
+        let build = |mode: ParallelMode| {
+            let groups = vec![
+                water_group(&wm, &water_systems, 3, 2, 0.25).unwrap(),
+                ethanol_group(3, 2, 19),
+            ];
+            MoleculeFarm::new(groups, 1, mode).unwrap()
+        };
+        let mut per_tick = build(ParallelMode::Inline);
+        per_tick.run(60).unwrap();
+        let ref_pos = per_tick.positions().unwrap();
+        let rl = per_tick.finish().unwrap();
+        assert_eq!(rl.molecule_steps, 9 * 60);
+        for mode in [ParallelMode::Inline, ParallelMode::Threaded] {
+            for epoch in [4usize, 7, 60] {
+                let mut farm = build(mode);
+                farm.run_epoched(60, epoch).unwrap();
+                assert_eq!(farm.ticks(), 60);
+                let pos = farm.positions().unwrap();
+                assert_eq!(pos, ref_pos, "mode {mode:?} epoch {epoch} diverged");
+                let l = farm.finish().unwrap();
+                assert_eq!(l.ticks, 60);
+                assert_eq!(l.molecule_steps, rl.molecule_steps);
+                assert_eq!(l.chip_inferences, rl.chip_inferences);
+                assert_eq!(l.chip_ops, rl.chip_ops);
+                assert_eq!(l.fpga_ops, rl.fpga_ops);
+                assert_eq!(l.modelled_cycles, rl.modelled_cycles);
+                assert_eq!(l.critical_path_cycles, rl.critical_path_cycles);
+                assert_eq!(l.degraded_ticks, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_zero_is_a_no_op_and_telemetry_folds_the_books() {
+        let m = toy_model();
+        let systems = random_water_systems(4, 100.0, 77);
+        let g = water_group(&m, &systems, 3, 2, 0.25).unwrap();
+        let mut farm = MoleculeFarm::new(vec![g], 1, ParallelMode::Inline).unwrap();
+        farm.run_epoch(0).unwrap();
+        assert_eq!(farm.ticks(), 0);
+        assert_eq!(farm.telemetry(), FarmTelemetry::default());
+        farm.run_epoched(10, 4).unwrap(); // epochs of 4, 4, 2
+        assert_eq!(farm.ticks(), 10);
+        let t = farm.telemetry();
+        assert_eq!(t.epochs, 3);
+        assert_eq!(t.ticks, 10);
+        assert_eq!(t.molecule_steps, 40);
+        assert_eq!(t.saturation_events, 0);
+        assert_eq!(t.molecules_quarantined, 0);
+        // The live view is idempotent (folding is not double-counted)
+        // and agrees with the torn-down ledger on a fault-free run.
+        assert_eq!(farm.telemetry(), t);
+        assert_eq!(farm.molecules_quarantined(), 0);
+        assert_eq!(farm.shards_lost(), 0);
+        let l = farm.finish().unwrap();
+        assert_eq!(l.molecule_steps, t.molecule_steps);
+        assert_eq!(l.saturation_events, t.saturation_events);
+        assert_eq!(l.rail_hits, t.rail_hits);
+    }
+
+    #[test]
+    fn epoch_driver_matches_per_tick_under_injected_faults() {
+        // Epoch-boundary-crossing fault schedule: shard 1 panics at
+        // tick 3 and molecule 1 (shard 0) saturates at tick 4 — both
+        // land mid-epoch for epoch lengths 4 and 7, and inside the
+        // single whole-run epoch of 20. Ledgers and positions must
+        // match the per-tick driver bit for bit on both backends.
+        let systems = random_water_systems(8, 120.0, 3);
+        let plan = FaultPlan::new().panic_shard(1, 3).saturate_molecule(1, 4);
+        let mut per_tick = water_farm_with(&systems, 4, ParallelMode::Inline, Some(plan));
+        per_tick.run(20).unwrap();
+        let ref_pos = per_tick.positions().unwrap();
+        let rl = per_tick.finish().unwrap();
+        assert_eq!(rl.panics_recovered, 1);
+        assert_eq!(rl.molecules_quarantined, 1);
+        for mode in [ParallelMode::Inline, ParallelMode::Threaded] {
+            for epoch in [4usize, 7, 20] {
+                let mut farm = water_farm_with(&systems, 4, mode, Some(plan));
+                farm.run_epoched(20, epoch).unwrap();
+                let pos = farm.positions().unwrap();
+                assert_eq!(pos, ref_pos, "mode {mode:?} epoch {epoch} positions diverged");
+                let l = farm.finish().unwrap();
+                assert_eq!(l.molecule_steps, rl.molecule_steps);
+                assert_eq!(l.panics_recovered, 1);
+                assert_eq!(l.degraded_ticks, rl.degraded_ticks, "mode {mode:?} epoch {epoch}");
+                assert_eq!(l.quarantined, rl.quarantined);
+                assert_eq!(l.saturation_events, rl.saturation_events);
+                assert_eq!(l.shards_lost.len(), 1);
+                assert_eq!(
+                    (l.shards_lost[0].shard, l.shards_lost[0].tick),
+                    (rl.shards_lost[0].shard, rl.shards_lost[0].tick)
+                );
+                assert!(l.shards_lost[0].detail.contains("injected fault"));
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_reply_mid_epoch_matches_per_tick() {
+        // Shard 0's reply drops at tick 2 — mid-epoch when the whole
+        // run is one 8-tick epoch. The epoch driver must attribute the
+        // loss to tick 2 (the arming decision knows the planned drop
+        // tick), freeze the shard with the drop tick executed, and
+        // keep the books identical to per-tick driving.
+        let systems = random_water_systems(4, 100.0, 13);
+        let plan = FaultPlan::new().drop_reply(0, 2);
+        let mut per_tick = water_farm_with(&systems, 2, ParallelMode::Threaded, Some(plan));
+        per_tick.run(8).unwrap();
+        let ref_pos = per_tick.positions().unwrap();
+        let rl = per_tick.finish().unwrap();
+        for epoch in [3usize, 8] {
+            let mut farm = water_farm_with(&systems, 2, ParallelMode::Threaded, Some(plan));
+            farm.run_epoched(8, epoch).unwrap();
+            assert_eq!(farm.positions().unwrap(), ref_pos, "epoch {epoch}");
+            let l = farm.finish().unwrap();
+            assert_eq!(l.replies_lost, 1);
+            assert_eq!(l.panics_recovered, 0);
+            assert_eq!((l.shards_lost[0].shard, l.shards_lost[0].tick), (0, 2));
+            assert_eq!(l.degraded_ticks, rl.degraded_ticks);
+            assert_eq!(l.molecule_steps, rl.molecule_steps);
+        }
+    }
+
+    #[test]
+    fn positions_serve_in_degraded_mode_after_shard_loss() {
+        // The satellite regression: the threaded backend's positions()
+        // used to query every worker, so a farm with a dead shard could
+        // fail the whole query. It must skip dead shards and serve
+        // their frozen state, bit-identical to the inline backend's
+        // direct view of the same fault.
+        let systems = random_water_systems(8, 120.0, 3);
+        let plan = FaultPlan::new().panic_shard(1, 3);
+        let mut inline = water_farm_with(&systems, 4, ParallelMode::Inline, Some(plan));
+        let mut threaded = water_farm_with(&systems, 4, ParallelMode::Threaded, Some(plan));
+        inline.run(10).unwrap();
+        threaded.run(10).unwrap();
+        let pi = inline.positions().unwrap();
+        let pt = threaded.positions().unwrap();
+        assert_eq!(pi.len(), 8);
+        assert_eq!(pi, pt, "degraded-mode positions diverged across backends");
+        // The farm keeps serving the query as it keeps ticking.
+        threaded.run_epoch(5).unwrap();
+        inline.run_epoch(5).unwrap();
+        assert_eq!(inline.positions().unwrap(), threaded.positions().unwrap());
     }
 
     #[test]

@@ -24,9 +24,8 @@ pub mod vn;
 
 pub use farm::{
     generic_group, generic_group_pbc, water_group, FarmConfig, FarmLedger, FarmSupervision,
-    HealthPolicy,
-    MoleculeFarm, QuarantineReason, QuarantineRecord, ServedMolecule, ShardLoss, SpeciesGroup,
-    SpeciesLedger, WaterFarm,
+    FarmTelemetry, HealthPolicy, MoleculeFarm, QuarantineReason, QuarantineRecord, ServedMolecule,
+    ShardLoss, SpeciesGroup, SpeciesLedger, WaterFarm,
 };
 pub use pool::{PoolError, PoolShutdown, Reply, WorkerFault, WorkerPool};
 

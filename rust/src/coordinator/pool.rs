@@ -318,6 +318,32 @@ impl<T: Send + 'static> WorkerPool<T> {
         }
     }
 
+    /// Ship `f` to a chosen subset of workers **concurrently** and
+    /// collect per-worker outcomes in the given order. Unlike
+    /// [`Self::run_all`] this never aborts early and never collapses the
+    /// batch to one error: every submitted reply is drained and each
+    /// slot carries its own `Result`, so a caller serving a
+    /// partially-dead fleet (the degraded-mode farm) can query the live
+    /// workers and substitute its own fallback for each dead one.
+    pub fn run_on<R, F>(
+        &self,
+        workers: &[usize],
+        f: F,
+    ) -> Vec<(usize, Result<R, PoolError>)>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut T) -> R + Clone + Send + 'static,
+    {
+        let replies: Vec<(usize, Result<Reply<R>, PoolError>)> = workers
+            .iter()
+            .map(|&i| (i, self.submit(i, f.clone())))
+            .collect();
+        replies
+            .into_iter()
+            .map(|(i, r)| (i, r.and_then(Reply::recv)))
+            .collect()
+    }
+
     /// Shut the pool down and hand back what survived, plus per-worker
     /// fault records. Never panics and never deadlocks: a dead worker
     /// yields `items[i] == None` with `faults[i].died` set instead of
@@ -625,6 +651,30 @@ mod tests {
         let shutdown = pool.into_items();
         assert_eq!(shutdown.jobs_panicked(), 0);
         assert_eq!(shutdown.surviving_items(), vec![5, 105, 205, 305]);
+    }
+
+    #[test]
+    fn run_on_queries_a_subset_and_isolates_per_worker_faults() {
+        let pool = WorkerPool::spawn("subset", vec![10u64, 20, 30, 40]).unwrap();
+        // Subset query in caller order, untouched workers stay untouched.
+        let got = pool.run_on(&[3, 1], |i, c: &mut u64| {
+            *c += 1;
+            (i, *c)
+        });
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].0, got[1].0), (3, 1));
+        assert_eq!(*got[0].1.as_ref().unwrap(), (3, 41));
+        assert_eq!(*got[1].1.as_ref().unwrap(), (1, 21));
+        // A dead worker yields its own typed error slot; the live
+        // worker in the same query still answers.
+        pool.inject_worker_exit(1);
+        let got = pool.run_on(&[1, 2], |_, c: &mut u64| *c);
+        assert!(matches!(got[0].1, Err(PoolError::ReplyLost { worker: 1 })));
+        assert_eq!(*got[1].1.as_ref().unwrap(), 30);
+        // Out-of-range index is a per-slot error, not a panic.
+        let got = pool.run_on(&[9], |_, c: &mut u64| *c);
+        assert!(matches!(got[0].1, Err(PoolError::NoSuchWorker { worker: 9 })));
+        assert_eq!(pool.into_items().surviving_items(), vec![10, 21, 30, 40]);
     }
 
     #[test]

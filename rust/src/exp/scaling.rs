@@ -127,6 +127,51 @@ pub fn measure_mixed_farm(
     farm.finish()
 }
 
+/// One measured point of the epoch-batched driver sweep.
+pub struct EpochMeasurement {
+    /// Ticks per shard job (1 = classic per-tick driving).
+    pub epoch: usize,
+    pub host_steps_per_s: f64,
+    pub elapsed_s: f64,
+    /// Wall-clock speedup over the sweep's first (per-tick baseline)
+    /// point.
+    pub speedup_vs_tick: f64,
+}
+
+/// Measure the epoch-batched farm driver on the mixed-species workload:
+/// the same run driven in epochs of each given length (pass `1` first —
+/// it is the per-tick baseline the speedups are against). The epoch
+/// driver amortizes the per-tick submit/recv round-trip and barrier of
+/// the threaded backend and overlaps the host's ledger folding with
+/// shard execution, so the speedup grows with epoch length until the
+/// per-epoch transport cost vanishes against the MD work.
+pub fn measure_epoch_sweep(
+    n_water: usize,
+    n_ethanol: usize,
+    ticks: usize,
+    mode: ParallelMode,
+    epochs: &[usize],
+) -> Result<Vec<EpochMeasurement>> {
+    let mut baseline: Option<f64> = None;
+    let mut out = Vec::with_capacity(epochs.len());
+    for &epoch in epochs {
+        let mut farm =
+            MoleculeFarm::new(mixed_farm_groups(n_water, n_ethanol, 17, 23)?, 1, mode)?;
+        let t0 = std::time::Instant::now();
+        farm.run_epoched(ticks, epoch)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let ledger = farm.finish()?;
+        let base = *baseline.get_or_insert(elapsed);
+        out.push(EpochMeasurement {
+            epoch,
+            host_steps_per_s: ledger.host_steps_per_second(),
+            elapsed_s: elapsed,
+            speedup_vs_tick: if elapsed > 0.0 { base / elapsed } else { 0.0 },
+        });
+    }
+    Ok(out)
+}
+
 pub fn run(quick: bool) -> Result<Report> {
     let mut report = Report::new("§VI projection — NvN-MLMD at advanced process nodes");
     let rows = compute();
@@ -241,6 +286,45 @@ pub fn run(quick: bool) -> Result<Report> {
                 .collect(),
         ),
     );
+    // Epoch-batched driver: one shard job per epoch instead of per
+    // tick — the measured amortization of the per-tick round-trip +
+    // barrier (and of the per-tick host-side supervision fold).
+    let (epoch_ticks, epoch_lens): (usize, Vec<usize>) =
+        if quick { (64, vec![1, 16]) } else { (512, vec![1, 4, 16, 64]) };
+    for (label, mode) in [("inline", ParallelMode::Inline), ("threaded", ParallelMode::Threaded)] {
+        let sweep = measure_epoch_sweep(n_water, n_eth, epoch_ticks, mode, &epoch_lens)?;
+        let epoch_table: Vec<Vec<String>> = sweep
+            .iter()
+            .map(|e| {
+                vec![
+                    format!("{}", e.epoch),
+                    format!("{:.0}", e.host_steps_per_s),
+                    format!("{:.2}×", e.speedup_vs_tick),
+                ]
+            })
+            .collect();
+        report.table(
+            &format!("Epoch-batched farm driver ({label} backend, {epoch_ticks} ticks)"),
+            &["epoch (ticks/job)", "host steps/s", "speedup vs per-tick"],
+            &epoch_table,
+        );
+        report.attach(
+            &format!("epoch_sweep_{label}"),
+            Value::Arr(
+                sweep
+                    .iter()
+                    .map(|e| {
+                        json::obj(vec![
+                            ("epoch", json::num(e.epoch as f64)),
+                            ("host_steps_per_s", json::num(e.host_steps_per_s)),
+                            ("elapsed_s", json::num(e.elapsed_s)),
+                            ("epoch_speedup_vs_tick", json::num(e.speedup_vs_tick)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+    }
     report.attach(
         "projections",
         Value::Arr(
@@ -292,6 +376,20 @@ mod tests {
         assert_eq!(l.species[1].chip_inferences, 40 * 9);
         for sp in &l.species {
             assert!(sp.steps_per_shard_second() > 0.0, "{} rate", sp.name);
+        }
+    }
+
+    #[test]
+    fn epoch_sweep_reports_all_points_with_tick_baseline() {
+        let rows = measure_epoch_sweep(4, 2, 12, ParallelMode::Inline, &[1, 4]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].epoch, rows[1].epoch), (1, 4));
+        // The first point is its own baseline by definition.
+        assert!((rows[0].speedup_vs_tick - 1.0).abs() < 1e-12);
+        for r in &rows {
+            assert!(r.host_steps_per_s > 0.0);
+            assert!(r.elapsed_s > 0.0);
+            assert!(r.speedup_vs_tick > 0.0);
         }
     }
 

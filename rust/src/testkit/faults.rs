@@ -49,6 +49,20 @@ fn hit(slots: &[Option<(usize, u64)>; MAX_FAULTS], idx: usize, tick: u64) -> boo
     slots.iter().flatten().any(|&(i, t)| i == idx && t == tick)
 }
 
+fn first_in(
+    slots: &[Option<(usize, u64)>; MAX_FAULTS],
+    idx: usize,
+    t0: u64,
+    t1: u64,
+) -> Option<u64> {
+    slots
+        .iter()
+        .flatten()
+        .filter(|&&(i, t)| i == idx && t0 <= t && t < t1)
+        .map(|&(_, t)| t)
+        .min()
+}
+
 impl FaultPlan {
     pub fn new() -> FaultPlan {
         FaultPlan::default()
@@ -86,6 +100,20 @@ impl FaultPlan {
     /// Does the plan drop `shard`'s reply at `tick`?
     pub fn drops_reply_at(&self, shard: usize, tick: u64) -> bool {
         hit(&self.reply_drops, shard, tick)
+    }
+
+    /// Earliest scheduled panic of `shard` in the tick window
+    /// `[t0, t1)` — the epoch driver's view of the schedule: one shard
+    /// job now covers a whole window of ticks, and the supervisor needs
+    /// to know which fault fires *first* inside it.
+    pub fn first_panic_in(&self, shard: usize, t0: u64, t1: u64) -> Option<u64> {
+        first_in(&self.panics, shard, t0, t1)
+    }
+
+    /// Earliest scheduled reply drop of `shard` in the tick window
+    /// `[t0, t1)`.
+    pub fn first_reply_drop_in(&self, shard: usize, t0: u64, t1: u64) -> Option<u64> {
+        first_in(&self.reply_drops, shard, t0, t1)
     }
 
     /// Seeded chaos plan: one shard panic and one molecule saturation at
@@ -138,6 +166,24 @@ mod tests {
             .collect();
         assert_eq!(hits.len(), 1);
         assert_ne!(a, FaultPlan::random(0xFA12, 5, 40, 100));
+    }
+
+    #[test]
+    fn window_queries_find_the_first_fault_in_range() {
+        let plan = FaultPlan::new()
+            .panic_shard(1, 12)
+            .panic_shard(1, 5)
+            .panic_shard(2, 3)
+            .drop_reply(1, 9);
+        // Earliest in-window hit wins, bounds are [t0, t1).
+        assert_eq!(plan.first_panic_in(1, 0, 64), Some(5));
+        assert_eq!(plan.first_panic_in(1, 6, 64), Some(12));
+        assert_eq!(plan.first_panic_in(1, 6, 12), None);
+        assert_eq!(plan.first_panic_in(1, 5, 6), Some(5));
+        assert_eq!(plan.first_panic_in(0, 0, 64), None);
+        assert_eq!(plan.first_reply_drop_in(1, 0, 64), Some(9));
+        assert_eq!(plan.first_reply_drop_in(1, 10, 64), None);
+        assert_eq!(plan.first_reply_drop_in(2, 0, 64), None);
     }
 
     #[test]

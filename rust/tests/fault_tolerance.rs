@@ -108,6 +108,74 @@ fn farm_degrades_gracefully_and_identically_on_both_backends() {
 }
 
 #[test]
+fn epoch_batched_runs_degrade_identically_to_per_tick_runs() {
+    // The epoch driver's acceptance: the exact scenario above — shard 2
+    // panics at tick 10, molecule 1 saturates at tick 4 — driven in
+    // epochs of 8 (both faults mid-epoch) and 7 (ragged tail) must
+    // reproduce the per-tick run bit for bit: trajectories, quarantine
+    // records, loss ticks, degraded-tick count, step ledger.
+    let systems = random_water_systems(12, 150.0, 0xACCE);
+    let plan = FaultPlan::new().panic_shard(2, 10).saturate_molecule(1, 4);
+
+    let mut per_tick = build(&systems, ParallelMode::Inline, Some(plan));
+    per_tick.run(100).unwrap();
+    let ref_pos = per_tick.positions().unwrap();
+    let rl = per_tick.finish().unwrap();
+    assert_eq!(rl.degraded_ticks, 96);
+
+    for mode in [ParallelMode::Inline, ParallelMode::Threaded] {
+        for epoch in [8usize, 7] {
+            let mut farm = build(&systems, mode, Some(plan));
+            farm.run_epoched(100, epoch).unwrap();
+            assert_eq!(farm.ticks(), 100);
+            let pos = farm.positions().unwrap();
+            assert_eq!(pos, ref_pos, "mode {mode:?} epoch {epoch} trajectories diverged");
+            let l = farm.finish().unwrap();
+            assert_eq!(l.ticks, 100);
+            assert_eq!(l.molecule_steps, rl.molecule_steps);
+            assert_eq!(l.panics_recovered, 1);
+            assert_eq!(l.replies_lost, 0);
+            assert_eq!(l.quarantined, rl.quarantined);
+            assert_eq!(l.degraded_ticks, 96, "mode {mode:?} epoch {epoch}");
+            assert_eq!(l.shards_lost.len(), 1);
+            assert_eq!((l.shards_lost[0].shard, l.shards_lost[0].tick), (2, 10));
+            assert_eq!(l.saturation_events, rl.saturation_events);
+            assert_eq!(l.chip_inferences, rl.chip_inferences);
+        }
+    }
+}
+
+#[test]
+fn reply_drop_lands_mid_epoch_with_exact_tick_attribution() {
+    // Transport fault crossing an epoch boundary: shard 0's reply is
+    // scheduled to drop at tick 5, inside the second epoch of a
+    // 4-tick-epoch run. The supervisor must attribute the loss to tick
+    // 5 exactly, count the drop tick as executed, and serve positions
+    // in degraded mode — all identical to the per-tick driver.
+    let systems = random_water_systems(6, 140.0, 0xD20B);
+    let plan = FaultPlan::new().drop_reply(0, 5);
+    let mut per_tick = build(&systems, ParallelMode::Threaded, Some(plan));
+    per_tick.run(12).unwrap();
+    let ref_pos = per_tick.positions().unwrap();
+    let rl = per_tick.finish().unwrap();
+    assert_eq!(rl.replies_lost, 1);
+    assert_eq!((rl.shards_lost[0].shard, rl.shards_lost[0].tick), (0, 5));
+
+    let mut farm = build(&systems, ParallelMode::Threaded, Some(plan));
+    farm.run_epoched(12, 4).unwrap();
+    assert_eq!(farm.positions().unwrap(), ref_pos);
+    let l = farm.finish().unwrap();
+    assert_eq!(l.replies_lost, 1);
+    assert_eq!(l.panics_recovered, 0);
+    assert_eq!((l.shards_lost[0].shard, l.shards_lost[0].tick), (0, 5));
+    assert_eq!(l.degraded_ticks, rl.degraded_ticks);
+    // Shard 0's two molecules executed through the drop tick (6 ticks),
+    // the other two shards' four molecules all 12.
+    assert_eq!(l.molecule_steps, rl.molecule_steps);
+    assert_eq!(l.molecule_steps, 2 * 6 + 4 * 12);
+}
+
+#[test]
 fn seeded_chaos_plans_reproduce_bit_identical_degraded_runs() {
     // Two farms driven by the same seeded FaultPlan::random must agree
     // bit for bit — fault injection is part of the deterministic state
@@ -132,4 +200,23 @@ fn seeded_chaos_plans_reproduce_bit_identical_degraded_runs() {
     // the farm must have recorded the panic and completed the run.
     assert_eq!(la.panics_recovered, 1);
     assert_eq!(la.ticks, 50);
+
+    // And the epoch driver reproduces the same chaos run bit for bit,
+    // wherever the random faults landed relative to epoch boundaries.
+    let run_epoched = |mode: ParallelMode| {
+        let mut farm = build(&systems, mode, Some(plan));
+        farm.run_epoched(50, 16).unwrap();
+        let pos = farm.positions().unwrap();
+        (pos, farm.finish().unwrap())
+    };
+    let (pc, lc) = run_epoched(ParallelMode::Inline);
+    let (pd, ld) = run_epoched(ParallelMode::Threaded);
+    assert_eq!(pa, pc, "inline epoch run diverged from per-tick");
+    assert_eq!(pa, pd, "threaded epoch run diverged from per-tick");
+    assert_eq!(la.degraded_ticks, lc.degraded_ticks);
+    assert_eq!(la.degraded_ticks, ld.degraded_ticks);
+    assert_eq!(la.molecule_steps, lc.molecule_steps);
+    assert_eq!(la.molecule_steps, ld.molecule_steps);
+    assert_eq!(la.quarantined, lc.quarantined);
+    assert_eq!(la.quarantined, ld.quarantined);
 }
