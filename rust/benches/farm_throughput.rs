@@ -6,7 +6,9 @@
 //! `hotpath_micro`'s `batch_sweep` isolates — plus the mixed-species
 //! [`MoleculeFarm`] (water + ethanol-class molecules, each shard
 //! programmed with its own species model) reporting molecule-steps/s
-//! **per species**. Emits host throughput for inline vs threaded shard
+//! **per species**, and the serving `Gateway`'s saturation sweep
+//! (offered load × deadline window: p99 latency, reject-rate,
+//! steps/s). Emits host throughput for inline vs threaded shard
 //! backends and the modelled lane-model throughput sweep into the
 //! benchkit JSON, so `BENCH_*.json` tracks a throughput trajectory PR
 //! over PR.
@@ -14,7 +16,7 @@
 use nvnmd::benchkit::Bench;
 use nvnmd::coordinator::farm::{random_water_systems, FarmConfig, MoleculeFarm, WaterFarm};
 use nvnmd::coordinator::ParallelMode;
-use nvnmd::exp::scaling::mixed_farm_groups;
+use nvnmd::exp::scaling::{measure_gateway_saturation, mixed_farm_groups};
 use nvnmd::exp::water_model_or_fallback as model;
 use nvnmd::hw::timing::CLOCK_HZ;
 use nvnmd::util::json::{self, Value};
@@ -172,9 +174,36 @@ fn main() {
         }
     }
 
+    // Serving gateway saturation (the request front door over the
+    // epoch farm): deterministic arrival plans at two offered-load
+    // levels × deadline-window lengths, per backend. The arrival plans
+    // are fixed by seed, so inline and threaded rows measure identical
+    // request streams — p99 latency (virtual-clock ticks), door
+    // reject-rate, and host molecule-steps/s per point.
+    let mut gw_rows: Vec<Value> = Vec::new();
+    for (label, mode) in [("inline", ParallelMode::Inline), ("threaded", ParallelMode::Threaded)] {
+        let sweep = measure_gateway_saturation(mode, quick).expect("gateway sweep");
+        for g in &sweep {
+            b.note(
+                &format!("gateway_{label}_w{}_gap{}_p99_ticks", g.window_ticks, g.mean_gap),
+                format!("{}", g.p99_ticks),
+            );
+            b.note(
+                &format!("gateway_{label}_w{}_gap{}_reject_rate", g.window_ticks, g.mean_gap),
+                format!("{:.3}", g.reject_rate()),
+            );
+            b.note(
+                &format!("gateway_{label}_w{}_gap{}_steps_per_sec", g.window_ticks, g.mean_gap),
+                format!("{:.0}", g.host_steps_per_s),
+            );
+            gw_rows.push(g.json_row(label));
+        }
+    }
+
     b.attach("farm", Value::Arr(rows));
     b.attach("lane_sweep", Value::Arr(lane_rows));
     b.attach("mixed_species", Value::Arr(mixed_rows));
     b.attach("epoch_sweep", Value::Arr(epoch_rows));
+    b.attach("gateway_saturation", Value::Arr(gw_rows));
     b.finish();
 }

@@ -319,6 +319,11 @@ impl SpeciesGroup {
     /// into its chip; `mols` must already be programmed consistently
     /// with it (use [`water_group`] / [`generic_group`] unless you are
     /// plugging in a custom [`ServedMolecule`]).
+    ///
+    /// `mols` may be empty: the group then builds `shards` empty shards
+    /// (each with its chip programmed and zero batch lanes) and serves
+    /// molecules admitted later via [`MoleculeFarm::admit`] — the
+    /// gateway's construction shape.
     pub fn new(
         name: &str,
         model: Mlp,
@@ -326,7 +331,6 @@ impl SpeciesGroup {
         shards: usize,
         mols: Vec<Box<dyn ServedMolecule>>,
     ) -> Result<SpeciesGroup> {
-        anyhow::ensure!(!mols.is_empty(), "species {name:?} needs at least one molecule");
         anyhow::ensure!(shards >= 1, "species {name:?} needs at least one shard");
         Ok(SpeciesGroup { name: name.to_string(), model, k, shards, mols })
     }
@@ -336,6 +340,11 @@ impl SpeciesGroup {
     }
     pub fn n_molecules(&self) -> usize {
         self.mols.len()
+    }
+    /// Disassemble the group into its served molecules (e.g. to feed
+    /// them one at a time through [`MoleculeFarm::admit`]).
+    pub fn into_molecules(self) -> Vec<Box<dyn ServedMolecule>> {
+        self.mols
     }
 }
 
@@ -497,6 +506,36 @@ pub struct ShardLoss {
     pub detail: String,
 }
 
+/// Where [`MoleculeFarm::admit`] placed a molecule: its farm-wide id
+/// (the same index space as [`QuarantineRecord::molecule`] and
+/// `FaultPlan` molecule schedules) and the shard now holding it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmitTicket {
+    pub mol_id: usize,
+    pub shard: usize,
+}
+
+/// What [`MoleculeFarm::retire`] hands back: the molecule's final state
+/// and its per-molecule accounting. The shard keeps the retired
+/// molecule's steps/saturation/op/rail tallies in retained accumulators,
+/// so [`MoleculeFarm::finish`] books stay complete across churn.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetiredMolecule {
+    pub mol_id: usize,
+    /// Index into the farm's species table.
+    pub species: usize,
+    /// Steps the molecule integrated while resident.
+    pub steps: u64,
+    /// Its cumulative 26-bit integrator saturation events.
+    pub sat_events: u64,
+    /// Final decoded positions (frozen at quarantine time if the
+    /// divergence monitor pulled it).
+    pub positions: Vec<Vec3>,
+    /// The quarantine verdict, if the monitor pulled this molecule
+    /// before it was retired.
+    pub quarantined: Option<QuarantineRecord>,
+}
+
 /// Per-epoch report a shard hands back to the farm supervisor: one
 /// reply per [`FarmShard::run_ticks`] job instead of one per tick, with
 /// everything the supervisor's books need carried as tick-exact tallies
@@ -586,6 +625,14 @@ struct FarmShard {
     wall: Duration,
     health: HealthPolicy,
     quarantined: Vec<QuarantineRecord>,
+    /// Accounting retained from retired molecules, so the final books
+    /// stay complete across membership churn: steps, saturation events,
+    /// rail hits, and FPGA op counts of everything this shard served
+    /// and has since handed back via [`FarmShard::retire`].
+    retired_steps: u64,
+    retired_sat: u64,
+    retired_rail_hits: u64,
+    retired_ops: OpCounts,
     #[cfg(any(test, feature = "faults"))]
     faults: Option<FaultPlan>,
 }
@@ -640,8 +687,58 @@ impl FarmShard {
             wall: Duration::ZERO,
             health: sup.health,
             quarantined: Vec::new(),
+            retired_steps: 0,
+            retired_sat: 0,
+            retired_rail_hits: 0,
+            retired_ops: OpCounts::default(),
             #[cfg(any(test, feature = "faults"))]
             faults: sup.faults,
+        })
+    }
+
+    /// Admit one molecule into the shard's batch (membership churn runs
+    /// between epochs, never inside one). The repack is the quarantine
+    /// seam in reverse: the SWAR batch kernel is bit-exact per lane at
+    /// any batch size, so adding lanes cannot move a resident molecule's
+    /// trajectory by a single bit.
+    fn admit(&mut self, mol: Box<dyn ServedMolecule>, mol_id: usize) {
+        self.mon.push(MoleculeMonitor {
+            rail_hits: 0,
+            rail_consec: 0,
+            prev_pos: mol.positions(),
+        });
+        self.mol_ids.push(mol_id);
+        self.active.push(true);
+        self.lane0.push(0);
+        self.mols.push(mol);
+        self.rebuild_lanes();
+    }
+
+    /// Remove a molecule from the shard, returning its final state. Its
+    /// accounting moves into the retained accumulators so the shard's
+    /// books (and [`MoleculeFarm::finish`]) stay complete; its
+    /// quarantine records, if any, stay in the shard's ledger history.
+    fn retire(&mut self, mol_id: usize) -> Result<RetiredMolecule> {
+        let Some(m) = self.mol_ids.iter().position(|&id| id == mol_id) else {
+            anyhow::bail!("molecule {mol_id} is not resident on shard {}", self.id)
+        };
+        let mol = self.mols.remove(m);
+        self.mol_ids.remove(m);
+        self.active.remove(m);
+        self.lane0.remove(m);
+        let mon = self.mon.remove(m);
+        self.retired_steps += mol.steps();
+        self.retired_sat += mol.sat_events();
+        self.retired_rail_hits += mon.rail_hits;
+        self.retired_ops.merge(&mol.ops());
+        self.rebuild_lanes();
+        Ok(RetiredMolecule {
+            mol_id,
+            species: self.species,
+            steps: mol.steps(),
+            sat_events: mol.sat_events(),
+            positions: mol.positions(),
+            quarantined: self.quarantined.iter().find(|q| q.molecule == mol_id).copied(),
         })
     }
 
@@ -1072,12 +1169,15 @@ fn fold_epoch(
 }
 
 /// Absorb one shard's epoch reply into the current fold: tallies sum,
-/// event ticks push `first_event` down, and a mid-epoch shard death
-/// becomes a loss for the supervisor to process.
+/// event ticks push `first_event` down, quarantine records append to
+/// the supervisor's live record list (the admission-control view; the
+/// per-shard lists read by `finish` stay the source of truth), and a
+/// mid-epoch shard death becomes a loss for the supervisor to process.
 fn absorb_epoch(
     i: usize,
     ep: ShardEpoch,
     quar_counts: &mut [u32],
+    quar_records: &mut Vec<QuarantineRecord>,
     fold: &mut EpochFold,
     losses: &mut Vec<(usize, u64, String, bool)>,
 ) {
@@ -1090,6 +1190,7 @@ fn absorb_epoch(
     for q in &ep.quarantines {
         fold.first_event = Some(fold.first_event.map_or(q.tick, |t| t.min(q.tick)));
     }
+    quar_records.extend(ep.quarantines);
     if let Some((tick, detail)) = ep.loss {
         losses.push((i, tick, detail, true));
     }
@@ -1117,6 +1218,17 @@ pub struct MoleculeFarm {
     dead: Vec<bool>,
     /// Cumulative quarantine count per shard, from its last epoch report.
     quar_counts: Vec<u32>,
+    /// Quarantine records reported so far (live supervisor view, in
+    /// shard-then-tick order per epoch; may miss records whose epoch
+    /// reply was lost — `finish` reads the shards directly).
+    quar_records: Vec<QuarantineRecord>,
+    /// Molecules currently resident per shard (admit/retire churn; the
+    /// admission placement key).
+    resident: Vec<usize>,
+    /// Shard currently holding each resident molecule, by farm-wide id.
+    home: std::collections::BTreeMap<usize, usize>,
+    /// Next farm-wide molecule id to assign on admit.
+    next_mol_id: usize,
     panics_recovered: u64,
     replies_lost: u64,
     degraded_ticks: u64,
@@ -1162,9 +1274,13 @@ impl MoleculeFarm {
         let mut shards = Vec::new();
         let mut species = Vec::new();
         let mut n_molecules = 0usize;
+        let mut home = std::collections::BTreeMap::new();
         for (si, g) in groups.into_iter().enumerate() {
             let n = g.mols.len();
-            let n_shards = g.shards.min(n);
+            // An empty group still builds its requested shards (chips
+            // programmed, zero batch lanes) — molecules arrive later
+            // through `admit`.
+            let n_shards = if n == 0 { g.shards } else { g.shards.min(n) };
             let base = n / n_shards;
             let rem = n % n_shards;
             let n_atoms = g.mols.iter().map(|m| m.n_atoms()).sum();
@@ -1175,6 +1291,9 @@ impl MoleculeFarm {
                 let ids: Vec<usize> = (0..slice.len()).map(|m| n_molecules + m).collect();
                 n_molecules += slice.len();
                 let id = shards.len();
+                for &mid in &ids {
+                    home.insert(mid, id);
+                }
                 shards.push(FarmShard::new(id, si, slice, ids, &g.model, g.k, lanes, &sup)?);
             }
             debug_assert!(mols.next().is_none());
@@ -1196,6 +1315,18 @@ impl MoleculeFarm {
                 FarmBackend::Threaded(WorkerPool::spawn("farm-shard", shards)?)
             }
         };
+        let resident = match &backend {
+            FarmBackend::Inline(shards) => shards.iter().map(|s| s.mols.len()).collect(),
+            // Threaded shards moved into their workers; reconstruct the
+            // per-shard resident counts from the placement map.
+            FarmBackend::Threaded(_) => {
+                let mut r = vec![0usize; n_shards];
+                for &s in home.values() {
+                    r[s] += 1;
+                }
+                r
+            }
+        };
         Ok(MoleculeFarm {
             backend,
             species,
@@ -1204,6 +1335,10 @@ impl MoleculeFarm {
             shard_species,
             dead: vec![false; n_shards],
             quar_counts: vec![0; n_shards],
+            quar_records: Vec::new(),
+            resident,
+            home,
+            next_mol_id: n_molecules,
             panics_recovered: 0,
             replies_lost: 0,
             degraded_ticks: 0,
@@ -1277,9 +1412,14 @@ impl MoleculeFarm {
                         continue;
                     }
                     match catch_unwind(AssertUnwindSafe(|| s.run_ticks(n_ticks, false))) {
-                        Ok(Ok(ep)) => {
-                            absorb_epoch(i, ep, &mut self.quar_counts, &mut fold, &mut losses)
-                        }
+                        Ok(Ok(ep)) => absorb_epoch(
+                            i,
+                            ep,
+                            &mut self.quar_counts,
+                            &mut self.quar_records,
+                            &mut fold,
+                            &mut losses,
+                        ),
                         Ok(Err(e)) => first_err = first_err.or(Some(e)),
                         Err(payload) => {
                             // Escaped the per-tick catch (supervisor
@@ -1338,9 +1478,14 @@ impl MoleculeFarm {
                 );
                 for (i, reply) in replies {
                     match reply.and_then(|r| r.recv()) {
-                        Ok(Ok(ep)) => {
-                            absorb_epoch(i, ep, &mut self.quar_counts, &mut fold, &mut losses)
-                        }
+                        Ok(Ok(ep)) => absorb_epoch(
+                            i,
+                            ep,
+                            &mut self.quar_counts,
+                            &mut self.quar_records,
+                            &mut fold,
+                            &mut losses,
+                        ),
                         // Drain every reply before propagating an error:
                         // bailing mid-loop would orphan the remaining
                         // workers' results and skew the books.
@@ -1402,6 +1547,7 @@ impl MoleculeFarm {
                 self.quar_counts[i] = recs.iter().filter(|q| q.tick < drop_tick).count() as u32;
                 for q in recs.iter().filter(|q| fold.t0 <= q.tick && q.tick < drop_tick) {
                     fold.first_event = Some(fold.first_event.map_or(q.tick, |t| t.min(q.tick)));
+                    self.quar_records.push(*q);
                 }
             }
         }
@@ -1462,6 +1608,109 @@ impl MoleculeFarm {
     /// epoch reports.
     pub fn molecules_quarantined(&self) -> u64 {
         self.quar_counts.iter().map(|&q| u64::from(q)).sum()
+    }
+
+    /// Admit a molecule into a species between epochs: it is placed on
+    /// the least-resident live shard of that species (lowest shard
+    /// index on ties — a pure function of supervisor-side state, so
+    /// inline and threaded backends place identically) and joins the
+    /// shard's batch from the next epoch. Because the SWAR batch kernel
+    /// is bit-exact per lane at any batch size, admission cannot move a
+    /// resident molecule's trajectory by one bit. The species'
+    /// `n_molecules`/`n_atoms` meta counts every molecule ever served
+    /// (retire does not decrement) — the ledger denominators stay
+    /// cumulative.
+    pub fn admit(&mut self, species: usize, mol: Box<dyn ServedMolecule>) -> Result<AdmitTicket> {
+        anyhow::ensure!(
+            species < self.species.len(),
+            "unknown species {species} (farm has {})",
+            self.species.len()
+        );
+        let mut shard: Option<usize> = None;
+        for i in 0..self.n_shards {
+            if self.dead[i] || self.shard_species[i] != species {
+                continue;
+            }
+            if shard.map_or(true, |best| self.resident[i] < self.resident[best]) {
+                shard = Some(i);
+            }
+        }
+        let Some(shard) = shard else {
+            anyhow::bail!("species {species} has no live shard to admit into")
+        };
+        let mol_id = self.next_mol_id;
+        self.next_mol_id += 1;
+        let n_atoms = mol.n_atoms();
+        match &mut self.backend {
+            FarmBackend::Inline(shards) => shards[shard].admit(mol, mol_id),
+            FarmBackend::Threaded(pool) => pool
+                .submit(shard, move |_, s: &mut FarmShard| s.admit(mol, mol_id))
+                .and_then(|r| r.recv())
+                .map_err(anyhow::Error::from)?,
+        }
+        self.resident[shard] += 1;
+        self.home.insert(mol_id, shard);
+        self.n_molecules += 1;
+        self.species[species].n_molecules += 1;
+        self.species[species].n_atoms += n_atoms;
+        Ok(AdmitTicket { mol_id, shard })
+    }
+
+    /// Retire a molecule between epochs: its lanes leave the shard's
+    /// batch (survivors' bits unmoved — same contract as quarantine
+    /// repacking) and its final state and books come back in a
+    /// [`RetiredMolecule`]. The shard retains the molecule's step/
+    /// saturation/op accounting so `finish()` ledgers stay complete.
+    /// Fails if the molecule is unknown or its shard is dead (a dead
+    /// shard's molecules stay frozen in place — read them through
+    /// `positions()`).
+    pub fn retire(&mut self, mol_id: usize) -> Result<RetiredMolecule> {
+        let Some(&shard) = self.home.get(&mol_id) else {
+            anyhow::bail!("molecule {mol_id} is not resident in the farm")
+        };
+        anyhow::ensure!(
+            !self.dead[shard],
+            "molecule {mol_id} is frozen on dead shard {shard}"
+        );
+        let retired = match &mut self.backend {
+            FarmBackend::Inline(shards) => shards[shard].retire(mol_id)?,
+            FarmBackend::Threaded(pool) => pool
+                .submit(shard, move |_, s: &mut FarmShard| s.retire(mol_id))
+                .and_then(|r| r.recv())
+                .map_err(anyhow::Error::from)??,
+        };
+        self.resident[shard] -= 1;
+        self.home.remove(&mol_id);
+        Ok(retired)
+    }
+
+    /// Live shards currently serving a species (admission capacity
+    /// shrinks as shards are written off).
+    pub fn live_shards(&self, species: usize) -> usize {
+        (0..self.n_shards)
+            .filter(|&i| !self.dead[i] && self.shard_species[i] == species)
+            .count()
+    }
+
+    /// Live supervisor view: molecules quarantined so far on a species'
+    /// shards, per the last epoch reports.
+    pub fn species_quarantined(&self, species: usize) -> u64 {
+        (0..self.n_shards)
+            .filter(|&i| self.shard_species[i] == species)
+            .map(|i| u64::from(self.quar_counts[i]))
+            .sum()
+    }
+
+    /// Quarantine records reported so far (live supervisor view; may
+    /// miss records whose epoch reply was lost — `finish` reads the
+    /// shards directly and is the source of truth).
+    pub fn quarantine_records(&self) -> &[QuarantineRecord] {
+        &self.quar_records
+    }
+
+    /// Shards written off so far, with loss attribution.
+    pub fn losses(&self) -> &[ShardLoss] {
+        &self.lost
     }
 
     /// Live supervisor view: shards written off so far.
@@ -1573,6 +1822,14 @@ impl MoleculeFarm {
                 sp.molecule_steps += steps;
                 sp.saturation_events += sat;
             }
+            // Books retained from molecules retired off this shard —
+            // churn never loses accounting.
+            ledger.fpga_ops.merge(&s.retired_ops);
+            ledger.molecule_steps += s.retired_steps;
+            ledger.saturation_events += s.retired_sat;
+            ledger.rail_hits += s.retired_rail_hits;
+            sp.molecule_steps += s.retired_steps;
+            sp.saturation_events += s.retired_sat;
             for mon in &s.mon {
                 ledger.rail_hits += mon.rail_hits;
             }

@@ -1,0 +1,1097 @@
+//! The serving front door: a deadline-batched request gateway over the
+//! epoch farm.
+//!
+//! The farm answers "drive N fixed molecules for T ticks"; a serving
+//! tier answers a request *stream*: clients submit molecule-step
+//! requests (`species`, initial [`System`], ticks wanted, absolute
+//! deadline) and poll for results. The gateway turns the stream back
+//! into the farm's shape:
+//!
+//! ```text
+//!  submit(species, system, ticks, deadline) ──► per-species queues
+//!                                                    │  EDF batch former
+//!                                                    ▼  (admission control)
+//!                                         MoleculeFarm::admit / retire
+//!                                                    │
+//!                run_epoch(window_ticks)  ◄──────────┘  one shard
+//!                 one epoch per window                   round-trip
+//!                                                    │   per window
+//!            settle: losses → quarantines → due ◄────┘
+//!                                                    │
+//!                         SLO ledger + RequestResult ▼  take_result(id)
+//! ```
+//!
+//! **Execution quantum = the deadline window.** The gateway drives the
+//! farm exclusively through [`MoleculeFarm::run_epoch`]`(window_ticks)`
+//! — one shard round-trip per window, riding the epoch driver's
+//! `EpochFold` double-buffer (host-side settling of epoch *t* overlaps
+//! the shards executing *t + 1*). Per-tick sync never comes back.
+//! Requested ticks are quantized **up** to whole windows: a request for
+//! 10 ticks under an 8-tick window runs 16 steps and completes at the
+//! second window boundary. Arrivals between boundaries are picked up at
+//! the next one.
+//!
+//! **Virtual clock.** Gateway time is `now: u64`, in farm ticks,
+//! advanced by exactly `window_ticks` per window — no `Instant` anywhere
+//! in the SLO path. Latency percentiles are therefore pure functions of
+//! the arrival plan, so inline and threaded ledgers are *exactly*
+//! comparable and percentile tests are deterministic.
+//!
+//! **Admission control** sheds or defers load off the farm's existing
+//! health signals — no new health plumbing:
+//! - a species with zero [`MoleculeFarm::live_shards`] rejects
+//!   ([`Rejection::SpeciesDown`]); shard losses shrink capacity,
+//! - per-species capacity is `live_shards × shard_capacity` minus a
+//!   quarantine **backoff penalty** (+1 each window the species reports
+//!   new quarantine/loss records, −1 each clean window),
+//! - a bounded per-species queue rejects ([`Rejection::QueueFull`]),
+//! - requests whose deadline can no longer be met are rejected at
+//!   submit ([`Rejection::DeadlineImpossible`]) and shed from the queue
+//!   ([`Outcome::Shed`]) rather than burning shard capacity on a
+//!   guaranteed miss.
+//!
+//! The batch former is earliest-deadline-first with request-id
+//! tie-break — a pure function of gateway state, so accept/reject/
+//! placement decisions are bit-identical across backends and replays.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::md::System;
+use crate::nn::Mlp;
+use crate::testkit::arrivals::Arrival;
+use crate::util::Vec3;
+
+#[cfg(any(test, feature = "faults"))]
+use crate::testkit::faults::FaultPlan;
+
+use super::farm::{
+    generic_group, water_group, FarmLedger, FarmSupervision, FarmTelemetry, HealthPolicy,
+    MoleculeFarm, QuarantineReason, ServedMolecule, SpeciesGroup,
+};
+use super::ParallelMode;
+
+/// Builds one served molecule from a client's initial [`System`] —
+/// how a species turns a request payload into a farm resident.
+pub type MoleculeBuilder = Box<dyn Fn(&System) -> Result<Box<dyn ServedMolecule>>>;
+
+/// One species the gateway serves: an **empty** [`SpeciesGroup`] (its
+/// shards are built up front, chips programmed, zero batch lanes —
+/// molecules arrive as requests) plus the builder that instantiates a
+/// request's molecule.
+pub struct GatewaySpecies {
+    group: SpeciesGroup,
+    build: MoleculeBuilder,
+}
+
+impl GatewaySpecies {
+    /// Wrap an empty group and a builder (the custom/PBC hook; the
+    /// common cases have [`GatewaySpecies::water`] and
+    /// [`GatewaySpecies::generic`]).
+    pub fn new(group: SpeciesGroup, build: MoleculeBuilder) -> Result<GatewaySpecies> {
+        anyhow::ensure!(
+            group.n_molecules() == 0,
+            "gateway species {:?} must start empty — molecules arrive as requests",
+            group.name()
+        );
+        Ok(GatewaySpecies { group, build })
+    }
+
+    /// The water species on `shards` shards.
+    pub fn water(model: &Mlp, k: usize, shards: usize, dt_fs: f64) -> Result<GatewaySpecies> {
+        let group = water_group(model, &[], k, shards, dt_fs)?;
+        let m = model.clone();
+        GatewaySpecies::new(
+            group,
+            Box::new(move |sys| {
+                Ok(water_group(&m, std::slice::from_ref(sys), k, 1, dt_fs)?
+                    .into_molecules()
+                    .pop()
+                    .expect("one system in, one molecule out"))
+            }),
+        )
+    }
+
+    /// A generic Table-I species (4·n_nb descriptor path) on `shards`
+    /// shards.
+    #[allow(clippy::too_many_arguments)] // mirrors generic_group's flat init API
+    pub fn generic(
+        name: &str,
+        model: &Mlp,
+        ref_coords: &[Vec3],
+        n_nb: usize,
+        k: usize,
+        shards: usize,
+        dt_fs: f64,
+    ) -> Result<GatewaySpecies> {
+        let group = generic_group(name, model, ref_coords, &[], n_nb, k, shards, dt_fs)?;
+        let m = model.clone();
+        let rc = ref_coords.to_vec();
+        let name = name.to_string();
+        GatewaySpecies::new(
+            group,
+            Box::new(move |sys| {
+                Ok(generic_group(&name, &m, &rc, std::slice::from_ref(sys), n_nb, k, 1, dt_fs)?
+                    .into_molecules()
+                    .pop()
+                    .expect("one system in, one molecule out"))
+            }),
+        )
+    }
+}
+
+/// Gateway construction knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct GatewayConfig {
+    /// Deadline window in farm ticks — the execution quantum: one
+    /// `run_epoch(window_ticks)` per window, requests quantized up to
+    /// whole windows.
+    pub window_ticks: u64,
+    /// Bounded per-species queue: submissions beyond this are rejected
+    /// ([`Rejection::QueueFull`]).
+    pub queue_limit: usize,
+    /// Resident molecules a single live shard is allowed to carry —
+    /// per-species admission capacity is `live_shards × shard_capacity`
+    /// minus the quarantine backoff penalty.
+    pub shard_capacity: usize,
+    /// Parallel MLP lanes per shard chip.
+    pub lanes: usize,
+    /// Shard execution backend.
+    pub mode: ParallelMode,
+    /// Divergence-monitor thresholds (passed through to the farm).
+    pub health: HealthPolicy,
+    /// Virtual-clock origin (gateway `now` starts here; farm ticks
+    /// start at 0 regardless).
+    pub start_tick: u64,
+    /// Deterministic fault plan (test/fault builds only).
+    #[cfg(any(test, feature = "faults"))]
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            window_ticks: 8,
+            queue_limit: 64,
+            shard_capacity: 8,
+            lanes: 1,
+            mode: ParallelMode::Inline,
+            health: HealthPolicy::default(),
+            start_tick: 0,
+            #[cfg(any(test, feature = "faults"))]
+            faults: None,
+        }
+    }
+}
+
+/// Handle of an accepted request (dense, in submission order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+/// What `submit` decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Submission {
+    Accepted(RequestId),
+    Rejected(Rejection),
+}
+
+/// Why a submission was turned away at the door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// No such species index.
+    UnknownSpecies,
+    /// The species' bounded queue is full — back off and retry.
+    QueueFull,
+    /// Every shard of the species is dead.
+    SpeciesDown,
+    /// Even if admitted at the next window boundary, the rounded-up
+    /// window count lands past the deadline.
+    DeadlineImpossible,
+}
+
+/// How a request ended.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    /// Ran its full (window-quantized) tick count.
+    Done { positions: Vec<Vec3>, steps: u64 },
+    /// The divergence monitor pulled the molecule mid-run; `tick` is
+    /// the **farm** tick of the verdict (virtual-clock time is
+    /// `start_tick + tick`), `positions` the frozen state.
+    Quarantined { reason: QuarantineReason, tick: u64, positions: Vec<Vec3> },
+    /// The molecule's shard died mid-run (farm tick `tick`); its state
+    /// stays frozen on the dead shard, so no positions come back.
+    ShardLost { tick: u64 },
+    /// Shed from the queue: the deadline became unmeetable before the
+    /// request could be admitted.
+    Shed,
+}
+
+/// The settled record of one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestResult {
+    pub id: RequestId,
+    pub species: usize,
+    /// Virtual-clock tick of submission.
+    pub submitted_at: u64,
+    /// Virtual-clock tick of settlement (a window boundary, except for
+    /// sheds which settle at the boundary they were examined at).
+    pub completed_at: u64,
+    pub deadline: u64,
+    pub ticks_requested: u64,
+    /// MD ticks actually integrated (the window-quantized count when
+    /// `Done`; partial progress on quarantine/loss; 0 when shed).
+    pub ticks_run: u64,
+    /// `completed_at - submitted_at` (queueing + quantized service).
+    pub latency_ticks: u64,
+    /// `Done` on or before the deadline. Failures and sheds never meet.
+    pub deadline_met: bool,
+    pub outcome: Outcome,
+}
+
+/// Where a request currently is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Waiting in its species queue for a window with capacity.
+    Queued,
+    /// Resident in the farm, integrating.
+    Running,
+    /// Settled; the result waits in [`Gateway::take_result`].
+    Finished,
+    /// Never accepted, or its result was already taken.
+    Unknown,
+}
+
+/// Buckets of the latency histogram (plus the implicit overflow tail in
+/// the last bucket).
+const HIST_BUCKETS: usize = 64;
+
+/// Fixed-bucket latency histogram over virtual-clock ticks: bucket `i`
+/// holds latencies in `[i·bucket_ticks, (i+1)·bucket_ticks)`; the last
+/// bucket absorbs the overflow tail and quantiles landing there report
+/// the recorded maximum. Integer counts over virtual time — quantiles
+/// are exact functions of the arrival plan, identical across backends.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    bucket_ticks: u64,
+    counts: Vec<u64>,
+    total: u64,
+    max: u64,
+}
+
+impl LatencyHistogram {
+    fn new(bucket_ticks: u64) -> LatencyHistogram {
+        LatencyHistogram {
+            bucket_ticks: bucket_ticks.max(1),
+            counts: vec![0; HIST_BUCKETS],
+            total: 0,
+            max: 0,
+        }
+    }
+
+    fn record(&mut self, latency: u64) {
+        let b = ((latency / self.bucket_ticks) as usize).min(HIST_BUCKETS - 1);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.max = self.max.max(latency);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// The smallest bucket upper bound covering quantile `q` of the
+    /// recorded latencies (conservative: a quantile is never
+    /// under-reported). 0 when empty; the overflow bucket reports the
+    /// recorded maximum.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i == HIST_BUCKETS - 1 {
+                    self.max
+                } else {
+                    (i as u64 + 1) * self.bucket_ticks
+                };
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Per-species SLO book. Accounting identities, checked by tests:
+/// `submitted = accepted + rejected()` (unknown-species submissions are
+/// counted by no species) and
+/// `accepted = completed + shed_queued + failed_quarantined +
+/// failed_shard_lost + still-queued + still-resident`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeciesSlo {
+    pub name: String,
+    pub submitted: u64,
+    pub accepted: u64,
+    pub rejected_queue_full: u64,
+    pub rejected_species_down: u64,
+    pub rejected_deadline: u64,
+    /// Accepted, then shed from the queue when the deadline became
+    /// unmeetable before capacity opened up.
+    pub shed_queued: u64,
+    pub completed: u64,
+    pub deadline_met: u64,
+    pub deadline_missed: u64,
+    pub failed_quarantined: u64,
+    pub failed_shard_lost: u64,
+    /// Deepest the species queue ever got (post-submit).
+    pub queue_depth_high_water: u64,
+    /// Most molecules ever resident in the farm at once.
+    pub resident_high_water: u64,
+    /// Latency of completed requests, in virtual-clock ticks.
+    pub latency: LatencyHistogram,
+}
+
+impl SpeciesSlo {
+    fn new(name: String, bucket_ticks: u64) -> SpeciesSlo {
+        SpeciesSlo {
+            name,
+            submitted: 0,
+            accepted: 0,
+            rejected_queue_full: 0,
+            rejected_species_down: 0,
+            rejected_deadline: 0,
+            shed_queued: 0,
+            completed: 0,
+            deadline_met: 0,
+            deadline_missed: 0,
+            failed_quarantined: 0,
+            failed_shard_lost: 0,
+            queue_depth_high_water: 0,
+            resident_high_water: 0,
+            latency: LatencyHistogram::new(bucket_ticks),
+        }
+    }
+
+    /// All rejections at the door.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_queue_full + self.rejected_species_down + self.rejected_deadline
+    }
+}
+
+/// The gateway's SLO ledger: per-species request books over the virtual
+/// clock. `PartialEq` so inline and threaded ledgers can be asserted
+/// exactly equal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloLedger {
+    /// Deadline windows executed.
+    pub windows: u64,
+    pub window_ticks: u64,
+    /// Virtual-clock origin.
+    pub start_tick: u64,
+    pub species: Vec<SpeciesSlo>,
+}
+
+/// A request waiting in its species queue (molecule already built —
+/// construction cost is paid at submit, off the window loop).
+struct Pending {
+    id: RequestId,
+    mol: Box<dyn ServedMolecule>,
+    submitted_at: u64,
+    ticks: u64,
+    deadline: u64,
+}
+
+/// A request resident in the farm.
+struct Resident {
+    species: usize,
+    mol_id: usize,
+    shard: usize,
+    submitted_at: u64,
+    /// Farm tick (not virtual-clock tick) at admission.
+    admitted_farm_tick: u64,
+    /// Virtual-clock tick the request's quantized run completes at.
+    due: u64,
+    deadline: u64,
+    ticks: u64,
+}
+
+/// Windows a request needs, rounding its ticks up to whole windows.
+fn windows_needed(ticks: u64, window: u64) -> u64 {
+    (ticks + window - 1) / window
+}
+
+/// The serving front door over a [`MoleculeFarm`]. See the module doc
+/// for the flow; the short version: `submit` → queues, `run_window` =
+/// EDF admission + one `run_epoch(window_ticks)` + settlement,
+/// `take_result` → [`RequestResult`].
+pub struct Gateway {
+    farm: MoleculeFarm,
+    cfg: GatewayConfig,
+    now: u64,
+    next_id: u64,
+    builders: Vec<MoleculeBuilder>,
+    queues: Vec<Vec<Pending>>,
+    /// Requests resident in the farm, keyed by `RequestId.0` (BTreeMap:
+    /// deterministic settlement order).
+    resident: BTreeMap<u64, Resident>,
+    resident_count: Vec<usize>,
+    /// Settled results awaiting pickup, keyed by `RequestId.0`.
+    results: BTreeMap<u64, RequestResult>,
+    slo: SloLedger,
+    /// Quarantine backoff per species (capacity subtracted per window).
+    penalty: Vec<usize>,
+    /// Farm loss / quarantine records already settled.
+    loss_cursor: usize,
+    quar_cursor: usize,
+}
+
+impl Gateway {
+    pub fn new(species: Vec<GatewaySpecies>, cfg: GatewayConfig) -> Result<Gateway> {
+        anyhow::ensure!(cfg.window_ticks >= 1, "deadline window must be >= 1 tick");
+        anyhow::ensure!(cfg.queue_limit >= 1, "queue limit must be >= 1");
+        anyhow::ensure!(cfg.shard_capacity >= 1, "shard capacity must be >= 1");
+        let n_species = species.len();
+        let mut groups = Vec::with_capacity(n_species);
+        let mut builders = Vec::with_capacity(n_species);
+        let mut slo_species = Vec::with_capacity(n_species);
+        for s in species {
+            slo_species.push(SpeciesSlo::new(s.group.name().to_string(), cfg.window_ticks));
+            groups.push(s.group);
+            builders.push(s.build);
+        }
+        let sup = FarmSupervision {
+            health: cfg.health,
+            #[cfg(any(test, feature = "faults"))]
+            faults: cfg.faults,
+        };
+        let farm = MoleculeFarm::supervised(groups, cfg.lanes, cfg.mode, sup)?;
+        Ok(Gateway {
+            farm,
+            cfg,
+            now: cfg.start_tick,
+            next_id: 0,
+            builders,
+            queues: (0..n_species).map(|_| Vec::new()).collect(),
+            resident: BTreeMap::new(),
+            resident_count: vec![0; n_species],
+            results: BTreeMap::new(),
+            slo: SloLedger {
+                windows: 0,
+                window_ticks: cfg.window_ticks,
+                start_tick: cfg.start_tick,
+                species: slo_species,
+            },
+            penalty: vec![0; n_species],
+            loss_cursor: 0,
+            quar_cursor: 0,
+        })
+    }
+
+    /// The virtual clock (farm ticks since `start_tick`, plus the
+    /// origin).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Submit a request: `ticks` MD ticks for a fresh molecule of
+    /// `species` built from `sys`, wanted by absolute virtual-clock
+    /// tick `deadline`. Admission control answers immediately —
+    /// [`Submission::Rejected`] is a *decision*, not an error; `Err` is
+    /// reserved for infrastructure failures (molecule construction).
+    pub fn submit(
+        &mut self,
+        species: usize,
+        sys: &System,
+        ticks: u64,
+        deadline: u64,
+    ) -> Result<Submission> {
+        anyhow::ensure!(ticks >= 1, "request must ask for at least one tick");
+        if species >= self.builders.len() {
+            return Ok(Submission::Rejected(Rejection::UnknownSpecies));
+        }
+        self.slo.species[species].submitted += 1;
+        if self.farm.live_shards(species) == 0 {
+            self.slo.species[species].rejected_species_down += 1;
+            return Ok(Submission::Rejected(Rejection::SpeciesDown));
+        }
+        if self.queues[species].len() >= self.cfg.queue_limit {
+            self.slo.species[species].rejected_queue_full += 1;
+            return Ok(Submission::Rejected(Rejection::QueueFull));
+        }
+        let w = self.cfg.window_ticks;
+        if self.now + windows_needed(ticks, w) * w > deadline {
+            self.slo.species[species].rejected_deadline += 1;
+            return Ok(Submission::Rejected(Rejection::DeadlineImpossible));
+        }
+        let mol = (self.builders[species])(sys)?;
+        let id = RequestId(self.next_id);
+        self.next_id += 1;
+        self.queues[species].push(Pending { id, mol, submitted_at: self.now, ticks, deadline });
+        let slo = &mut self.slo.species[species];
+        slo.accepted += 1;
+        slo.queue_depth_high_water =
+            slo.queue_depth_high_water.max(self.queues[species].len() as u64);
+        Ok(Submission::Accepted(id))
+    }
+
+    /// Settle one request into the results map and the SLO book.
+    #[allow(clippy::too_many_arguments)] // internal settlement plumbing
+    fn settle(
+        &mut self,
+        id: RequestId,
+        species: usize,
+        submitted_at: u64,
+        deadline: u64,
+        ticks_requested: u64,
+        ticks_run: u64,
+        outcome: Outcome,
+    ) {
+        let completed_at = self.now;
+        let latency = completed_at - submitted_at;
+        let met = matches!(outcome, Outcome::Done { .. }) && completed_at <= deadline;
+        let slo = &mut self.slo.species[species];
+        match &outcome {
+            Outcome::Done { .. } => {
+                slo.completed += 1;
+                if met {
+                    slo.deadline_met += 1;
+                } else {
+                    slo.deadline_missed += 1;
+                }
+                slo.latency.record(latency);
+            }
+            Outcome::Quarantined { .. } => slo.failed_quarantined += 1,
+            Outcome::ShardLost { .. } => slo.failed_shard_lost += 1,
+            Outcome::Shed => slo.shed_queued += 1,
+        }
+        self.results.insert(
+            id.0,
+            RequestResult {
+                id,
+                species,
+                submitted_at,
+                completed_at,
+                deadline,
+                ticks_requested,
+                ticks_run,
+                latency_ticks: latency,
+                deadline_met: met,
+                outcome,
+            },
+        );
+    }
+
+    /// One deadline window: EDF batch forming + admission control, one
+    /// `run_epoch(window_ticks)` (the only execution call in the
+    /// gateway), then settlement — shard losses first, then quarantine
+    /// verdicts, then completed residents. Every decision is a pure
+    /// function of gateway + supervisor state, so replays and backends
+    /// agree exactly.
+    pub fn run_window(&mut self) -> Result<()> {
+        let w = self.cfg.window_ticks;
+        // --- Batch forming: earliest deadline first, id tie-break. ---
+        for sp in 0..self.queues.len() {
+            self.queues[sp].sort_by_key(|p| (p.deadline, p.id.0));
+            let live = self.farm.live_shards(sp);
+            let cap = (live * self.cfg.shard_capacity).saturating_sub(self.penalty[sp]);
+            let mut i = 0;
+            while i < self.queues[sp].len() {
+                let (ticks, deadline) = (self.queues[sp][i].ticks, self.queues[sp][i].deadline);
+                let windows = windows_needed(ticks, w);
+                if self.now + windows * w > deadline {
+                    // Unmeetable — shed before the capacity check, so a
+                    // saturated queue still drains its dead weight.
+                    let p = self.queues[sp].remove(i);
+                    self.settle(p.id, sp, p.submitted_at, p.deadline, p.ticks, 0, Outcome::Shed);
+                    continue;
+                }
+                if live == 0 || self.resident_count[sp] >= cap {
+                    i += 1; // defer to a later window
+                    continue;
+                }
+                let p = self.queues[sp].remove(i);
+                let ticket = self.farm.admit(sp, p.mol)?;
+                self.resident.insert(
+                    p.id.0,
+                    Resident {
+                        species: sp,
+                        mol_id: ticket.mol_id,
+                        shard: ticket.shard,
+                        submitted_at: p.submitted_at,
+                        admitted_farm_tick: self.now - self.cfg.start_tick,
+                        due: self.now + windows * w,
+                        deadline: p.deadline,
+                        ticks: p.ticks,
+                    },
+                );
+                self.resident_count[sp] += 1;
+                let slo = &mut self.slo.species[sp];
+                slo.resident_high_water =
+                    slo.resident_high_water.max(self.resident_count[sp] as u64);
+            }
+        }
+
+        // --- One epoch per window: the execution quantum. ---
+        self.farm.run_epoch(w as usize)?;
+        self.now += w;
+        self.slo.windows += 1;
+
+        // --- Settlement. Losses first: a lost shard's residents fail
+        // (their state is frozen on the dead shard — never retired),
+        // and any quarantine record recovered from that shard then
+        // finds no resident to double-settle. ---
+        let mut dirty = vec![false; self.queues.len()];
+        let losses: Vec<(usize, usize, u64)> = self.farm.losses()[self.loss_cursor..]
+            .iter()
+            .map(|l| (l.shard, l.species, l.tick))
+            .collect();
+        self.loss_cursor += losses.len();
+        for (shard, species, tick) in losses {
+            dirty[species] = true;
+            let failed: Vec<u64> = self
+                .resident
+                .iter()
+                .filter(|(_, r)| r.shard == shard)
+                .map(|(&k, _)| k)
+                .collect();
+            for k in failed {
+                let r = self.resident.remove(&k).expect("resident id just listed");
+                self.resident_count[r.species] -= 1;
+                let run = tick.saturating_sub(r.admitted_farm_tick);
+                self.settle(
+                    RequestId(k),
+                    r.species,
+                    r.submitted_at,
+                    r.deadline,
+                    r.ticks,
+                    run,
+                    Outcome::ShardLost { tick },
+                );
+            }
+        }
+        // Quarantine verdicts: retire the pulled molecule (its shard is
+        // live — dead shards' residents were settled above) and return
+        // its frozen state.
+        let quars: Vec<_> = self.farm.quarantine_records()[self.quar_cursor..].to_vec();
+        self.quar_cursor += quars.len();
+        for q in quars {
+            dirty[q.species] = true;
+            let hit = self
+                .resident
+                .iter()
+                .find(|(_, r)| r.mol_id == q.molecule)
+                .map(|(&k, _)| k);
+            let Some(k) = hit else { continue };
+            let r = self.resident.remove(&k).expect("resident id just found");
+            self.resident_count[r.species] -= 1;
+            let retired = self.farm.retire(r.mol_id)?;
+            self.settle(
+                RequestId(k),
+                r.species,
+                r.submitted_at,
+                r.deadline,
+                r.ticks,
+                retired.steps,
+                Outcome::Quarantined { reason: q.reason, tick: q.tick, positions: retired.positions },
+            );
+        }
+        // Harvest completed residents (id order — BTreeMap).
+        let due: Vec<u64> = self
+            .resident
+            .iter()
+            .filter(|(_, r)| r.due <= self.now)
+            .map(|(&k, _)| k)
+            .collect();
+        for k in due {
+            let r = self.resident.remove(&k).expect("resident id just listed");
+            self.resident_count[r.species] -= 1;
+            let retired = self.farm.retire(r.mol_id)?;
+            self.settle(
+                RequestId(k),
+                r.species,
+                r.submitted_at,
+                r.deadline,
+                r.ticks,
+                retired.steps,
+                Outcome::Done { positions: retired.positions, steps: retired.steps },
+            );
+        }
+        // Quarantine/loss backoff: shrink a dirty species' next-window
+        // capacity by one, recover by one per clean window.
+        for sp in 0..self.penalty.len() {
+            if dirty[sp] {
+                self.penalty[sp] += 1;
+            } else {
+                self.penalty[sp] = self.penalty[sp].saturating_sub(1);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run `n` deadline windows.
+    pub fn run_windows(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.run_window()?;
+        }
+        Ok(())
+    }
+
+    /// Replay a deterministic arrival plan (see
+    /// [`crate::testkit::arrivals`]): arrivals are submitted at the
+    /// first window boundary at or after their `at_tick` (absolute
+    /// virtual-clock ticks — offset them by `start_tick` if nonzero),
+    /// `system_for(i, arrival)` supplies the i-th request's initial
+    /// state, and windows run until the plan is exhausted and every
+    /// accepted request has settled. Returns the per-arrival
+    /// submission decisions, in plan order.
+    pub fn play(
+        &mut self,
+        plan: &[Arrival],
+        mut system_for: impl FnMut(usize, &Arrival) -> System,
+    ) -> Result<Vec<Submission>> {
+        let mut subs = Vec::with_capacity(plan.len());
+        let mut next = 0usize;
+        let mut guard = 0u32;
+        loop {
+            while next < plan.len() && plan[next].at_tick <= self.now {
+                let a = plan[next];
+                let sys = system_for(next, &a);
+                subs.push(self.submit(a.species, &sys, a.ticks, a.deadline)?);
+                next += 1;
+            }
+            if next >= plan.len() && self.queued() == 0 && self.in_flight() == 0 {
+                break;
+            }
+            self.run_window()?;
+            guard += 1;
+            anyhow::ensure!(guard <= 100_000, "gateway replay did not drain");
+        }
+        Ok(subs)
+    }
+
+    /// Where a request currently is.
+    pub fn status(&self, id: RequestId) -> RequestStatus {
+        if self.results.contains_key(&id.0) {
+            RequestStatus::Finished
+        } else if self.resident.contains_key(&id.0) {
+            RequestStatus::Running
+        } else if self.queues.iter().any(|q| q.iter().any(|p| p.id == id)) {
+            RequestStatus::Queued
+        } else {
+            RequestStatus::Unknown
+        }
+    }
+
+    /// Take one settled result (None until it settles; a result can be
+    /// taken once).
+    pub fn take_result(&mut self, id: RequestId) -> Option<RequestResult> {
+        self.results.remove(&id.0)
+    }
+
+    /// Drain every settled result, in request-id order.
+    pub fn take_results(&mut self) -> Vec<RequestResult> {
+        std::mem::take(&mut self.results).into_values().collect()
+    }
+
+    /// Requests waiting in queues.
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Requests resident in the farm.
+    pub fn in_flight(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// The SLO ledger so far.
+    pub fn slo(&self) -> &SloLedger {
+        &self.slo
+    }
+
+    /// The farm's live running telemetry. **Undercounts on lost
+    /// replies** (a dropped epoch executed but was never reported —
+    /// see [`FarmTelemetry`]); the books from [`Gateway::finish`] read
+    /// shard state directly and are the source of truth.
+    pub fn telemetry(&mut self) -> FarmTelemetry {
+        self.farm.telemetry()
+    }
+
+    /// Tear down: the SLO ledger plus the farm's final [`FarmLedger`]
+    /// (which reads shard state directly — complete even when epoch
+    /// replies were lost).
+    pub fn finish(self) -> Result<(SloLedger, FarmLedger)> {
+        let Gateway { farm, slo, .. } = self;
+        Ok((slo, farm.finish()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::farm::{random_water_systems, FarmConfig, WaterFarm};
+    use crate::nn::Activation;
+    use crate::testkit::arrivals::{self, ArrivalSpec};
+    use crate::util::rng::Pcg;
+
+    fn toy_model() -> Mlp {
+        let mut rng = Pcg::new(77);
+        let mut m = Mlp::init_random("toy-water", &[3, 3, 3, 2], Activation::Phi, &mut rng);
+        for l in &mut m.layers {
+            for w in &mut l.w {
+                *w *= 0.3;
+            }
+        }
+        m
+    }
+
+    fn water_gateway(shards: usize, cfg: GatewayConfig) -> Gateway {
+        let m = toy_model();
+        Gateway::new(vec![GatewaySpecies::water(&m, 3, shards, 0.25).unwrap()], cfg).unwrap()
+    }
+
+    #[test]
+    fn single_request_is_bit_identical_to_a_direct_farm_run() {
+        // A request for 10 ticks under a 4-tick window quantizes up to
+        // 12 steps, and the trajectory must match a plain farm driving
+        // the same system 12 ticks — admission via empty groups plus
+        // admit() cannot move a bit.
+        let m = toy_model();
+        let sys = random_water_systems(1, 120.0, 5).pop().unwrap();
+        let cfg = GatewayConfig { window_ticks: 4, ..GatewayConfig::default() };
+        let mut gw = Gateway::new(vec![GatewaySpecies::water(&m, 3, 1, 0.25).unwrap()], cfg).unwrap();
+        let Submission::Accepted(id) = gw.submit(0, &sys, 10, 1_000).unwrap() else {
+            panic!("accept")
+        };
+        assert_eq!(gw.status(id), RequestStatus::Queued);
+        gw.run_window().unwrap();
+        assert_eq!(gw.status(id), RequestStatus::Running);
+        gw.run_windows(2).unwrap();
+        assert_eq!(gw.status(id), RequestStatus::Finished);
+        let res = gw.take_result(id).expect("settled");
+        assert_eq!(gw.status(id), RequestStatus::Unknown);
+        assert!(res.deadline_met);
+        assert_eq!(res.ticks_requested, 10);
+        assert_eq!(res.ticks_run, 12);
+        assert_eq!(res.latency_ticks, 12);
+        let Outcome::Done { positions, steps } = &res.outcome else {
+            panic!("done, got {:?}", res.outcome)
+        };
+        assert_eq!(*steps, 12);
+
+        let mut farm =
+            WaterFarm::new(&m, std::slice::from_ref(&sys), &FarmConfig::default()).unwrap();
+        farm.run(12).unwrap();
+        assert_eq!(positions, &farm.positions().unwrap()[0]);
+
+        // The farm ledger keeps the retired molecule's books.
+        let (slo, ledger) = gw.finish().unwrap();
+        assert_eq!(ledger.molecule_steps, 12);
+        assert_eq!(slo.species[0].completed, 1);
+        assert_eq!(slo.species[0].deadline_met, 1);
+        // Latency 12 lands in bucket [12, 16); the quantile reports the
+        // conservative bucket upper bound.
+        assert_eq!(slo.species[0].latency.p50(), 16);
+        assert_eq!(slo.species[0].latency.max(), 12);
+    }
+
+    #[test]
+    fn door_rejections_are_counted_and_typed() {
+        let sys = random_water_systems(1, 120.0, 6).pop().unwrap();
+        let cfg = GatewayConfig { window_ticks: 4, queue_limit: 2, ..GatewayConfig::default() };
+        let mut gw = water_gateway(1, cfg);
+        assert_eq!(
+            gw.submit(3, &sys, 4, 100).unwrap(),
+            Submission::Rejected(Rejection::UnknownSpecies)
+        );
+        // 9 ticks → 3 windows of 4 = 12 > deadline 11.
+        assert_eq!(
+            gw.submit(0, &sys, 9, 11).unwrap(),
+            Submission::Rejected(Rejection::DeadlineImpossible)
+        );
+        assert!(matches!(gw.submit(0, &sys, 4, 100).unwrap(), Submission::Accepted(_)));
+        assert!(matches!(gw.submit(0, &sys, 4, 100).unwrap(), Submission::Accepted(_)));
+        assert_eq!(
+            gw.submit(0, &sys, 4, 100).unwrap(),
+            Submission::Rejected(Rejection::QueueFull)
+        );
+        let slo = &gw.slo().species[0];
+        assert_eq!(slo.submitted, 4); // unknown-species lands on no species
+        assert_eq!(slo.accepted, 2);
+        assert_eq!(slo.rejected_deadline, 1);
+        assert_eq!(slo.rejected_queue_full, 1);
+        assert_eq!(slo.queue_depth_high_water, 2);
+    }
+
+    #[test]
+    fn same_plan_replays_to_identical_decisions_and_ledgers() {
+        let spec = ArrivalSpec { mean_gap: 2, ..ArrivalSpec::new(21, 24, 1) };
+        let plan = arrivals::plan(&spec);
+        let systems = random_water_systems(plan.len(), 140.0, 8);
+        let cfg = GatewayConfig {
+            window_ticks: 4,
+            shard_capacity: 3,
+            queue_limit: 6,
+            ..GatewayConfig::default()
+        };
+        let run = || {
+            let mut gw = water_gateway(2, cfg);
+            let subs = gw.play(&plan, |i, _| systems[i].clone()).unwrap();
+            let results = gw.take_results();
+            let (slo, _) = gw.finish().unwrap();
+            (subs, results, slo)
+        };
+        let (sa, ra, la) = run();
+        let (sb, rb, lb) = run();
+        assert_eq!(sa, sb, "accept/reject decisions must replay exactly");
+        assert_eq!(ra, rb, "results must replay exactly");
+        assert_eq!(la, lb, "SLO ledgers must replay exactly");
+        assert!(ra.iter().any(|r| matches!(r.outcome, Outcome::Done { .. })));
+    }
+
+    #[test]
+    fn inline_and_threaded_gateways_are_bit_identical() {
+        let spec = ArrivalSpec { mean_gap: 3, ..ArrivalSpec::new(33, 20, 1) };
+        let plan = arrivals::plan(&spec);
+        let systems = random_water_systems(plan.len(), 150.0, 13);
+        let run = |mode: ParallelMode| {
+            let cfg = GatewayConfig {
+                window_ticks: 4,
+                shard_capacity: 2,
+                queue_limit: 8,
+                mode,
+                ..GatewayConfig::default()
+            };
+            let mut gw = water_gateway(3, cfg);
+            let subs = gw.play(&plan, |i, _| systems[i].clone()).unwrap();
+            let results = gw.take_results();
+            let (slo, ledger) = gw.finish().unwrap();
+            (subs, results, slo, ledger.molecule_steps)
+        };
+        let (si, ri, li, mi) = run(ParallelMode::Inline);
+        let (st, rt, lt, mt) = run(ParallelMode::Threaded);
+        assert_eq!(si, st, "decisions diverged across backends");
+        assert_eq!(ri, rt, "per-request results (incl. positions) diverged across backends");
+        assert_eq!(li, lt, "SLO ledgers diverged across backends");
+        assert_eq!(mi, mt);
+    }
+
+    #[test]
+    fn saturation_sheds_load_but_accepted_requests_meet_deadlines() {
+        // The acceptance-criteria test: a burst far beyond capacity on
+        // one single shard. The gateway must bound the queue (nonzero
+        // QueueFull rejects), shed/defer the rest, and every request it
+        // *completes* must still meet its deadline.
+        let cfg = GatewayConfig {
+            window_ticks: 4,
+            shard_capacity: 2,
+            queue_limit: 4,
+            ..GatewayConfig::default()
+        };
+        let mut gw = water_gateway(1, cfg);
+        let systems = random_water_systems(16, 120.0, 17);
+        let mut accepted = Vec::new();
+        for sys in &systems {
+            // Everyone wants 4 ticks by tick 4 — one window of runway,
+            // but capacity is 2 molecules per window: 2 complete on
+            // time, the rest of the queue sheds, the burst tail rejects
+            // at the door.
+            if let Submission::Accepted(id) = gw.submit(0, sys, 4, 4).unwrap() {
+                accepted.push(id);
+            }
+        }
+        gw.run_windows(12).unwrap();
+        let slo = &gw.slo().species[0];
+        assert_eq!(slo.submitted, 16);
+        assert!(slo.rejected_queue_full > 0, "saturation must reject at the door");
+        assert!(slo.queue_depth_high_water <= 4, "queue must stay bounded");
+        assert!(slo.completed > 0, "capacity-worth of requests must finish");
+        assert_eq!(slo.deadline_missed, 0, "completed requests must meet deadlines");
+        assert!(slo.shed_queued > 0, "unmeetable queued requests must shed");
+        // Accounting identities.
+        assert_eq!(slo.submitted, slo.accepted + slo.rejected());
+        assert_eq!(slo.accepted, slo.completed + slo.shed_queued);
+        assert_eq!(gw.queued(), 0);
+        assert_eq!(gw.in_flight(), 0);
+        // Every accepted request settled one way or the other.
+        for id in accepted {
+            assert_eq!(gw.status(id), RequestStatus::Finished);
+        }
+    }
+
+    #[test]
+    fn telemetry_tracks_windows() {
+        let cfg = GatewayConfig { window_ticks: 4, ..GatewayConfig::default() };
+        let mut gw = water_gateway(2, cfg);
+        let sys = random_water_systems(1, 120.0, 3).pop().unwrap();
+        assert!(matches!(gw.submit(0, &sys, 8, 100).unwrap(), Submission::Accepted(_)));
+        gw.run_windows(3).unwrap();
+        let t = gw.telemetry();
+        assert_eq!(t.ticks, 12, "three 4-tick windows");
+        assert_eq!(t.epochs, 3, "one epoch per window — never per-tick");
+        // The resident molecule ran 8 quantized ticks.
+        assert_eq!(t.molecule_steps, 8);
+        assert_eq!(gw.now(), 12);
+        assert_eq!(gw.slo().windows, 3);
+    }
+
+    #[test]
+    fn results_drain_in_id_order() {
+        let cfg = GatewayConfig { window_ticks: 4, ..GatewayConfig::default() };
+        let mut gw = water_gateway(2, cfg);
+        let systems = random_water_systems(3, 130.0, 23);
+        for sys in &systems {
+            assert!(matches!(gw.submit(0, sys, 4, 100).unwrap(), Submission::Accepted(_)));
+        }
+        gw.run_windows(2).unwrap();
+        let results = gw.take_results();
+        assert_eq!(results.len(), 3);
+        let ids: Vec<u64> = results.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert!(gw.take_results().is_empty(), "drained once");
+    }
+
+    #[test]
+    fn histogram_quantiles_are_exact() {
+        let mut h = LatencyHistogram::new(4);
+        // 10 latencies: 8×[0,4), 1×[4,8), 1 overflow at 1000.
+        for _ in 0..8 {
+            h.record(2);
+        }
+        h.record(5);
+        h.record(1_000);
+        assert_eq!(h.total(), 10);
+        assert_eq!(h.p50(), 4, "5th of 10 lands in the first bucket");
+        assert_eq!(h.quantile(0.9), 8);
+        assert_eq!(h.p99(), 1_000, "overflow bucket reports the recorded max");
+        assert_eq!(h.max(), 1_000);
+        assert_eq!(LatencyHistogram::new(4).p99(), 0, "empty histogram");
+    }
+
+    #[test]
+    fn empty_gateway_windows_are_legal() {
+        // Idle windows advance the clock and nothing else — the farm's
+        // empty shards run zero-lane batches.
+        let cfg = GatewayConfig { window_ticks: 8, ..GatewayConfig::default() };
+        let mut gw = water_gateway(2, cfg);
+        gw.run_windows(3).unwrap();
+        assert_eq!(gw.now(), 24);
+        let (slo, ledger) = gw.finish().unwrap();
+        assert_eq!(slo.windows, 3);
+        assert_eq!(ledger.molecule_steps, 0);
+        assert_eq!(ledger.ticks, 24);
+    }
+}

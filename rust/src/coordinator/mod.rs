@@ -19,13 +19,18 @@
 //! takes max(chip latencies), not their sum.
 
 pub mod farm;
+pub mod gateway;
 pub mod pool;
 pub mod vn;
 
 pub use farm::{
-    generic_group, generic_group_pbc, water_group, FarmConfig, FarmLedger, FarmSupervision,
-    FarmTelemetry, HealthPolicy, MoleculeFarm, QuarantineReason, QuarantineRecord, ServedMolecule,
-    ShardLoss, SpeciesGroup, SpeciesLedger, WaterFarm,
+    generic_group, generic_group_pbc, water_group, AdmitTicket, FarmConfig, FarmLedger,
+    FarmSupervision, FarmTelemetry, HealthPolicy, MoleculeFarm, QuarantineReason, QuarantineRecord,
+    RetiredMolecule, ServedMolecule, ShardLoss, SpeciesGroup, SpeciesLedger, WaterFarm,
+};
+pub use gateway::{
+    Gateway, GatewayConfig, GatewaySpecies, LatencyHistogram, MoleculeBuilder, Outcome, Rejection,
+    RequestId, RequestResult, RequestStatus, SloLedger, SpeciesSlo, Submission,
 };
 pub use pool::{PoolError, PoolShutdown, Reply, WorkerFault, WorkerPool};
 

@@ -12,6 +12,12 @@
 //! example, and the Fig. 9 evaluation — is a thin routing layer
 //! (round-robin dispatch, pair dispatch, stats aggregation) over a
 //! `WorkerPool<MlpChip>`.
+//!
+//! The transport carries more than tick jobs: the farm ships whole
+//! epochs (`FarmShard::run_ticks`), the gateway ships membership churn
+//! (admit/retire closures between epochs) and state queries (frozen
+//! positions, quarantine records) over the same `submit`/`recv` pair —
+//! one mechanism, one fault model.
 
 use std::any::Any;
 use std::panic::{catch_unwind, AssertUnwindSafe};

@@ -14,9 +14,11 @@ use crate::coordinator::farm::{
     generic_group, random_molecule_systems, random_water_systems, water_group, FarmConfig,
     FarmLedger, MoleculeFarm, SpeciesGroup, WaterFarm,
 };
+use crate::coordinator::gateway::{Gateway, GatewayConfig, GatewaySpecies};
 use crate::coordinator::ParallelMode;
 use crate::hw::power::ProcessNode;
 use crate::hw::timing::{SystemTiming, CLOCK_HZ, PAPER_NVN_S};
+use crate::testkit::arrivals::{self, ArrivalSpec};
 use crate::util::json::{self, Value};
 use crate::util::table::sci;
 
@@ -167,6 +169,129 @@ pub fn measure_epoch_sweep(
             host_steps_per_s: ledger.host_steps_per_second(),
             elapsed_s: elapsed,
             speedup_vs_tick: if elapsed > 0.0 { base / elapsed } else { 0.0 },
+        });
+    }
+    Ok(out)
+}
+
+/// One measured point of the gateway saturation sweep: a fixed
+/// deterministic arrival plan (offered load set by `mean_gap`) replayed
+/// through the serving gateway at one deadline-window length.
+pub struct GatewayMeasurement {
+    /// Deadline window (ticks per `run_epoch` quantum).
+    pub window_ticks: u64,
+    /// Mean inter-arrival gap of the plan (smaller = heavier load).
+    pub mean_gap: u32,
+    /// Requests in the plan.
+    pub offered: u64,
+    pub accepted: u64,
+    /// Door rejections (queue full + species down + impossible
+    /// deadline).
+    pub rejected: u64,
+    /// Accepted then shed from the queue once unmeetable.
+    pub shed_queued: u64,
+    pub completed: u64,
+    pub deadline_met: u64,
+    pub deadline_missed: u64,
+    pub p50_ticks: u64,
+    pub p99_ticks: u64,
+    pub queue_high_water: u64,
+    pub molecule_steps: u64,
+    pub host_steps_per_s: f64,
+    pub elapsed_s: f64,
+}
+
+impl GatewayMeasurement {
+    /// Door reject fraction of the offered load.
+    pub fn reject_rate(&self) -> f64 {
+        if self.offered > 0 { self.rejected as f64 / self.offered as f64 } else { 0.0 }
+    }
+
+    /// The bench-json row (shared by the scaling report and
+    /// `farm_throughput` so artifacts stay schema-identical).
+    pub fn json_row(&self, backend: &str) -> Value {
+        json::obj(vec![
+            ("backend", json::s(backend)),
+            ("window_ticks", json::num(self.window_ticks as f64)),
+            ("mean_gap", json::num(f64::from(self.mean_gap))),
+            ("offered", json::num(self.offered as f64)),
+            ("accepted", json::num(self.accepted as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("shed_queued", json::num(self.shed_queued as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("deadline_met", json::num(self.deadline_met as f64)),
+            ("deadline_missed", json::num(self.deadline_missed as f64)),
+            ("p50_ticks", json::num(self.p50_ticks as f64)),
+            ("p99_ticks", json::num(self.p99_ticks as f64)),
+            ("queue_high_water", json::num(self.queue_high_water as f64)),
+            ("reject_rate", json::num(self.reject_rate())),
+            ("molecule_steps_per_sec", json::num(self.host_steps_per_s)),
+        ])
+    }
+}
+
+/// Sweep the serving gateway across offered load × deadline window: a
+/// water-only gateway on 2 shards (capacity 4 residents/shard, queue
+/// bound 16) replaying deterministic arrival plans — the same plans for
+/// every backend, so inline and threaded sweeps are comparable
+/// point-for-point. Heavy-load points (`mean_gap` 1) drive the door
+/// into admission control (nonzero rejects, bounded queue); light
+/// points measure the latency floor of window quantization.
+pub fn measure_gateway_saturation(
+    mode: ParallelMode,
+    quick: bool,
+) -> Result<Vec<GatewayMeasurement>> {
+    let m = super::water_model_or_fallback();
+    let points: &[(u64, u32)] =
+        if quick { &[(4, 1), (8, 6)] } else { &[(4, 1), (4, 6), (8, 1), (8, 6)] };
+    let n_req = if quick { 24 } else { 96 };
+    let systems = random_water_systems(n_req, 300.0, 99);
+    let mut out = Vec::with_capacity(points.len());
+    for &(window_ticks, mean_gap) in points {
+        let mut gw = Gateway::new(
+            vec![GatewaySpecies::water(&m, 3, 2, 0.25)?],
+            GatewayConfig {
+                window_ticks,
+                queue_limit: 16,
+                shard_capacity: 4,
+                mode,
+                ..GatewayConfig::default()
+            },
+        )?;
+        let plan = arrivals::plan(&ArrivalSpec {
+            seed: 0x6a7e,
+            n: n_req,
+            mean_gap,
+            max_gap: 32,
+            species_weights: vec![1],
+            ticks_range: (4, 16),
+            slack_range: (4, 24),
+        });
+        let t0 = std::time::Instant::now();
+        gw.play(&plan, |i, _| systems[i].clone())?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let (slo, ledger) = gw.finish()?;
+        let sp = &slo.species[0];
+        out.push(GatewayMeasurement {
+            window_ticks,
+            mean_gap,
+            offered: n_req as u64,
+            accepted: sp.accepted,
+            rejected: sp.rejected(),
+            shed_queued: sp.shed_queued,
+            completed: sp.completed,
+            deadline_met: sp.deadline_met,
+            deadline_missed: sp.deadline_missed,
+            p50_ticks: sp.latency.p50(),
+            p99_ticks: sp.latency.p99(),
+            queue_high_water: sp.queue_depth_high_water,
+            molecule_steps: ledger.molecule_steps,
+            host_steps_per_s: if elapsed > 0.0 {
+                ledger.molecule_steps as f64 / elapsed
+            } else {
+                0.0
+            },
+            elapsed_s: elapsed,
         });
     }
     Ok(out)
@@ -325,6 +450,47 @@ pub fn run(quick: bool) -> Result<Report> {
             ),
         );
     }
+    // Serving gateway saturation: offered load × deadline window over
+    // the request front door — admission control visibly shedding at
+    // heavy load while accepted requests keep their deadlines.
+    let gw_rows = measure_gateway_saturation(ParallelMode::Inline, quick)?;
+    let gw_table: Vec<Vec<String>> = gw_rows
+        .iter()
+        .map(|g| {
+            vec![
+                format!("{}", g.window_ticks),
+                format!("{}", g.mean_gap),
+                format!("{}", g.offered),
+                format!("{}", g.accepted),
+                format!("{:.0}%", 100.0 * g.reject_rate()),
+                format!("{}", g.shed_queued),
+                format!("{}/{}", g.deadline_met, g.completed),
+                format!("{}", g.p50_ticks),
+                format!("{}", g.p99_ticks),
+                format!("{:.0}", g.host_steps_per_s),
+            ]
+        })
+        .collect();
+    report.table(
+        "Serving gateway saturation (inline; water on 2 shards, queue bound 16)",
+        &[
+            "window",
+            "mean gap",
+            "offered",
+            "accepted",
+            "reject%",
+            "shed",
+            "met/done",
+            "p50",
+            "p99",
+            "steps/s",
+        ],
+        &gw_table,
+    );
+    report.attach(
+        "gateway_saturation",
+        Value::Arr(gw_rows.iter().map(|g| g.json_row("inline")).collect()),
+    );
     report.attach(
         "projections",
         Value::Arr(
@@ -390,6 +556,23 @@ mod tests {
             assert!(r.host_steps_per_s > 0.0);
             assert!(r.elapsed_s > 0.0);
             assert!(r.speedup_vs_tick > 0.0);
+        }
+    }
+
+    #[test]
+    fn gateway_saturation_sweep_is_sane() {
+        let rows = measure_gateway_saturation(ParallelMode::Inline, true).unwrap();
+        assert_eq!(rows.len(), 2);
+        // The heavy point (mean gap 1) must drive the door into
+        // admission control; the light point should serve nearly all.
+        assert!(rows[0].rejected + rows[0].shed_queued > 0, "heavy point never shed");
+        for g in &rows {
+            assert!(g.completed > 0, "w={} gap={} completed nothing", g.window_ticks, g.mean_gap);
+            assert_eq!(g.offered, g.accepted + g.rejected, "door accounting identity");
+            assert!(g.p99_ticks >= g.p50_ticks);
+            assert!(g.queue_high_water <= 16, "queue bound violated");
+            assert!(g.molecule_steps > 0);
+            assert!((0.0..=1.0).contains(&g.reject_rate()));
         }
     }
 

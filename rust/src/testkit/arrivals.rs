@@ -1,0 +1,170 @@
+//! Deterministic arrival-process generator for gateway load tests and
+//! benches.
+//!
+//! Serving-tier tests need an open-loop request stream (bursty
+//! inter-arrival times, mixed species, scattered deadlines) that replays
+//! **bit-identically** on every platform and backend — so results,
+//! accept/reject decisions, and SLO ledgers can be compared exactly
+//! between runs. The generator therefore uses only the crate's own
+//! integer [`Pcg`] stream: inter-arrival gaps are geometric (the
+//! discrete analogue of Poisson exponential gaps) sampled by integer
+//! rejection — `P(gap = g) ∝ (1 - 1/mean_gap)^g`, truncated at
+//! `max_gap` — with no floating-point `ln` anywhere, so there is no
+//! libm to disagree across targets. The same plan drives both the test
+//! suite and `benches/farm_throughput.rs`.
+
+use crate::util::rng::Pcg;
+
+/// One request in an arrival plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    /// Virtual-clock tick the request arrives at (non-decreasing along
+    /// the plan).
+    pub at_tick: u64,
+    /// Species index to submit against.
+    pub species: usize,
+    /// MD ticks of simulation requested.
+    pub ticks: u64,
+    /// Absolute virtual-clock deadline (`at_tick + ticks + slack`).
+    pub deadline: u64,
+}
+
+/// Parameters of a deterministic arrival plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrivalSpec {
+    /// RNG seed; same seed + same spec ⇒ bit-identical plan.
+    pub seed: u64,
+    /// Number of arrivals to generate.
+    pub n: usize,
+    /// Mean inter-arrival gap in ticks (geometric distribution; `0` is
+    /// treated as `1`). Smaller = heavier offered load.
+    pub mean_gap: u32,
+    /// Hard cap on a single inter-arrival gap (keeps plans bounded).
+    pub max_gap: u64,
+    /// Relative weights of each species in the mix (length = species
+    /// count; zero-weight species never arrive).
+    pub species_weights: Vec<u32>,
+    /// Inclusive range of requested MD ticks per arrival.
+    pub ticks_range: (u64, u64),
+    /// Inclusive range of deadline slack beyond the requested ticks.
+    pub slack_range: (u64, u64),
+}
+
+impl ArrivalSpec {
+    /// A reasonable default mix: uniform weights over `n_species`,
+    /// short requests, moderate slack.
+    pub fn new(seed: u64, n: usize, n_species: usize) -> ArrivalSpec {
+        ArrivalSpec {
+            seed,
+            n,
+            mean_gap: 4,
+            max_gap: 64,
+            species_weights: vec![1; n_species.max(1)],
+            ticks_range: (4, 24),
+            slack_range: (8, 40),
+        }
+    }
+}
+
+/// Generate the arrival plan for `spec`: a vector of [`Arrival`]s with
+/// non-decreasing `at_tick`, pure in `spec` (same spec ⇒ same plan, on
+/// every platform).
+pub fn plan(spec: &ArrivalSpec) -> Vec<Arrival> {
+    assert!(
+        spec.species_weights.iter().any(|&w| w > 0),
+        "arrival spec needs at least one species with nonzero weight"
+    );
+    assert!(spec.ticks_range.0 <= spec.ticks_range.1, "empty ticks range");
+    assert!(spec.slack_range.0 <= spec.slack_range.1, "empty slack range");
+    let total_w: u32 = spec.species_weights.iter().sum();
+    let mean = spec.mean_gap.max(1);
+    let mut rng = Pcg::with_stream(spec.seed, 0xa5517a15);
+    let mut out = Vec::with_capacity(spec.n);
+    let mut t = 0u64;
+    for _ in 0..spec.n {
+        // Geometric gap with success probability 1/mean: count failures
+        // of a `below(mean) == 0` trial, truncated at max_gap. Integer
+        // only — replays bit-identically everywhere.
+        let mut gap = 0u64;
+        while gap < spec.max_gap && rng.below(mean) != 0 {
+            gap += 1;
+        }
+        t += gap;
+        // Weighted species pick.
+        let mut pick = rng.below(total_w);
+        let mut species = 0usize;
+        for (si, &w) in spec.species_weights.iter().enumerate() {
+            if pick < w {
+                species = si;
+                break;
+            }
+            pick -= w;
+        }
+        let (tl, th) = spec.ticks_range;
+        let ticks = tl + u64::from(rng.below((th - tl + 1).min(u64::from(u32::MAX)) as u32));
+        let (sl, sh) = spec.slack_range;
+        let slack = sl + u64::from(rng.below((sh - sl + 1).min(u64::from(u32::MAX)) as u32));
+        out.push(Arrival { at_tick: t, species, ticks, deadline: t + ticks + slack });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic() {
+        let spec = ArrivalSpec::new(42, 64, 3);
+        let a = plan(&spec);
+        let b = plan(&spec);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+    }
+
+    #[test]
+    fn arrivals_are_ordered_and_in_range() {
+        let spec = ArrivalSpec {
+            seed: 7,
+            n: 200,
+            mean_gap: 3,
+            max_gap: 16,
+            species_weights: vec![2, 1],
+            ticks_range: (5, 9),
+            slack_range: (10, 20),
+        };
+        let p = plan(&spec);
+        let mut prev = 0u64;
+        for a in &p {
+            assert!(a.at_tick >= prev, "at_tick must be non-decreasing");
+            prev = a.at_tick;
+            assert!(a.species < 2);
+            assert!((5..=9).contains(&a.ticks));
+            let slack = a.deadline - a.at_tick - a.ticks;
+            assert!((10..=20).contains(&slack));
+        }
+    }
+
+    #[test]
+    fn all_weighted_species_appear() {
+        let spec = ArrivalSpec::new(99, 300, 4);
+        let p = plan(&spec);
+        for s in 0..4 {
+            assert!(p.iter().any(|a| a.species == s), "species {s} never arrived");
+        }
+    }
+
+    #[test]
+    fn zero_weight_species_never_arrive() {
+        let mut spec = ArrivalSpec::new(11, 200, 3);
+        spec.species_weights = vec![1, 0, 1];
+        assert!(plan(&spec).iter().all(|a| a.species != 1));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = plan(&ArrivalSpec::new(1, 64, 2));
+        let b = plan(&ArrivalSpec::new(2, 64, 2));
+        assert_ne!(a, b);
+    }
+}

@@ -9,6 +9,7 @@
 
 use crate::util::rng::Pcg;
 
+pub mod arrivals;
 #[cfg(any(test, feature = "faults"))]
 pub mod faults;
 

@@ -8,10 +8,12 @@
 //! Requires the library's fault-injection hooks:
 //! `cargo test --features faults --test fault_tolerance`.
 
-use nvnmd::coordinator::farm::{random_water_systems, WaterFarm};
+use nvnmd::coordinator::farm::{random_molecule_systems, random_water_systems, WaterFarm};
+use nvnmd::coordinator::gateway::{Gateway, GatewayConfig, GatewaySpecies, Outcome, Submission};
 use nvnmd::coordinator::{FarmConfig, ParallelMode, QuarantineReason};
 use nvnmd::md::System;
 use nvnmd::nn::{Activation, Mlp};
+use nvnmd::potentials::ff;
 use nvnmd::testkit::faults::FaultPlan;
 use nvnmd::util::rng::Pcg;
 
@@ -219,4 +221,181 @@ fn seeded_chaos_plans_reproduce_bit_identical_degraded_runs() {
     assert_eq!(la.molecule_steps, ld.molecule_steps);
     assert_eq!(la.quarantined, lc.quarantined);
     assert_eq!(la.quarantined, ld.quarantined);
+}
+
+fn toy_generic_model(n_nb: usize) -> Mlp {
+    let mut rng = Pcg::new(55);
+    let mut m = Mlp::init_random("toy-generic", &[4 * n_nb, 8, 8, 3], Activation::Phi, &mut rng);
+    for l in &mut m.layers {
+        for w in &mut l.w {
+            *w *= 0.2;
+        }
+    }
+    m
+}
+
+/// Two-species gateway: water on shards 0–1, ethanol on shards 2–3.
+fn two_species_gateway(cfg: GatewayConfig) -> Gateway {
+    let eth = ff::ethanol();
+    Gateway::new(
+        vec![
+            GatewaySpecies::water(&toy_model(), 3, 2, 0.25).unwrap(),
+            GatewaySpecies::generic("ethanol", &toy_generic_model(4), &eth.coords, 4, 3, 2, 0.25)
+                .unwrap(),
+        ],
+        cfg,
+    )
+    .unwrap()
+}
+
+#[test]
+fn gateway_degrades_one_species_while_the_other_keeps_meeting_deadlines() {
+    // ISSUE 10 acceptance: shard 1 (water's second shard) panics at
+    // tick 6 — mid-window under a 4-tick window. The requests resident
+    // there fail as ShardLost; water's other shard and the whole
+    // ethanol species keep serving and meeting deadlines. Decisions,
+    // per-request results (positions included), and SLO ledgers must be
+    // bit-identical inline vs threaded.
+    let water_sys = random_water_systems(4, 140.0, 0x6A7E);
+    let eth = ff::ethanol();
+    let eth_sys = random_molecule_systems(&eth.coords, &eth.masses(), 4, 100.0, 0x47E);
+    let plan = FaultPlan::new().panic_shard(1, 6);
+    let run = |mode: ParallelMode| {
+        let cfg = GatewayConfig {
+            window_ticks: 4,
+            mode,
+            faults: Some(plan),
+            ..GatewayConfig::default()
+        };
+        let mut gw = two_species_gateway(cfg);
+        // Water ids 0..=3 (alternating shards 0/1), ethanol ids 4..=7
+        // (alternating shards 2/3) — placement is least-resident with
+        // lowest-index tie-break, so ids 1 and 3 land on shard 1.
+        for sys in &water_sys {
+            assert!(matches!(gw.submit(0, sys, 8, 40).unwrap(), Submission::Accepted(_)));
+        }
+        for sys in &eth_sys {
+            assert!(matches!(gw.submit(1, sys, 8, 40).unwrap(), Submission::Accepted(_)));
+        }
+        gw.run_windows(3).unwrap();
+        let results = gw.take_results();
+        let (slo, ledger) = gw.finish().unwrap();
+        (results, slo, ledger)
+    };
+    let (ri, li, gi) = run(ParallelMode::Inline);
+    let (rt, lt, gt) = run(ParallelMode::Threaded);
+    assert_eq!(ri, rt, "per-request results diverged across backends under faults");
+    assert_eq!(li, lt, "SLO ledgers diverged across backends under faults");
+    assert_eq!(gi.molecule_steps, gt.molecule_steps);
+    assert_eq!(gi.panics_recovered, 1);
+
+    let water = &li.species[0];
+    let ethanol = &li.species[1];
+    assert_eq!(water.failed_shard_lost, 2, "shard 1 held two water requests");
+    assert_eq!(water.completed, 2, "shard 0's water requests still finish");
+    assert_eq!(water.deadline_missed, 0);
+    assert_eq!(ethanol.completed, 4, "ethanol is untouched by water's loss");
+    assert_eq!(ethanol.deadline_met, 4);
+    assert_eq!(ethanol.failed_shard_lost + ethanol.failed_quarantined, 0);
+    // The failed requests carry the loss tick; no positions come back
+    // off a dead shard.
+    let lost: Vec<_> = ri
+        .iter()
+        .filter(|r| matches!(r.outcome, Outcome::ShardLost { tick: 6 }))
+        .collect();
+    assert_eq!(lost.len(), 2);
+    for r in lost {
+        assert_eq!(r.ticks_run, 6, "ran until the shard froze at tick 6");
+        assert!(!r.deadline_met);
+    }
+}
+
+#[test]
+fn gateway_quarantine_settles_the_request_and_ledgers_match_across_backends() {
+    // Molecule id 1 (second admitted request — shard 1 by placement) is
+    // pinned onto the 26-bit rail at tick 2: the divergence monitor
+    // quarantines it that tick, the gateway retires it with its frozen
+    // state, and the neighbor request is bit-identical to a fault-free
+    // run on both backends.
+    let systems = random_water_systems(2, 130.0, 0x0A12);
+    let plan = FaultPlan::new().saturate_molecule(1, 2);
+    let run = |mode: ParallelMode| {
+        let cfg = GatewayConfig {
+            window_ticks: 4,
+            mode,
+            faults: Some(plan),
+            ..GatewayConfig::default()
+        };
+        let mut gw = Gateway::new(
+            vec![GatewaySpecies::water(&toy_model(), 3, 2, 0.25).unwrap()],
+            cfg,
+        )
+        .unwrap();
+        for sys in &systems {
+            assert!(matches!(gw.submit(0, sys, 8, 40).unwrap(), Submission::Accepted(_)));
+        }
+        gw.run_windows(2).unwrap();
+        let results = gw.take_results();
+        let (slo, _) = gw.finish().unwrap();
+        (results, slo)
+    };
+    let (ri, li) = run(ParallelMode::Inline);
+    let (rt, lt) = run(ParallelMode::Threaded);
+    assert_eq!(ri, rt);
+    assert_eq!(li, lt);
+    assert_eq!(li.species[0].failed_quarantined, 1);
+    assert_eq!(li.species[0].completed, 1);
+    let q = ri.iter().find(|r| r.id.0 == 1).unwrap();
+    let Outcome::Quarantined { reason, tick, positions } = &q.outcome else {
+        panic!("expected quarantine, got {:?}", q.outcome)
+    };
+    assert_eq!(*reason, QuarantineReason::SaturationEvents);
+    assert_eq!(*tick, 2);
+    assert!(!positions.is_empty(), "frozen state comes back with the verdict");
+    assert_eq!(q.ticks_run, 3, "integrated ticks 0..=2 before the verdict");
+}
+
+#[test]
+fn telemetry_undercounts_on_lost_replies_but_finish_books_are_complete() {
+    // The documented source-of-truth relation (ISSUE 10 satellite):
+    // `Gateway::telemetry()` delegates to the farm's running view,
+    // which misses the steps of an epoch whose reply was dropped — the
+    // epoch executed, but nobody reported it. `finish()` reads shard
+    // state directly (workers survive reply drops), so its FarmLedger
+    // counts every step. Telemetry is for dashboards; bill from the
+    // ledger.
+    let systems = random_water_systems(2, 140.0, 0x105F);
+    let plan = FaultPlan::new().drop_reply(1, 5);
+    let cfg = GatewayConfig {
+        window_ticks: 4,
+        mode: ParallelMode::Threaded,
+        faults: Some(plan),
+        ..GatewayConfig::default()
+    };
+    let mut gw = Gateway::new(
+        vec![GatewaySpecies::water(&toy_model(), 3, 2, 0.25).unwrap()],
+        cfg,
+    )
+    .unwrap();
+    for sys in &systems {
+        assert!(matches!(gw.submit(0, sys, 8, 40).unwrap(), Submission::Accepted(_)));
+    }
+    gw.run_windows(2).unwrap();
+    let telemetry = gw.telemetry();
+    let results = gw.take_results();
+    let (slo, ledger) = gw.finish().unwrap();
+    assert_eq!(ledger.replies_lost, 1);
+    // Shard 0's request ran 8 ticks and completed; shard 1's executed
+    // ticks 4 and 5 of its second window before the reply vanished —
+    // 6 steps on the frozen shard. The running view saw only the 4
+    // reported first-window steps of that molecule.
+    assert_eq!(ledger.molecule_steps, 8 + 6, "finish() reads shards directly");
+    assert_eq!(telemetry.molecule_steps, 8 + 4, "the dropped epoch's steps go unreported");
+    assert!(telemetry.molecule_steps < ledger.molecule_steps);
+    // The SLO ledger settles off supervisor records, not the lost
+    // reply: one completion, one shard-lost failure.
+    assert_eq!(slo.species[0].completed, 1);
+    assert_eq!(slo.species[0].failed_shard_lost, 1);
+    let lost = results.iter().find(|r| r.id.0 == 1).unwrap();
+    assert!(matches!(lost.outcome, Outcome::ShardLost { tick: 5 }));
 }
